@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks (interpret mode on CPU: correctness-path timing;
+the CSV also reports achieved compression ratios / arithmetic sanity)."""
+import jax
+import jax.numpy as jnp
+
+from ._util import emit, timed
+
+
+def main():
+    from repro.kernels import ops, ref
+
+    key = jax.random.key(0)
+    B, S, H, Dh = 2, 512, 4, 128
+    q = jax.random.normal(key, (B, S, H, Dh), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (B, S, H, Dh), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (B, S, H, Dh), jnp.bfloat16)
+
+    out, us = timed(lambda: jax.block_until_ready(ops.flash_attention(
+        q, k, v, mode="causal", force_interpret=True)))
+    flops = 4 * B * H * S * S * Dh / 2
+    emit("flash_attention_512_interp", us, f"{flops/ (us/1e6) / 1e9:.2f} GFLOP/s-equiv")
+
+    a = jax.nn.sigmoid(jax.random.normal(key, (4, 1024, 256)))
+    b = jax.random.normal(jax.random.key(3), (4, 1024, 256))
+    h0 = jnp.zeros((4, 256))
+    out, us = timed(lambda: jax.block_until_ready(
+        ops.rglru_scan(a, b, h0, force_interpret=True)))
+    emit("rglru_scan_4x1024x256_interp", us,
+         f"{a.size * 4 / (us/1e6) / 1e9:.3f} GB/s-equiv")
+
+    qm = jax.random.normal(key, (2, 2, 512, 128)) * 128 ** -0.5
+    km = jax.random.normal(jax.random.key(4), (2, 2, 512, 128)) * 128 ** -0.5
+    vm = jax.random.normal(jax.random.key(5), (2, 2, 512, 128))
+    li = jax.random.normal(jax.random.key(6), (2, 2, 512))
+    lf = jax.nn.log_sigmoid(jax.random.normal(jax.random.key(7), (2, 2, 512)) + 2)
+    out, us = timed(lambda: jax.block_until_ready(
+        ops.mlstm_scan(qm, km, vm, li, lf, chunk=128, force_interpret=True)))
+    emit("mlstm_scan_2x2x512_interp", us, "chunkwise=128")
+
+    x = jax.random.normal(key, (1024, 1024))
+    (qq, ss, pad), us = timed(lambda: ops.quantize_array(
+        x, force_interpret=True))
+    ratio = (qq.nbytes + ss.nbytes) / x.nbytes
+    emit("quant_blockwise_1Melem_interp", us, f"payload_ratio={ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Roofline analysis over the dry-run results (deliverable g).
+
+Reads benchmarks/results/dryrun/*.json (written by ``repro.launch.dryrun``)
+and derives, per (arch x shape x mesh):
+
+  compute_term    = walked_flops_per_device / peak_bf16_flops        [s]
+  memory_term     = walked_hbm_bytes_per_device / hbm_bandwidth      [s]
+  collective_term = walked_collective_bytes_per_device / link_bw     [s]
+
+plus the dominant term, MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE; 2*N*D
+for forward-only kinds), the useful-FLOP ratio MODEL_FLOPS/HLO_FLOPs, and a
+one-line "what would move the dominant term" note.  Emits a CSV and a
+markdown table for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from ._util import emit, timed, RESULTS
+
+DRYRUN = RESULTS / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops_global(rec: dict) -> float:
+    """MODEL_FLOPS per the assignment: 6*N*D (train) / 2*N*D (fwd-only)."""
+    n_active = rec["active_param_count"]
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * rec["global_batch"]
+
+
+def bottleneck_note(rec: dict, dom: str) -> str:
+    if dom == "compute":
+        if rec["arch"].startswith(("dbrx", "llama4")) and \
+                rec.get("moe_impl_dense", True):
+            return "dense-MoE computes all experts: capacity/a2a EP cuts " \
+                   "compute ~E/k"
+        return "remat recompute + head padding: selective remat / exact " \
+               "head sharding"
+    if dom == "memory":
+        return "recurrence state streaming: fuse scans (Pallas kernel) / " \
+               "larger time blocks in VMEM"
+    return "FSDP gathers dominate: overlap with compute, or switch the " \
+           "axis to pure DP + ZeRO-1 reduce-scatter"
+
+
+def load_records():
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if "walked" not in r:
+            continue
+        recs.append(r)
+    return recs
+
+
+def analyze(rec: dict) -> dict:
+    w = rec["walked"]
+    chips = rec["n_chips"]
+    compute = w["flops_per_device"] / PEAK_FLOPS
+    memory = w["hbm_bytes_per_device"] / HBM_BW
+    coll = w["coll_bytes_total"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_global(rec) / chips
+    useful = mf / w["flops_per_device"] if w["flops_per_device"] else 0.0
+    bound = max(terms.values())
+    mfu_bound = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "dominant": dom,
+        "model_flops_per_dev": mf,
+        "useful_flop_ratio": useful,
+        "roofline_fraction": mfu_bound,
+        "fits_hbm": rec["fits_hbm"],
+        "peak_gib": rec["memory"]["peak_bytes_est"] / 2**30,
+        "note": bottleneck_note(rec, dom),
+    }
+
+
+def run():
+    recs = load_records()
+    rows = [analyze(r) for r in recs]
+    out = RESULTS / "roofline.csv"
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s",
+            "collective_s", "dominant", "model_flops_per_dev",
+            "useful_flop_ratio", "roofline_fraction", "fits_hbm",
+            "peak_gib", "note"]
+    with open(out, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(
+                f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+                for c in cols) + "\n")
+
+    md = RESULTS / "roofline.md"
+    with open(md, "w") as f:
+        f.write("| arch | shape | mesh | compute s | memory s | coll s | "
+                "dominant | useful | roofline frac | fits |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            f.write(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"{r['compute_s']:.3f} | {r['memory_s']:.3f} | "
+                    f"{r['collective_s']:.3f} | {r['dominant']} | "
+                    f"{r['useful_flop_ratio']:.2f} | "
+                    f"{r['roofline_fraction']:.2f} | "
+                    f"{'Y' if r['fits_hbm'] else 'N'} |\n")
+    return out, rows
+
+
+def main():
+    (out, rows), us = timed(run, repeat=1)
+    n = len(rows)
+    single = [r for r in rows if r["mesh"] == "pod16x16"]
+    if single:
+        worst = min(single, key=lambda r: r["roofline_fraction"])
+        emit("roofline", us,
+             f"{n} cells; worst single-pod fraction: {worst['arch']}x"
+             f"{worst['shape']}={worst['roofline_fraction']:.3f} "
+             f"-> {out.name}")
+    else:
+        emit("roofline", us, f"{n} cells (dry-run records pending)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Benchmark driver: one entry per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
+                   table_baselines, table_simulation, table_arch_periods,
+                   bench_kernels, roofline)
+    modules = [fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
+               table_baselines, table_simulation, table_arch_periods,
+               bench_kernels, roofline]
+    print("name,us_per_call,derived")
+    failures = 0
+    for m in modules:
+        try:
+            m.main()
+        except Exception as e:      # noqa: BLE001 — report all benches
+            failures += 1
+            print(f"{m.__name__},NaN,FAILED: {e!r}", file=sys.stderr)
+            traceback.print_exc(limit=3)
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

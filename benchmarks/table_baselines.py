@@ -1,0 +1,53 @@
+"""Baseline comparison (paper SS3.2 side note): AlgoT / AlgoE vs Young, Daly
+and the Meneses-Sarood-Kale energy model, plus the printed-coefficient
+erratum demonstration."""
+from ._util import emit, timed, RESULTS
+
+
+def run():
+    from repro.core import (fig12_checkpoint, EXASCALE_POWER_RHO55,
+                            EXASCALE_POWER_RHO7, t_opt_time, t_opt_energy,
+                            t_young, t_daly, t_msk_energy, time_final,
+                            energy_final, energy_quadratic_coefficients,
+                            paper_printed_coefficients)
+    from repro.core.optimal import derived_coefficients
+
+    rows = []
+    for mu in (300.0, 120.0, 60.0):
+        ck = fig12_checkpoint(mu)
+        pw = EXASCALE_POWER_RHO55
+        periods = {
+            "algo_t": t_opt_time(ck),
+            "algo_e": t_opt_energy(ck, pw),
+            "young": t_young(ck),
+            "daly": t_daly(ck),
+            "msk_energy": t_msk_energy(ck, pw),
+        }
+        for name, T in periods.items():
+            rows.append((mu, name, T, float(time_final(T, ck)),
+                         float(energy_final(T, ck, pw))))
+    out = RESULTS / "table_baselines.csv"
+    with open(out, "w") as f:
+        f.write("mu_min,strategy,period_min,T_final_norm,E_final_norm\n")
+        for r in rows:
+            f.write(f"{r[0]},{r[1]},{r[2]:.4f},{r[3]:.6f},{r[4]:.6f}\n")
+
+    # erratum: paper coefficients wrong when alpha != 1
+    ck = fig12_checkpoint(300.0)
+    ours = derived_coefficients(ck, EXASCALE_POWER_RHO7)
+    paper = paper_printed_coefficients(ck, EXASCALE_POWER_RHO7)
+    exact = energy_quadratic_coefficients(ck, EXASCALE_POWER_RHO7)
+    err_paper = abs(paper[0] - exact[0]) / abs(exact[0])
+    err_ours = abs(ours[0] - exact[0]) / abs(exact[0])
+    return out, (err_paper, err_ours)
+
+
+def main():
+    (out, (ep, eo)), us = timed(run, repeat=1)
+    emit("table_baselines", us,
+         f"erratum@rho7: paper_c2_err={ep:.2%} derived_c2_err={eo:.2e} "
+         f"-> {out.name}")
+
+
+if __name__ == "__main__":
+    main()

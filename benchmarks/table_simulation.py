@@ -1,0 +1,37 @@
+"""Monte-Carlo validation of the closed forms: simulate the checkpointed
+execution at the paper's scenario and compare E[T], E[E] to the model."""
+from ._util import emit, timed, RESULTS
+
+
+def run():
+    from repro.core import (fig12_checkpoint, EXASCALE_POWER_RHO55,
+                            t_opt_time, t_opt_energy, simulate, time_final,
+                            energy_final)
+    ck = fig12_checkpoint(300.0)
+    pw = EXASCALE_POWER_RHO55
+    rows = []
+    for name, T in (("algo_t", t_opt_time(ck)),
+                    ("algo_e", t_opt_energy(ck, pw)),
+                    ("half_opt", 0.5 * t_opt_time(ck)),
+                    ("twice_opt", 2.0 * t_opt_time(ck))):
+        sim = simulate(T, ck, pw, T_base=4000.0, n_trials=400, seed=0)
+        rows.append((name, T,
+                     sim["T_final"], float(time_final(T, ck, 4000.0)),
+                     sim["E_final"], float(energy_final(T, ck, pw, 4000.0))))
+    out = RESULTS / "table_simulation.csv"
+    with open(out, "w") as f:
+        f.write("strategy,period,T_sim,T_model,E_sim,E_model\n")
+        for r in rows:
+            f.write(f"{r[0]},{r[1]:.3f},{r[2]:.2f},{r[3]:.2f},"
+                    f"{r[4]:.1f},{r[5]:.1f}\n")
+    errs = [abs(r[2] - r[3]) / r[3] for r in rows]
+    return out, max(errs)
+
+
+def main():
+    (out, err), us = timed(run, repeat=1)
+    emit("table_simulation", us, f"max |T_sim-T_model|/T = {err:.2%} -> {out.name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Reproduce the paper's experimental section (Figures 1-3) from the library
+API and check its headline claims.
+
+    PYTHONPATH=src python examples/energy_study.py
+"""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.core import (sweep_rho, sweep_nodes, fig12_checkpoint, evaluate,
+                        EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7)
+
+
+def main():
+    print("== Figure 1/2 operating point (mu=300 min, rho=5.5) ==")
+    pt = evaluate(fig12_checkpoint(300.0), EXASCALE_POWER_RHO55)
+    print(f"energy gain {(pt.energy_ratio-1)*100:.1f}% "
+          f"(paper: 'more than 20%'), "
+          f"time loss {(pt.time_ratio-1)*100:.1f}% (paper: '~10%')")
+
+    print("\n== Figure 1: gain vs rho at mu=300 ==")
+    for p in sweep_rho([1, 2, 4, 5.5, 7, 10], 300.0):
+        print(f"  rho={p.power.rho:5.2f}  e_ratio={p.energy_ratio:.3f}  "
+              f"t_ratio={p.time_ratio:.3f}")
+
+    print("\n== Figure 3: scalability (rho=7) ==")
+    ns = [1e5, 1e6, 3e6, 1e7, 1e8]
+    pts = sweep_nodes(ns, EXASCALE_POWER_RHO7)
+    for n, p in zip(ns, pts):
+        print(f"  N={n:9.0e} mu={p.ckpt.mu:8.2f} min  "
+              f"e_ratio={p.energy_ratio:.3f}  t_ratio={p.time_ratio:.3f}")
+    peak = max(pts, key=lambda p: p.energy_ratio)
+    print(f"peak gain {(peak.energy_ratio-1)*100:.0f}% at "
+          f"{(peak.time_ratio-1)*100:.0f}% overhead "
+          f"(paper: 'up to 30% for ~12%'); ratios -> "
+          f"{pts[-1].energy_ratio:.3f}/{pts[-1].time_ratio:.3f} at 1e8 nodes")
+
+
+if __name__ == "__main__":
+    main()

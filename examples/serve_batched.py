@@ -1,0 +1,15 @@
+"""Batched serving example: prefill a batch of prompts and greedy-decode,
+with the int8 KV cache and wave-prefill options.
+
+    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --kv-cache int8 --waves 2
+"""
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve
+
+
+if __name__ == "__main__":
+    serve.main()

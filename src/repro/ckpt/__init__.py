@@ -1,0 +1,2 @@
+from .store import ShardedStore, StoreConfig
+from .manager import CheckpointManager, ManagerConfig, BuddyReplica

@@ -1,0 +1,142 @@
+"""Checkpoint manager: non-blocking (paper's omega) policy-driven checkpoints.
+
+Pipeline per checkpoint:
+  1. **snapshot** — device->host copy of the training state (this is the only
+     part that stalls the accelerator; with double buffering it overlaps the
+     next step's compute, giving omega close to 1 for the write phase);
+  2. **write** — a background thread serializes the snapshot through the
+     sharded store (manifest/checksum/atomic commit);
+  3. **buddy** — optionally push the shard to an in-memory buddy replica
+     (paper refs [12,14]: pair nodes so any single loss is recoverable
+     without touching slow storage).
+
+The manager feeds *measurements* back into the CheckpointPolicy: C (write
+duration), omega (overlap efficiency), and exposes maybe_checkpoint(step) as
+the single integration point for the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from ..core.policy import CheckpointPolicy
+from .store import ShardedStore
+
+
+class BuddyReplica:
+    """In-memory replica of a partner's latest shard (simulated pairing)."""
+
+    def __init__(self):
+        self._data: Optional[tuple] = None     # (step, leaves)
+        self._lock = threading.Lock()
+
+    def push(self, step: int, tree: Any) -> None:
+        leaves, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(x) for x in leaves]
+        with self._lock:
+            self._data = (step, host, treedef)
+
+    def restore(self, like_tree: Any):
+        with self._lock:
+            if self._data is None:
+                return None, None
+            step, host, treedef = self._data
+        likes = jax.tree.leaves(like_tree)
+        out = []
+        for arr, like in zip(host, likes):
+            a = jax.numpy.asarray(arr)
+            if hasattr(like, "sharding") and like.sharding is not None:
+                a = jax.device_put(a, like.sharding)
+            out.append(a)
+        return jax.tree.unflatten(treedef, out), step
+
+
+@dataclasses.dataclass
+class ManagerConfig:
+    async_write: bool = True
+    use_buddy: bool = True
+
+
+class CheckpointManager:
+    def __init__(self, store: ShardedStore, policy: CheckpointPolicy,
+                 config: ManagerConfig = ManagerConfig()):
+        self.store = store
+        self.policy = policy
+        self.cfg = config
+        self.buddy = BuddyReplica() if config.use_buddy else None
+        self._writer: Optional[threading.Thread] = None
+        self._last_ckpt_step: Optional[int] = None
+        self._pending_meta: dict = {}
+        self._lock = threading.Lock()
+        self.stats: list = []
+
+    # ------------------------------------------------------------------ write
+    def _write(self, step: int, host_tree, t_snapshot: float):
+        t0 = time.perf_counter()
+        meta = self.store.save(step, host_tree)
+        if self.buddy is not None:
+            self.buddy.push(step, host_tree)
+        t_write = time.perf_counter() - t0
+        C = t_snapshot + t_write
+        with self._lock:
+            self.stats.append({"step": step, "snapshot_s": t_snapshot,
+                               "write_s": t_write, "C_s": C,
+                               "bytes": meta["bytes"]})
+        # omega: only the snapshot stalls compute; the write overlaps.
+        omega = t_write / C if C > 0 else 0.0
+        self.policy.observe_checkpoint(duration_s=C,
+                                       slowdown_work_fraction=omega)
+
+    def checkpoint(self, step: int, state: Any, *, block: bool = False):
+        """Snapshot now; write in the background (non-blocking checkpoints)."""
+        self.wait()                      # one in-flight write at a time
+        t0 = time.perf_counter()
+        host = jax.tree.map(lambda x: np.asarray(x), state)   # device->host
+        t_snapshot = time.perf_counter() - t0
+        self._last_ckpt_step = step
+        if self.cfg.async_write and not block:
+            self._writer = threading.Thread(
+                target=self._write, args=(step, host, t_snapshot),
+                daemon=True)
+            self._writer.start()
+        else:
+            self._write(step, host, t_snapshot)
+
+    def maybe_checkpoint(self, step: int, state: Any) -> bool:
+        """Policy-driven: checkpoint when period_steps have elapsed."""
+        period = self.policy.period_steps()
+        last = self._last_ckpt_step
+        if last is not None and step - last < period:
+            return False
+        self.checkpoint(step, state)
+        return True
+
+    def wait(self):
+        if self._writer is not None and self._writer.is_alive():
+            self._writer.join()
+        self._writer = None
+
+    # ---------------------------------------------------------------- restore
+    def restore(self, like_tree: Any):
+        """Newest valid generation; falls back to the buddy replica."""
+        self.wait()
+        tree, step = self.store.restore(like_tree)
+        if tree is not None:
+            return tree, step, "store"
+        if self.buddy is not None:
+            tree, step = self.buddy.restore(like_tree)
+            if tree is not None:
+                return tree, step, "buddy"
+        return None, None, "none"
+
+    @property
+    def measured_C_s(self) -> Optional[float]:
+        with self._lock:
+            if not self.stats:
+                return None
+            return float(np.mean([s["C_s"] for s in self.stats[-5:]]))

@@ -1,0 +1,16 @@
+"""Core: the paper's analytical checkpoint time/energy model."""
+from .params import (CheckpointParams, PowerParams, EXASCALE_POWER_RHO55,
+                     EXASCALE_POWER_RHO7, MU_IND_JAGUAR_MIN,
+                     fig12_checkpoint, fig3_checkpoint)
+from .model import (time_final, time_fault_free, time_lost_per_failure,
+                    phase_times, energy_final, energy_breakdown,
+                    K_factor, K_dE_dT)
+from .optimal import (t_opt_time, t_opt_time_numeric, t_opt_energy,
+                      t_opt_energy_numeric, t_young, t_daly, t_msk_energy,
+                      energy_quadratic_coefficients,
+                      paper_printed_coefficients, period_for, STRATEGIES,
+                      golden_section)
+from .tradeoff import (TradeoffPoint, evaluate, sweep_rho, sweep_mu_rho,
+                       sweep_nodes)
+from .simulator import simulate, simulate_once, SimResult
+from .policy import CheckpointPolicy, PolicyConfig

@@ -1,0 +1,213 @@
+"""Exact expectation formulas of the paper (§3.1 time, §3.2 energy).
+
+The analytical core is evaluated in numpy float64 — these are scalar closed
+forms where precision matters more than jit.  ``K_dE_dT_autodiff`` provides an
+independent JAX-autodiff cross-check (used by tests) under the local
+``jax.experimental.enable_x64`` context so global JAX dtype state is untouched
+(the neural-net stack wants f32/bf16 defaults).
+
+All functions accept scalars or broadcastable numpy arrays for ``T``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from .params import CheckpointParams, PowerParams
+
+
+# --------------------------------------------------------------------------
+# §3.1 — execution time
+# --------------------------------------------------------------------------
+
+def time_fault_free(T, ckpt: CheckpointParams, T_base: float = 1.0):
+    """T_ff = T_base * T / (T - (1-omega) C)."""
+    T = np.asarray(T, dtype=np.float64)
+    return T_base * T / (T - ckpt.a)
+
+
+def time_lost_per_failure(T, ckpt: CheckpointParams):
+    """Expected time lost per failure = D + R + omega*C + T/2 (paper §3.1)."""
+    T = np.asarray(T, dtype=np.float64)
+    return ckpt.D + ckpt.R + ckpt.omega * ckpt.C + T / 2.0
+
+
+def time_final(T, ckpt: CheckpointParams, T_base: float = 1.0):
+    """Expected total execution time (paper §3.1):
+
+        T_final = T_base * T / ((T - a)(b - T/(2 mu)))
+
+    Valid on a < T < 2*mu*b; outside, the model diverges (returned as-is,
+    possibly negative — callers should restrict to the valid range).
+    """
+    T = np.asarray(T, dtype=np.float64)
+    a, b, mu = ckpt.a, ckpt.b, ckpt.mu
+    return T_base * T / ((T - a) * (b - T / (2.0 * mu)))
+
+
+def time_final_prime(T, ckpt: CheckpointParams, T_base: float = 1.0):
+    """dT_final/dT = T_base (-ab + T^2/2mu) / ((T-a)^2 (b - T/2mu)^2)."""
+    T = np.asarray(T, dtype=np.float64)
+    a, b, mu = ckpt.a, ckpt.b, ckpt.mu
+    num = -a * b + T**2 / (2.0 * mu)
+    den = (T - a) ** 2 * (b - T / (2.0 * mu)) ** 2
+    return T_base * num / den
+
+
+def expected_failures(T, ckpt: CheckpointParams, T_base: float = 1.0):
+    """E[#failures] = T_final / mu."""
+    return time_final(T, ckpt, T_base) / ckpt.mu
+
+
+# --------------------------------------------------------------------------
+# §3.2 — energy
+# --------------------------------------------------------------------------
+
+class PhaseTimes(NamedTuple):
+    """Expected cumulative phase durations over the whole execution."""
+
+    T_final: np.ndarray   # wall clock
+    T_cal: np.ndarray     # CPU-busy time (power overhead P_cal)
+    T_io: np.ndarray      # I/O-busy time (power overhead P_io)
+    T_down: np.ndarray    # downtime (power overhead P_down)
+
+
+def _re_exec(T, ckpt: CheckpointParams):
+    """Expected work re-executed per failure (paper §3.2)."""
+    C, omega = ckpt.C, ckpt.omega
+    return omega * C + (T**2 - C**2) / (2.0 * T) + omega * C**2 / (2.0 * T)
+
+
+def _io_per_failure(T, ckpt: CheckpointParams):
+    """Expected extra I/O time per failure: R + C^2/(2T)."""
+    return ckpt.R + ckpt.C**2 / (2.0 * T)
+
+
+def phase_times(T, ckpt: CheckpointParams, T_base: float = 1.0) -> PhaseTimes:
+    """All phase expectations of §3.2.
+
+    Note (paper): T_final != T_cal + T_io + T_down unless omega == 0, because
+    CPU and I/O overlap during non-blocking checkpoints.
+    """
+    T = np.asarray(T, dtype=np.float64)
+    C, R, D, mu, omega = ckpt.C, ckpt.R, ckpt.D, ckpt.mu, ckpt.omega
+
+    Tf = time_final(T, ckpt, T_base)
+    n_fail = Tf / mu
+
+    T_cal = T_base + n_fail * _re_exec(T, ckpt)
+    ckpt_io = T_base * C / (T - (1.0 - omega) * C)
+    T_io = ckpt_io + n_fail * _io_per_failure(T, ckpt)
+    T_down = n_fail * D
+
+    return PhaseTimes(T_final=Tf, T_cal=T_cal, T_io=T_io, T_down=T_down)
+
+
+def energy_final(T, ckpt: CheckpointParams, power: PowerParams,
+                 T_base: float = 1.0):
+    """E_final = T_cal P_cal + T_io P_io + T_down P_down + T_final P_static."""
+    ph = phase_times(T, ckpt, T_base)
+    return (ph.T_cal * power.P_cal
+            + ph.T_io * power.P_io
+            + ph.T_down * power.P_down
+            + ph.T_final * power.P_static)
+
+
+def energy_breakdown(T, ckpt: CheckpointParams, power: PowerParams,
+                     T_base: float = 1.0) -> dict:
+    """Per-component energy dict (for reports and tests)."""
+    ph = phase_times(T, ckpt, T_base)
+    comp = {
+        "E_cal": float(ph.T_cal * power.P_cal),
+        "E_io": float(ph.T_io * power.P_io),
+        "E_down": float(ph.T_down * power.P_down),
+        "E_static": float(ph.T_final * power.P_static),
+    }
+    comp["E_final"] = sum(comp.values())
+    comp["T_final"] = float(ph.T_final)
+    return comp
+
+
+def energy_final_prime(T, ckpt: CheckpointParams, power: PowerParams,
+                       T_base: float = 1.0):
+    """Analytic dE_final/dT.
+
+    With W(T) = P_cal*re(T) + P_io*io(T) + P_down*D:
+
+        E' = P_static T_final' - P_io T_base C / (T-a)^2
+             + (T_final'/mu) W(T) + (T_final/mu) W'(T)
+
+    re'(T) = 1/2 + (1-omega) C^2 / (2 T^2);  io'(T) = -C^2/(2 T^2).
+    """
+    T = np.asarray(T, dtype=np.float64)
+    C, mu, omega = ckpt.C, ckpt.mu, ckpt.omega
+    a = ckpt.a
+
+    Tf = time_final(T, ckpt, T_base)
+    Tfp = time_final_prime(T, ckpt, T_base)
+
+    W = (power.P_cal * _re_exec(T, ckpt)
+         + power.P_io * _io_per_failure(T, ckpt)
+         + power.P_down * ckpt.D)
+    Wp = (power.P_cal * (0.5 + (1.0 - omega) * C**2 / (2.0 * T**2))
+          - power.P_io * C**2 / (2.0 * T**2))
+
+    return (power.P_static * Tfp
+            - power.P_io * T_base * C / (T - a) ** 2
+            + Tfp / mu * W
+            + Tf / mu * Wp)
+
+
+# --------------------------------------------------------------------------
+# K(T) * dE/dT — the paper's quadratic
+# --------------------------------------------------------------------------
+
+def K_factor(T, ckpt: CheckpointParams, power: PowerParams,
+             T_base: float = 1.0):
+    """K = (T-a)^2 (b - T/2mu)^2 / (P_static * T_base)  (paper §3.2)."""
+    T = np.asarray(T, dtype=np.float64)
+    a, b, mu = ckpt.a, ckpt.b, ckpt.mu
+    return (T - a) ** 2 * (b - T / (2.0 * mu)) ** 2 / (power.P_static * T_base)
+
+
+def K_dE_dT(T, ckpt: CheckpointParams, power: PowerParams,
+            T_base: float = 1.0):
+    """K(T) * E'(T) — an exact quadratic polynomial in T (paper §3.2).
+
+    The paper's printed coefficient displays are inconsistent (see DESIGN.md
+    erratum); downstream code recovers the quadratic by interpolating THIS
+    exact product instead of trusting the printed algebra.
+    """
+    return K_factor(T, ckpt, power, T_base) * energy_final_prime(
+        T, ckpt, power, T_base)
+
+
+def K_dE_dT_autodiff(T, ckpt: CheckpointParams, power: PowerParams,
+                     T_base: float = 1.0):
+    """Independent cross-check of ``K_dE_dT`` via JAX autodiff (float64 via
+    the local enable_x64 context; global JAX dtype state untouched)."""
+    import jax
+    import jax.numpy as jnp
+    from jax import enable_x64
+
+    C, R, D, mu, omega = ckpt.C, ckpt.R, ckpt.D, ckpt.mu, ckpt.omega
+    a, b = ckpt.a, ckpt.b
+    Pc, Pi, Pd, Ps = power.P_cal, power.P_io, power.P_down, power.P_static
+
+    def e_final(t):
+        tf = T_base * t / ((t - a) * (b - t / (2.0 * mu)))
+        nf = tf / mu
+        t_cal = T_base + nf * (omega * C + (t**2 - C**2) / (2 * t)
+                               + omega * C**2 / (2 * t))
+        t_io = (T_base * C / (t - (1 - omega) * C)
+                + nf * (R + C**2 / (2 * t)))
+        t_down = nf * D
+        return t_cal * Pc + t_io * Pi + t_down * Pd + tf * Ps
+
+    with enable_x64():
+        tv = jnp.atleast_1d(jnp.asarray(T, dtype=jnp.float64))
+        g = jax.vmap(jax.grad(e_final))(tv)
+        k = (tv - a) ** 2 * (b - tv / (2 * mu)) ** 2 / (Ps * T_base)
+        out = np.asarray(k * g, dtype=np.float64)
+    return out.reshape(np.shape(T))

@@ -1,0 +1,264 @@
+"""Optimal checkpoint periods: AlgoT, AlgoE, and literature baselines.
+
+AlgoT  — closed form  T_opt = sqrt(2 a b mu)  (paper Eq. (1)).
+AlgoE  — unique positive root of the exact quadratic K(T)*E'(T); coefficients
+         recovered by exact polynomial interpolation of the analytic product
+         (3 points determine a quadratic; a 4th verifies the residual),
+         sidestepping the paper's inconsistent printed algebra.  Cross-checked
+         against a direct golden-section minimization of E_final.
+Young  — T = sqrt(2 C mu) + C                      [Young 1974]
+Daly   — T = sqrt(2 C (mu + D + R)) + C            [Daly 2004]
+MSK    — Meneses–Sarood–Kalé energy model, reconstructed exactly as the
+         paper's §3.2 side note describes (omega = 0; per-failure re-exec
+         energy (T-2C)/2 * P_cal; per-failure I/O energy C * P_io).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Tuple
+
+import numpy as np
+
+from . import model
+from .params import CheckpointParams, PowerParams
+
+_GOLDEN = (math.sqrt(5.0) - 1.0) / 2.0
+
+
+# --------------------------------------------------------------------------
+# Generic scalar minimizer (golden-section; unimodal objectives)
+# --------------------------------------------------------------------------
+
+def golden_section(f: Callable[[float], float], lo: float, hi: float,
+                   tol: float = 1e-10, max_iter: int = 200) -> float:
+    """Minimize unimodal ``f`` on [lo, hi] to relative tolerance ``tol``."""
+    a, b = float(lo), float(hi)
+    c = b - _GOLDEN * (b - a)
+    d = a + _GOLDEN * (b - a)
+    fc, fd = f(c), f(d)
+    for _ in range(max_iter):
+        if abs(b - a) <= tol * (abs(a) + abs(b)):
+            break
+        if fc < fd:
+            b, d, fd = d, c, fc
+            c = b - _GOLDEN * (b - a)
+            fc = f(c)
+        else:
+            a, c, fc = c, d, fd
+            d = a + _GOLDEN * (b - a)
+            fd = f(d)
+    return 0.5 * (a + b)
+
+
+def _bracket(ckpt: CheckpointParams) -> Tuple[float, float]:
+    """Valid open interval for T, slightly shrunk for numerical safety."""
+    lo, hi = ckpt.valid_period_range()
+    if hi <= lo:
+        raise ValueError(
+            f"No valid period: need C={ckpt.C} < 2*mu*b={hi}; platform MTBF "
+            f"mu={ckpt.mu} too small for these checkpoint costs.")
+    span = hi - lo
+    return lo + 1e-9 * span + 1e-12, hi - 1e-9 * span
+
+
+# --------------------------------------------------------------------------
+# AlgoT — time-optimal period
+# --------------------------------------------------------------------------
+
+def t_opt_time(ckpt: CheckpointParams) -> float:
+    """Paper Eq. (1): T_opt = sqrt(2 (1-omega) C (mu - (D + R + omega C)))."""
+    val = 2.0 * ckpt.a * ckpt.b * ckpt.mu
+    if val <= 0:
+        # omega == 1 (a == 0) or mu too small: the closed form degenerates.
+        # Fall back to numeric optimization on the exact objective.
+        return t_opt_time_numeric(ckpt)
+    t = math.sqrt(val)
+    lo, hi = _bracket(ckpt)
+    return float(min(max(t, lo), hi))
+
+
+def t_opt_time_numeric(ckpt: CheckpointParams, T_base: float = 1.0) -> float:
+    """Golden-section argmin of the exact T_final (validation path)."""
+    lo, hi = _bracket(ckpt)
+    return golden_section(lambda t: float(model.time_final(t, ckpt, T_base)),
+                          lo, hi)
+
+
+# --------------------------------------------------------------------------
+# AlgoE — energy-optimal period
+# --------------------------------------------------------------------------
+
+def energy_quadratic_coefficients(
+        ckpt: CheckpointParams, power: PowerParams,
+) -> Tuple[float, float, float]:
+    """Coefficients (c2, c1, c0) of the exact quadratic Q(T) = K(T) * E'(T).
+
+    Q is an exact degree-2 polynomial (the paper's §3.2 cancellation); we
+    recover it by interpolation at 3 points of the *analytic* product and
+    verify the claim at a 4th point.
+    """
+    lo, hi = _bracket(ckpt)
+    # Interpolation nodes well inside the valid range.
+    ts = np.array([lo + 0.2 * (hi - lo), lo + 0.45 * (hi - lo),
+                   lo + 0.7 * (hi - lo)])
+    qs = model.K_dE_dT(ts, ckpt, power)
+    # Solve the 3x3 Vandermonde system exactly.
+    V = np.vander(ts, 3)            # columns: t^2, t, 1
+    c2, c1, c0 = np.linalg.solve(V, qs)
+
+    # Verify "quadratic-ness" at an independent 4th point.
+    t4 = lo + 0.9 * (hi - lo)
+    q4 = float(model.K_dE_dT(t4, ckpt, power))
+    q4_poly = c2 * t4**2 + c1 * t4 + c0
+    scale = max(abs(q4), abs(q4_poly), abs(c0), 1e-300)
+    if not abs(q4 - q4_poly) <= 1e-6 * scale:
+        raise AssertionError(
+            f"K*E' deviates from a quadratic: {q4} vs {q4_poly} "
+            f"(paper §3.2 cancellation violated — formula bug?)")
+    return float(c2), float(c1), float(c0)
+
+
+def derived_coefficients(
+        ckpt: CheckpointParams, power: PowerParams,
+) -> Tuple[float, float, float]:
+    """Corrected closed-form quadratic coefficients (this reproduction).
+
+    With P = alpha*omega*C + beta*R + gamma*D and Q = (beta - alpha(1-omega))C^2:
+
+        c2 = 1/(2mu) + P/(2mu^2) + alpha*b/(2mu) + (alpha*a - beta*C)/(4mu^2)
+        c1 = (beta*C - alpha*a) b / mu + Q/(2mu^2)
+        c0 = -a b (P + mu)/mu - beta*C*b^2 - Q (b/(2mu) + a/(4mu^2))
+
+    The paper's printed display omits the alpha factors on the b/(2mu) and
+    a/(4mu^2) terms of c2 and on the a*b/mu term of c1 — correct only when
+    alpha = 1 (its rho=5.5 scenario), wrong for rho=7 (alpha=2).  Verified
+    against exact interpolation of K(T)E'(T) and JAX autodiff in tests.
+    """
+    C, mu = ckpt.C, ckpt.mu
+    a, b, omega = ckpt.a, ckpt.b, ckpt.omega
+    al, be, ga = power.alpha, power.beta, power.gamma
+    P = al * omega * C + be * ckpt.R + ga * ckpt.D
+    Q = (be - al * (1.0 - omega)) * C**2
+    c2 = (1 / (2 * mu) + P / (2 * mu**2) + al * b / (2 * mu)
+          + (al * a - be * C) / (4 * mu**2))
+    c1 = (be * C - al * a) * b / mu + Q / (2 * mu**2)
+    c0 = (-a * b * (P + mu) / mu - be * C * b**2
+          - Q * (b / (2 * mu) + a / (4 * mu**2)))
+    return float(c2), float(c1), float(c0)
+
+
+def paper_printed_coefficients(
+        ckpt: CheckpointParams, power: PowerParams,
+) -> Tuple[float, float, float]:
+    """The paper's FINAL displayed quadratic coefficients (verbatim).
+
+    Kept for the erratum comparison in benchmarks/tests — the printed constant
+    term disagrees with the exact interpolated quadratic (see DESIGN.md).
+    """
+    C, R, D, mu = ckpt.C, ckpt.R, ckpt.D, ckpt.mu
+    a, b, omega = ckpt.a, ckpt.b, ckpt.omega
+    al, be, ga = power.alpha, power.beta, power.gamma
+    c2 = ((al * omega * C + be * R + ga * D) / (2 * mu**2)
+          + b / (2 * mu) + (a - be * C) / (4 * mu**2) + 1 / (2 * mu))
+    c1 = ((be * C - a) * b / mu
+          - 2 * (al * (1 - omega) - be) * C**2 / (4 * mu**2))
+    c0 = (-a * b * (al * omega * C + be * R + ga * D + mu) / mu
+          - be * C * b**2
+          + (b / (2 * mu) + a / (4 * mu**2)) * (al * (1 - omega) - be) * C**2)
+    return float(c2), float(c1), float(c0)
+
+
+def t_opt_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
+    """AlgoE: the positive root of the exact quadratic K(T) E'(T) = 0.
+
+    Falls back to the numeric argmin when the quadratic has no root inside
+    the valid range (e.g. the minimum sits on the bracket boundary).
+    """
+    lo, hi = _bracket(ckpt)
+    try:
+        c2, c1, c0 = energy_quadratic_coefficients(ckpt, power)
+    except AssertionError:
+        return t_opt_energy_numeric(ckpt, power)
+
+    roots = np.roots([c2, c1, c0]) if abs(c2) > 0 else np.array(
+        [-c0 / c1] if abs(c1) > 0 else [])
+    cands = [float(r.real) for r in np.atleast_1d(roots)
+             if abs(r.imag) < 1e-9 * max(1.0, abs(r.real))
+             and lo < r.real < hi]
+    if not cands:
+        return t_opt_energy_numeric(ckpt, power)
+    if len(cands) == 1:
+        return cands[0]
+    # Pick the root where E is smallest (E' sign change - to +).
+    es = [float(model.energy_final(t, ckpt, power)) for t in cands]
+    return cands[int(np.argmin(es))]
+
+
+def t_opt_energy_numeric(ckpt: CheckpointParams, power: PowerParams,
+                         T_base: float = 1.0) -> float:
+    """Golden-section argmin of the exact E_final (validation path)."""
+    lo, hi = _bracket(ckpt)
+    return golden_section(
+        lambda t: float(model.energy_final(t, ckpt, power, T_base)), lo, hi)
+
+
+# --------------------------------------------------------------------------
+# Literature baselines
+# --------------------------------------------------------------------------
+
+def t_young(ckpt: CheckpointParams) -> float:
+    """Young 1974: T = sqrt(2 C mu) + C (blocking model)."""
+    return math.sqrt(2.0 * ckpt.C * ckpt.mu) + ckpt.C
+
+
+def t_daly(ckpt: CheckpointParams) -> float:
+    """Daly 2004 (first-order form): T = sqrt(2 C (mu + D + R)) + C."""
+    return math.sqrt(2.0 * ckpt.C * (ckpt.mu + ckpt.D + ckpt.R)) + ckpt.C
+
+
+def _msk_energy(T, ckpt: CheckpointParams, power: PowerParams,
+                T_base: float = 1.0):
+    """MSK energy objective, reconstructed per the paper's side note.
+
+    omega is forced to 0 (MSK analyse blocking checkpoints only); relative to
+    our model the per-failure re-exec work is (T - 2C)/2 and the per-failure
+    I/O is a FULL checkpoint C (instead of C^2/(2T)).
+    """
+    ck0 = CheckpointParams(C=ckpt.C, R=ckpt.R, D=ckpt.D, mu=ckpt.mu, omega=0.0)
+    T = np.asarray(T, dtype=np.float64)
+    Tf = model.time_final(T, ck0, T_base)
+    nf = Tf / ck0.mu
+    T_cal = T_base + nf * (T - 2.0 * ck0.C) / 2.0
+    T_io = T_base * ck0.C / (T - ck0.C) + nf * (ck0.R + ck0.C)
+    T_down = nf * ck0.D
+    return (T_cal * power.P_cal + T_io * power.P_io
+            + T_down * power.P_down + Tf * power.P_static)
+
+
+def t_msk_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
+    """Energy-optimal period under the MSK approximation (numeric argmin)."""
+    ck0 = CheckpointParams(C=ckpt.C, R=ckpt.R, D=ckpt.D, mu=ckpt.mu, omega=0.0)
+    lo, hi = _bracket(ck0)
+    lo = max(lo, 2.0 * ck0.C + 1e-12)  # MSK re-exec term needs T > 2C
+    return golden_section(lambda t: float(_msk_energy(t, ck0, power)), lo, hi)
+
+
+STRATEGIES = ("algo_t", "algo_e", "young", "daly", "msk_energy")
+
+
+def period_for(strategy: str, ckpt: CheckpointParams,
+               power: PowerParams | None = None) -> float:
+    """Uniform entry point used by the runtime policy and benchmarks."""
+    if strategy == "algo_t":
+        return t_opt_time(ckpt)
+    if strategy == "algo_e":
+        assert power is not None, "algo_e needs PowerParams"
+        return t_opt_energy(ckpt, power)
+    if strategy == "young":
+        return t_young(ckpt)
+    if strategy == "daly":
+        return t_daly(ckpt)
+    if strategy == "msk_energy":
+        assert power is not None, "msk_energy needs PowerParams"
+        return t_msk_energy(ckpt, power)
+    raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")

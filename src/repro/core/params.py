@@ -1,0 +1,170 @@
+"""Model parameters for the Aupy et al. checkpoint time/energy model.
+
+All durations share one time unit (the paper uses minutes; the runtime uses
+seconds — the model is unit-agnostic as long as C, R, D, mu, T agree).
+Powers share one power unit (the paper normalizes to milliwatt/node).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+MINUTE = 1.0  # canonical paper unit; runtime converts seconds -> minutes
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointParams:
+    """Resilience parameters (paper §2.1).
+
+    C   : checkpoint duration.
+    R   : recovery (read back) duration.
+    D   : downtime (reboot / spare swap-in).
+    mu  : *platform* MTBF.  If built from per-component MTBF ``mu_ind`` and
+          ``n`` components, ``mu = mu_ind / n`` (probabilistic amplification).
+    omega : slow-down factor in [0,1] — work performed during a checkpoint is
+          ``omega*C`` work units.  omega=0 -> fully blocking, omega=1 -> fully
+          overlapped.
+    """
+
+    C: float
+    R: float
+    D: float
+    mu: float
+    omega: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.omega <= 1.0):
+            raise ValueError(f"omega must be in [0,1], got {self.omega}")
+        for name in ("C", "R", "D"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        if self.mu <= 0:
+            raise ValueError("mu must be > 0")
+        # First-order validity regime (paper §2.1): C, D, R small vs mu.
+        # Not enforced — the experiments deliberately push C ~ mu (Fig. 3).
+
+    # -- derived quantities (paper §3.1) ------------------------------------
+    @property
+    def a(self) -> float:
+        """a = (1-omega) C : work units lost to checkpoint jitter per period."""
+        return (1.0 - self.omega) * self.C
+
+    @property
+    def b(self) -> float:
+        """b = 1 - (D + R + omega*C)/mu."""
+        return 1.0 - (self.D + self.R + self.omega * self.C) / self.mu
+
+    def valid_period_range(self) -> tuple[float, float]:
+        """Open interval of T where T_final is positive/finite.
+
+        Requires T > a (positive work per period) and T < 2*mu*b (expected
+        failure overhead per unit time < 1).
+        """
+        lo = max(self.a, self.C)  # a period must at least contain a checkpoint
+        hi = 2.0 * self.mu * self.b
+        return lo, hi
+
+    @classmethod
+    def from_platform(
+        cls,
+        *,
+        n_nodes: int,
+        mu_ind: float,
+        C: float,
+        R: float,
+        D: float,
+        omega: float = 0.0,
+    ) -> "CheckpointParams":
+        """Platform MTBF from per-node MTBF: mu = mu_ind / N (paper §2.1)."""
+        return cls(C=C, R=R, D=D, mu=mu_ind / float(n_nodes), omega=omega)
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerParams:
+    """Power parameters (paper §2.2), in a common power unit.
+
+    P_static : base power when the platform is on.
+    P_cal    : CPU overhead power while computing.
+    P_io     : I/O overhead power while checkpointing / recovering.
+    P_down   : overhead while a machine is down (paper uses 0).
+    """
+
+    P_static: float
+    P_cal: float
+    P_io: float
+    P_down: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.P_static <= 0:
+            raise ValueError("P_static must be > 0 (alpha/beta/gamma undefined)")
+
+    # -- normalized overheads (paper §3.2) -----------------------------------
+    @property
+    def alpha(self) -> float:
+        return self.P_cal / self.P_static
+
+    @property
+    def beta(self) -> float:
+        return self.P_io / self.P_static
+
+    @property
+    def gamma(self) -> float:
+        return self.P_down / self.P_static
+
+    @property
+    def rho(self) -> float:
+        """rho = (P_static + P_io)/(P_static + P_cal) = (1+beta)/(1+alpha).
+
+        Paper Eq. (2) — the key experimental knob.
+        """
+        return (1.0 + self.beta) / (1.0 + self.alpha)
+
+    @classmethod
+    def from_ratios(
+        cls, *, alpha: float, beta: float, gamma: float = 0.0, P_static: float = 1.0
+    ) -> "PowerParams":
+        return cls(
+            P_static=P_static,
+            P_cal=alpha * P_static,
+            P_io=beta * P_static,
+            P_down=gamma * P_static,
+        )
+
+    @classmethod
+    def from_rho(
+        cls, *, rho: float, alpha: float = 1.0, gamma: float = 0.0,
+        P_static: float = 1.0,
+    ) -> "PowerParams":
+        """Build powers achieving a target rho at fixed alpha (Fig. 1 sweep)."""
+        beta = rho * (1.0 + alpha) - 1.0
+        if beta < 0:
+            raise ValueError(f"rho={rho} with alpha={alpha} needs beta<0")
+        return cls.from_ratios(alpha=alpha, beta=beta, gamma=gamma,
+                               P_static=P_static)
+
+
+# --- Paper §4 reference scenarios -------------------------------------------
+
+#: Exascale power scenario #1: 20 MW / 1e6 nodes = 20 mW/node, half static.
+#: rho = 5.5.
+EXASCALE_POWER_RHO55 = PowerParams(P_static=10.0, P_cal=10.0, P_io=100.0,
+                                   P_down=0.0)
+
+#: Exascale power scenario #2: P_static = 5 mW, same overheads.  rho = 7.
+EXASCALE_POWER_RHO7 = PowerParams(P_static=5.0, P_cal=10.0, P_io=100.0,
+                                  P_down=0.0)
+
+#: Jaguar-derived per-processor MTBF: 45,208 procs, ~1 fault/day ->
+#: mu_ind = 45208/365 years ~ 125 years (paper §4), in minutes.
+MU_IND_JAGUAR_MIN = 125.0 * 365.0 * 24.0 * 60.0
+
+#: Figures 1-2 resilience scenario: C = R = 10 min, D = 1 min, omega = 1/2.
+def fig12_checkpoint(mu_min: float) -> CheckpointParams:
+    return CheckpointParams(C=10.0, R=10.0, D=1.0, mu=mu_min, omega=0.5)
+
+#: Figure 3 scalability scenario: C = R = 1 min, D = 0.1 min, omega = 1/2,
+#: MTBF 120 min at 1e6 nodes scaling ~ 1/N.
+def fig3_checkpoint(n_nodes: float) -> CheckpointParams:
+    mu = 120.0 * (1.0e6 / float(n_nodes))
+    return CheckpointParams(C=1.0, R=1.0, D=0.1, mu=mu, omega=0.5)

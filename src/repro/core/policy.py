@@ -1,0 +1,179 @@
+"""Checkpoint-period policy: the paper's formulas as a runtime decision.
+
+The :class:`CheckpointPolicy` is the bridge between the analytical core and
+the distributed trainer:
+
+ * the trainer feeds it *measurements* (step time, checkpoint duration C,
+   overlap factor omega, recovery time R, downtime D, observed failure times);
+ * the policy maintains EWMA estimates, re-solves the chosen strategy
+   (AlgoT / AlgoE / Young / Daly / MSK / fixed) when estimates drift, and
+   exposes the decision as "checkpoint every k steps".
+
+All policy times are SECONDS (the trainer's unit); the analytical model is
+unit-agnostic so no conversion is needed beyond consistency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from . import model, optimal
+from .params import CheckpointParams, PowerParams
+
+
+@dataclasses.dataclass
+class _Ewma:
+    """Exponentially-weighted mean with a drift detector."""
+
+    alpha: float = 0.3
+    value: Optional[float] = None
+
+    def update(self, x: float) -> None:
+        self.value = x if self.value is None else (
+            self.alpha * x + (1.0 - self.alpha) * self.value)
+
+    def get(self, default: float) -> float:
+        return default if self.value is None else self.value
+
+
+@dataclasses.dataclass
+class PolicyConfig:
+    strategy: str = "algo_t"          # one of optimal.STRATEGIES or "fixed"
+    fixed_period_s: float = 600.0     # used when strategy == "fixed"
+    # Priors (used until enough measurements arrive):
+    C_s: float = 60.0
+    R_s: float = 60.0
+    D_s: float = 6.0
+    mu_s: float = 24 * 3600.0         # platform MTBF prior
+    omega: float = 0.5
+    # Re-solve when an estimate moves by more than this fraction:
+    drift_threshold: float = 0.10
+    min_period_steps: int = 1
+
+
+class CheckpointPolicy:
+    """Online period selection driven by the paper's model."""
+
+    def __init__(self, config: PolicyConfig, power: PowerParams):
+        self.config = config
+        self.power = power
+        self._C = _Ewma()
+        self._R = _Ewma()
+        self._D = _Ewma()
+        self._omega = _Ewma()
+        self._step_time = _Ewma(alpha=0.1)
+        self._failure_gaps: list[float] = []
+        self._last_failure_t: Optional[float] = None
+        self._cached_period: Optional[float] = None
+        self._cached_inputs: Optional[tuple] = None
+
+    # ---- measurement intake ------------------------------------------------
+    def observe_step_time(self, seconds: float) -> None:
+        self._step_time.update(seconds)
+        # step time changes do not invalidate the period (seconds-based).
+
+    def observe_checkpoint(self, *, duration_s: float,
+                           slowdown_work_fraction: float | None = None) -> None:
+        """Record a completed checkpoint.
+
+        ``slowdown_work_fraction`` is the measured omega: fraction of a normal
+        step's work that still progressed per unit time while the checkpoint
+        was in flight (1.0 = fully overlapped).
+        """
+        self._C.update(duration_s)
+        if slowdown_work_fraction is not None:
+            self._omega.update(min(max(slowdown_work_fraction, 0.0), 1.0))
+
+    def observe_recovery(self, *, recovery_s: float, downtime_s: float) -> None:
+        self._R.update(recovery_s)
+        self._D.update(downtime_s)
+
+    def observe_failure(self, wall_time_s: float) -> None:
+        if self._last_failure_t is not None:
+            gap = wall_time_s - self._last_failure_t
+            if gap > 0:
+                self._failure_gaps.append(gap)
+        self._last_failure_t = wall_time_s
+
+    # ---- estimates ---------------------------------------------------------
+    @property
+    def mu_estimate_s(self) -> float:
+        """MLE of the exponential MTBF from observed gaps, blended with the
+        prior (the prior acts as one pseudo-observation)."""
+        cfg = self.config
+        if not self._failure_gaps:
+            return cfg.mu_s
+        n = len(self._failure_gaps)
+        return (sum(self._failure_gaps) + cfg.mu_s) / (n + 1)
+
+    def checkpoint_params(self) -> CheckpointParams:
+        cfg = self.config
+        return CheckpointParams(
+            C=self._C.get(cfg.C_s),
+            R=self._R.get(cfg.R_s),
+            D=self._D.get(cfg.D_s),
+            mu=self.mu_estimate_s,
+            omega=self._omega.get(cfg.omega),
+        )
+
+    # ---- decision ----------------------------------------------------------
+    def period_seconds(self) -> float:
+        cfg = self.config
+        if cfg.strategy == "fixed":
+            return cfg.fixed_period_s
+        ck = self.checkpoint_params()
+        if not math.isfinite(ck.mu):       # no failures expected: never ckpt
+            return float("inf")
+        key = (round(ck.C, 6), round(ck.R, 6), round(ck.D, 6),
+               round(ck.mu, 3), round(ck.omega, 4), cfg.strategy)
+        if self._cached_inputs is not None and self._cached_period is not None:
+            # Only re-solve on drift beyond the threshold.
+            oC, oR, oD, omu, _, ostrat = self._cached_inputs
+            def drift(new, old):
+                return abs(new - old) > cfg.drift_threshold * max(old, 1e-9)
+            if (ostrat == cfg.strategy and not any(
+                    (drift(ck.C, oC), drift(ck.R, oR), drift(ck.D, oD),
+                     drift(ck.mu, omu)))):
+                return self._cached_period
+        period = optimal.period_for(cfg.strategy, ck, self.power)
+        self._cached_inputs = key
+        self._cached_period = period
+        return period
+
+    def period_steps(self) -> int:
+        """The decision in trainer units: checkpoint every k steps."""
+        st = self._step_time.get(1.0)
+        period = self.period_seconds()
+        if not math.isfinite(period):      # infinite MTBF: never checkpoint
+            return 10 ** 9
+        k = int(round(period / max(st, 1e-9)))
+        return max(k, self.config.min_period_steps)
+
+    # ---- reporting ---------------------------------------------------------
+    def report(self) -> dict:
+        ck = self.checkpoint_params()
+        out = {
+            "strategy": self.config.strategy,
+            "C_s": ck.C, "R_s": ck.R, "D_s": ck.D, "mu_s": ck.mu,
+            "omega": ck.omega,
+            "period_s": self.period_seconds(),
+            "period_steps": self.period_steps(),
+            "step_time_s": self._step_time.get(float("nan")),
+            "n_failures_observed": len(self._failure_gaps),
+        }
+        if not math.isfinite(ck.mu):
+            return out
+        try:
+            tt = optimal.t_opt_time(ck)
+            te = optimal.t_opt_energy(ck, self.power)
+            out["algo_t_period_s"] = tt
+            out["algo_e_period_s"] = te
+            out["predicted_time_ratio"] = float(
+                model.time_final(te, ck) / model.time_final(tt, ck))
+            out["predicted_energy_ratio"] = float(
+                model.energy_final(tt, ck, self.power)
+                / model.energy_final(te, ck, self.power))
+        except (ValueError, AssertionError):
+            pass
+        return out

@@ -1,0 +1,88 @@
+"""Time/energy trade-off sweeps — the quantities plotted in Figures 1-3.
+
+All ratios follow the paper's conventions:
+  time_ratio   = T_final(AlgoE) / T_final(AlgoT)   (>= 1; "loss in time")
+  energy_ratio = E_final(AlgoT) / E_final(AlgoE)   (>= 1; "gain in energy")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from . import model, optimal
+from .params import (CheckpointParams, PowerParams, fig12_checkpoint,
+                     fig3_checkpoint)
+
+
+@dataclasses.dataclass(frozen=True)
+class TradeoffPoint:
+    ckpt: CheckpointParams
+    power: PowerParams
+    T_time: float              # AlgoT period
+    T_energy: float            # AlgoE period
+    time_ratio: float          # T_final(AlgoE)/T_final(AlgoT)
+    energy_ratio: float        # E_final(AlgoT)/E_final(AlgoE)
+
+    @property
+    def energy_saving(self) -> float:
+        """Fraction of energy saved by AlgoE vs AlgoT (paper: 'gain')."""
+        return 1.0 - 1.0 / self.energy_ratio
+
+    @property
+    def time_overhead(self) -> float:
+        """Fractional slowdown of AlgoE vs AlgoT (paper: 'loss')."""
+        return self.time_ratio - 1.0
+
+
+def evaluate(ckpt: CheckpointParams, power: PowerParams) -> TradeoffPoint:
+    lo, hi = ckpt.valid_period_range()
+    if hi <= lo * (1.0 + 1e-9):
+        # Degenerate regime (paper §4, Fig. 3 right edge): C is of the order
+        # of the MTBF, both strategies collapse to the minimum period ~ C and
+        # the time/energy ratios converge to 1.
+        return TradeoffPoint(ckpt=ckpt, power=power, T_time=ckpt.C,
+                             T_energy=ckpt.C, time_ratio=1.0,
+                             energy_ratio=1.0)
+    Tt = optimal.t_opt_time(ckpt)
+    Te = optimal.t_opt_energy(ckpt, power)
+    t_ratio = float(model.time_final(Te, ckpt) / model.time_final(Tt, ckpt))
+    e_ratio = float(model.energy_final(Tt, ckpt, power)
+                    / model.energy_final(Te, ckpt, power))
+    return TradeoffPoint(ckpt=ckpt, power=power, T_time=Tt, T_energy=Te,
+                         time_ratio=t_ratio, energy_ratio=e_ratio)
+
+
+# ----------------------------------------------------------------------
+# Figure 1: ratios as a function of rho, for several mu
+# ----------------------------------------------------------------------
+
+def sweep_rho(rhos: Sequence[float], mu_minutes: float,
+              alpha: float = 1.0) -> list[TradeoffPoint]:
+    """C=R=10, D=1, omega=1/2 (paper Fig. 1); rho swept at fixed alpha."""
+    ck = fig12_checkpoint(mu_minutes)
+    return [evaluate(ck, PowerParams.from_rho(rho=r, alpha=alpha))
+            for r in rhos]
+
+
+# ----------------------------------------------------------------------
+# Figure 2: ratio surfaces over (mu, rho)
+# ----------------------------------------------------------------------
+
+def sweep_mu_rho(mus: Sequence[float],
+                 rhos: Sequence[float],
+                 alpha: float = 1.0) -> list[list[TradeoffPoint]]:
+    return [[evaluate(fig12_checkpoint(mu), PowerParams.from_rho(rho=r,
+                                                                 alpha=alpha))
+             for r in rhos] for mu in mus]
+
+
+# ----------------------------------------------------------------------
+# Figure 3: scalability in the number of nodes
+# ----------------------------------------------------------------------
+
+def sweep_nodes(n_nodes: Sequence[float],
+                power: PowerParams) -> list[TradeoffPoint]:
+    """C=R=1, D=0.1, omega=1/2, mu = 120 min at 1e6 nodes, ~ 1/N."""
+    return [evaluate(fig3_checkpoint(n), power) for n in n_nodes]

@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLM, DataConfig, for_arch

@@ -1,0 +1,4 @@
+from .failures import FailureInjector, FailureModel
+from .watchdog import StepTimeWatchdog, WatchdogConfig
+from .elastic import ElasticPlan, plan_reshard, build_mesh, reshard_tree
+from .trainer import FaultTolerantTrainer, TrainerConfig

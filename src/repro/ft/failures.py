@@ -1,0 +1,52 @@
+"""Failure injection: a Poisson process over wall-clock time with platform
+MTBF mu = mu_ind / N (paper §2.1), plus downtime/recovery duration models."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FailureModel:
+    mu_s: float                 # platform MTBF (seconds)
+    downtime_s: float = 2.0     # D: reboot / spare swap-in
+    recovery_extra_s: float = 0.0  # added to the measured restore time (R)
+    seed: int = 0
+
+    @classmethod
+    def from_platform(cls, *, n_nodes: int, mu_ind_s: float, **kw):
+        return cls(mu_s=mu_ind_s / n_nodes, **kw)
+
+
+class FailureInjector:
+    """Schedules exponential failure times; the trainer polls ``check``."""
+
+    def __init__(self, model: FailureModel, start_time: float = 0.0):
+        self.model = model
+        self.rng = np.random.default_rng(model.seed)
+        self.enabled = model.mu_s > 0 and np.isfinite(model.mu_s)
+        self._next = (start_time + self.rng.exponential(model.mu_s)
+                      if self.enabled else np.inf)
+        self.n_failures = 0
+        self.failure_times: list = []
+
+    @property
+    def next_failure_time(self) -> float:
+        return self._next
+
+    def check(self, now: float) -> bool:
+        """True exactly once per scheduled failure at/after its time."""
+        if not self.enabled or now < self._next:
+            return False
+        self.n_failures += 1
+        self.failure_times.append(self._next)
+        self._next = now + self.rng.exponential(self.model.mu_s)
+        return True
+
+    def mtbf_estimate(self) -> Optional[float]:
+        if len(self.failure_times) < 2:
+            return None
+        gaps = np.diff(self.failure_times)
+        return float(np.mean(gaps))

@@ -1,0 +1,155 @@
+"""Fault-tolerant trainer: the paper's closed loop.
+
+Wires together:
+  model train_step  <-  repro.models
+  data pipeline     <-  repro.data.synthetic (checkpointable)
+  period policy     <-  repro.core.policy (AlgoT / AlgoE / Young / Daly / ...)
+  checkpointing     <-  repro.ckpt (async snapshot -> sharded store -> buddy)
+  failure injection <-  repro.ft.failures (Poisson @ platform MTBF)
+  straggler watch   <-  repro.ft.watchdog
+  energy accounting <-  repro.energy (phase powers -> joules, alpha/beta/rho)
+
+Time can be real (wall clock) or *scaled*: ``sim_seconds_per_step`` lets a
+CPU-sized model emulate production step times so that MTBF/periods exercise
+realistic regimes in seconds of test time.  Failures roll the run back to the
+last committed checkpoint — data stream included — so a failure-free run and
+a failure+resume run produce IDENTICAL final parameters (property-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from ..core.policy import CheckpointPolicy
+from ..energy import EnergyMeter, Phase
+from .failures import FailureInjector, FailureModel
+from .watchdog import StepTimeWatchdog
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    sim_seconds_per_step: Optional[float] = None  # None -> measured wall time
+    checkpoint_at_start: bool = True
+    max_failures: int = 1000
+
+
+class FaultTolerantTrainer:
+    def __init__(self, *, train_step: Callable, state: Any, data,
+                 policy: CheckpointPolicy, manager, meter: EnergyMeter,
+                 failures: FailureInjector,
+                 watchdog: Optional[StepTimeWatchdog] = None,
+                 config: TrainerConfig = TrainerConfig()):
+        self.train_step = train_step
+        self.state = state          # (params, opt_state)
+        self.data = data
+        self.policy = policy
+        self.manager = manager
+        self.meter = meter
+        self.failures = failures
+        self.watchdog = watchdog or StepTimeWatchdog()
+        self.cfg = config
+        # virtual clock (seconds since run start)
+        self.now = 0.0
+        self.step = 0
+        self.log: list = []
+        self.n_rollbacks = 0
+
+    # ---------------------------------------------------------------- helpers
+    def _full_state(self) -> dict:
+        return {"model": self.state, "data": self.data.state(),
+                "step": np.asarray(self.step, np.int64)}
+
+    def _advance(self, seconds: float, phase: Phase, *,
+                 overlapped_compute: float = 0.0) -> None:
+        self.now += seconds
+        self.meter.add(phase, seconds)
+        if overlapped_compute:
+            self.meter.add(Phase.COMPUTE, overlapped_compute,
+                           advances_wall=False)
+
+    # ---------------------------------------------------------------- failure
+    def _handle_failure(self):
+        self.n_rollbacks += 1
+        self.policy.observe_failure(self.now)
+        # downtime D
+        D = self.failures.model.downtime_s
+        self._advance(D, Phase.DOWN)
+        # recovery R: restore the last committed checkpoint (measured)
+        t0 = time.perf_counter()
+        like = self._full_state()
+        restored, ck_step, source = self.manager.restore(like)
+        r_measured = time.perf_counter() - t0
+        R = r_measured + self.failures.model.recovery_extra_s
+        self._advance(R, Phase.RECOVERY_IO)
+        self.policy.observe_recovery(recovery_s=R, downtime_s=D)
+        if restored is None:
+            # no checkpoint yet: restart from step 0 state (kept by caller)
+            raise RuntimeError(
+                "failure before first checkpoint and no initial snapshot")
+        self.state = restored["model"]
+        self.data.restore(jax.tree.map(np.asarray, restored["data"]))
+        self.step = int(restored["step"])
+        self.log.append({"event": "rollback", "to_step": self.step,
+                         "source": source, "t": self.now})
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> dict:
+        cfg = self.cfg
+        if cfg.checkpoint_at_start:
+            self.manager.checkpoint(self.step, self._full_state(), block=True)
+
+        losses = []
+        while self.step < cfg.total_steps:
+            if self.failures.check(self.now):
+                self._handle_failure()
+                continue
+
+            batch = self.data.peek()
+            t0 = time.perf_counter()
+            params, opt, metrics = self.train_step(self.state[0],
+                                                   self.state[1], batch)
+            jax.block_until_ready(metrics["loss"])
+            wall = time.perf_counter() - t0
+            step_s = (cfg.sim_seconds_per_step
+                      if cfg.sim_seconds_per_step is not None else wall)
+
+            self.state = (params, opt)
+            next(self.data)          # consume the batch
+            self.step += 1
+            self._advance(step_s, Phase.COMPUTE)
+            self.policy.observe_step_time(step_s)
+            self.watchdog.observe(self.step, step_s)
+            losses.append(float(metrics["loss"]))
+
+            # policy-driven non-blocking checkpoint
+            if self.manager.maybe_checkpoint(self.step, self._full_state()):
+                C = self.manager.measured_C_s or 0.0
+                ck = self.policy.checkpoint_params()
+                # non-blocking: I/O time C overlaps omega*C of useful work
+                self._advance(C * (1.0 - ck.omega), Phase.CHECKPOINT_IO)
+                self.meter.add(Phase.CHECKPOINT_IO, C * ck.omega,
+                               advances_wall=False)
+                self.meter.add(Phase.COMPUTE, C * ck.omega,
+                               advances_wall=False)
+
+            if self.failures.n_failures > cfg.max_failures:
+                raise RuntimeError("failure budget exceeded")
+
+        self.manager.wait()
+        report = {
+            "final_step": self.step,
+            "losses": losses,
+            "n_failures": self.failures.n_failures,
+            "n_rollbacks": self.n_rollbacks,
+            "wall_s": self.now,
+            "energy": self.meter.report(),
+            "policy": self.policy.report(),
+            "straggler_events": len(self.watchdog.events),
+            "checkpoints": list(self.manager.stats),
+        }
+        return report

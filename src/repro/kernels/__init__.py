@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU):
+
+  flash_attention — online-softmax attention (causal/sliding/chunked/bidir)
+  rglru_scan      — RG-LRU linear recurrence (RecurrentGemma)
+  mlstm_scan      — chunkwise-parallel mLSTM matrix memory (xLSTM)
+  quant_blockwise — int8 blockwise (de)quantization for checkpoint/grad
+                    compression (shrinks the paper's C parameter)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
+``ops.py``.
+"""
+from . import ops, ref

@@ -1,0 +1,90 @@
+"""Flash-decoding Pallas TPU kernel: one query token against a long KV cache.
+
+Grid (B*H, n_kv_blocks) with the KV axis sequential: running max /
+denominator / output accumulator live in VMEM scratch, the output tile is
+written on the last block.  Cache positions beyond ``length`` are masked
+(ring-buffer semantics are resolved by the caller via ``length``).
+
+This is the single-token analogue of ``flash_attention``; on TPU the
+per-block work is a (1, kb) x (kb, Dh) MXU matmul pair — bandwidth-bound,
+which is exactly why the KV cache is also offered int8-quantized at the
+model level.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, kb: int, scale: float):
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    jk = j * kb + jax.lax.broadcasted_iota(jnp.int32, (1, kb), 1)
+    allow = jk < length                                   # (1, kb)
+
+    q = q_ref[0].astype(jnp.float32) * scale              # (1, Dh)
+    k = k_ref[0].astype(jnp.float32)                      # (kb, Dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, kb)
+    s = jnp.where(allow, s, NEG_INF)
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.where(allow, jnp.exp(s - m_new), 0.0)         # (1, kb)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.broadcast_to(p.sum(), l_ref.shape)
+    v = v_ref[0].astype(jnp.float32)                      # (kb, Dh)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (1, Dh)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[0, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q1, k, v, length, *, kb: int = 512,
+                     interpret: bool = False):
+    """q1: (BH, 1, Dh); cache k/v: (BH, S, Dh); length: () int32 — number of
+    valid cache slots.  Returns (BH, 1, Dh)."""
+    BH, S, Dh = k.shape
+    kb = min(kb, S)
+    while S % kb:
+        kb //= 2
+    grid = (BH, S // kb)
+    kernel = functools.partial(_decode_kernel, kb=kb, scale=Dh ** -0.5)
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Dh), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, kb, Dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, Dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Dh), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, Dh), q1.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((1, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q1, k, v, length)

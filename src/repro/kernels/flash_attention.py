@@ -1,0 +1,126 @@
+"""Flash attention Pallas TPU kernel: VMEM-tiled online-softmax.
+
+Grid (B*H, n_q_blocks, n_kv_blocks); the last grid axis is sequential on TPU,
+so the running max / denominator / output accumulator live in VMEM scratch
+across KV blocks and the output tile is written once on the final block.
+
+Block shapes are MXU/VPU-aligned: q/k tiles (qb, dh) with dh a multiple of
+128 and qb a multiple of 8 (f32 sublanes); masks built from iota.
+
+Supports causal, sliding-window, chunked-local and bidirectional masks —
+the same semantics as ``repro.models.attention`` (this kernel is the TPU hot
+path for train/prefill attention; XLA einsums remain the GSPMD dry-run path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _mask(mode: str, jq, jk, window: int, chunk: int):
+    q = jq[:, None]
+    k = jk[None, :]
+    if mode == "bidir":
+        return jnp.ones((jq.shape[0], jk.shape[0]), bool)
+    m = k <= q
+    if mode == "sliding":
+        m &= k > q - window
+    elif mode == "chunked":
+        m &= (k // chunk) == (q // chunk)
+    return m
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  mode: str, window: int, chunk: int, qb: int, kb: int,
+                  scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    jq = i * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 0)[:, 0]
+    jk = j * kb + jax.lax.broadcasted_iota(jnp.int32, (qb, kb), 1)[0, :]
+    allow = _mask(mode, jq, jk, window, chunk)
+
+    # Skip fully-masked blocks (free in interpret mode; on TPU this saves the
+    # MXU work for out-of-band tiles — the FLOP win of banded attention).
+    if mode == "bidir":
+        run = j >= 0
+    else:
+        run = j * kb <= i * qb + (qb - 1)          # at/below the diagonal
+        if mode == "sliding":
+            run &= j * kb + kb > i * qb - window   # inside the band
+        elif mode == "chunked":
+            run &= (j * kb) // chunk == (i * qb + qb - 1) // chunk
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (qb, dh)
+        k = k_ref[0].astype(jnp.float32)                  # (kb, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = jnp.where(allow, s, NEG_INF)                  # (qb, kb)
+        m_prev = m_ref[:, 0]                              # (qb,)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(allow, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = (l_ref[...] * corr[:, None]
+                      + jnp.broadcast_to(p.sum(axis=1)[:, None],
+                                         l_ref.shape))
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, mode: str = "causal", window: int = 0,
+                    chunk: int = 0, qb: int = 256, kb: int = 256,
+                    interpret: bool = False):
+    """q,k,v: (BH, S, Dh) flat-head layout.  Returns (BH, Sq, Dh)."""
+    BH, Sq, Dh = q.shape
+    Skv = k.shape[1]
+    qb = min(qb, Sq)
+    kb = min(kb, Skv)
+    assert Sq % qb == 0 and Skv % kb == 0, (Sq, qb, Skv, kb)
+    if mode == "chunked":
+        assert chunk % kb == 0 or chunk >= Skv
+    grid = (BH, Sq // qb, Skv // kb)
+    kernel = functools.partial(
+        _flash_kernel, mode=mode, window=window, chunk=chunk, qb=qb, kb=kb,
+        scale=Dh ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, qb, Dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kb, Dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, kb, Dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, Dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, 128), jnp.float32),   # running max (col 0 used)
+            pltpu.VMEM((qb, 128), jnp.float32),   # running denominator
+            pltpu.VMEM((qb, Dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,108 @@
+"""Chunkwise-parallel mLSTM Pallas TPU kernel (xLSTM matrix memory).
+
+Within a chunk the recurrence is expressed as MXU matmuls (quadratic in the
+chunk length, like flash attention); across chunks the (Dh x Dh) matrix
+memory C, normalizer n and max-stabilizer m are carried in VMEM scratch over
+the sequential last grid axis.
+
+Grid (B*H, n_chunks); blocks: q/k/v (1, L, Dh), gates (1, L).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+                  C_ref, n_ref, m_ref, *, L: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    q = q_ref[0].astype(jnp.float32)       # (L, Dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)     # (L,)
+    lf = lf_ref[0].astype(jnp.float32)
+
+    C0 = C_ref[...]                        # (Dh, Dh)
+    n0 = n_ref[:, 0]                       # (Dh,)   (col 0 holds data)
+    m0 = m_ref[0, 0]                       # scalar
+
+    b = jnp.cumsum(lf)                     # (L,)
+    F = b[-1]
+
+    intra = b[:, None] - b[None, :] + li[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    intra = jnp.where(causal, intra, NEG_INF)
+    m_intra = intra.max(axis=1)
+    m_inter = m0 + b
+    m_t = jnp.maximum(jnp.maximum(m_inter, m_intra), NEG_INF)
+
+    g_inter = jnp.exp(m_inter - m_t)
+    w_intra = jnp.where(causal, jnp.exp(intra - m_t[:, None]), 0.0)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    scores = scores * w_intra
+    h_num = (g_inter[:, None] * jax.lax.dot_general(
+                q, C0, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+             + jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    n_t = g_inter * (q @ n0) + scores.sum(axis=1)
+    denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-m_t))
+    o_ref[0, ...] = (h_num / denom[:, None]).astype(o_ref.dtype)
+
+    # ---- state update to the end of the chunk
+    s_exp = F - b + li                     # (L,)
+    m_next = jnp.maximum(m0 + F, s_exp.max())
+    decay = jnp.exp(m0 + F - m_next)
+    w_new = jnp.exp(s_exp - m_next)        # (L,)
+    C_ref[...] = decay * C0 + jax.lax.dot_general(
+        k * w_new[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_new = decay * n0 + (k * w_new[:, None]).sum(axis=0)
+    n_ref[...] = jnp.broadcast_to(n_new[:, None], n_ref.shape)
+    m_ref[...] = jnp.broadcast_to(m_next[None, None], m_ref.shape)
+
+
+def mlstm_scan(q, k, v, li, lf, *, chunk: int = 256,
+               interpret: bool = False):
+    """q,k,v: (BH, S, Dh) (q,k pre-scaled by Dh^-0.25 each or q by Dh^-0.5);
+    li, lf: (BH, S) log input / log forget gates.  Returns (BH, S, Dh)."""
+    BH, S, Dh = q.shape
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    grid = (BH, S // L)
+    kernel = functools.partial(_mlstm_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),
+            pl.BlockSpec((1, L), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, L, Dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Dh, Dh), jnp.float32),
+            pltpu.VMEM((Dh, 128), jnp.float32),
+            pltpu.VMEM((8, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, li, lf)

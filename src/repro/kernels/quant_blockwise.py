@@ -1,0 +1,96 @@
+"""Blockwise int8 quantize/dequantize Pallas TPU kernels.
+
+The paper's central cost parameter is the checkpoint write time C: these
+kernels compress checkpoint shards (and, optionally, gradients for
+compressed all-reduce) with per-(row, 128-lane-group) absmax scales —
+4x smaller payloads at ~0.4% RMS error, directly shrinking C and the I/O
+energy term T_io * P_io.
+
+Grid (N/bn, D/bd); each block computes its own scales — embarrassingly
+parallel, VPU-only, memory-bound (the roofline is the HBM stream).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_GROUP = 128
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, bd: int):
+    x = x_ref[...].astype(jnp.float32)                # (bn, bd)
+    bn = x.shape[0]
+    xb = x.reshape(bn, bd // LANE_GROUP, LANE_GROUP)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0     # (bn, groups)
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    q_ref[...] = q.reshape(bn, bd).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, bd: int):
+    q = q_ref[...].astype(jnp.float32)
+    bn = q.shape[0]
+    qb = q.reshape(bn, bd // LANE_GROUP, LANE_GROUP)
+    o_ref[...] = (qb * s_ref[...][..., None]).reshape(bn, bd).astype(
+        o_ref.dtype)
+
+
+def _snap(n: int, cap: int, step: int = 1) -> int:
+    """Largest divisor of n that is <= cap and a multiple of step."""
+    b = min(cap, n)
+    b -= b % step
+    while b >= step:
+        if n % b == 0:
+            return b
+        b -= step
+    return n
+
+
+def quantize(x, *, bn: int = 256, bd: int = 512, interpret: bool = False):
+    """x: (N, D) with D % 128 == 0.  Returns (int8 (N, D), f32 (N, D/128))."""
+    N, D = x.shape
+    bn = _snap(N, bn)
+    bd = _snap(D, bd, LANE_GROUP)
+    assert N % bn == 0 and D % bd == 0 and bd % LANE_GROUP == 0
+    grid = (N // bn, D // bd)
+    sg = bd // LANE_GROUP
+    q, s = pl.pallas_call(
+        functools.partial(_quant_kernel, bd=bd),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, bd), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, sg), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, D), jnp.int8),
+            jax.ShapeDtypeStruct((N, D // LANE_GROUP), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+def dequantize(q, s, *, dtype=jnp.float32, bn: int = 256, bd: int = 512,
+               interpret: bool = False):
+    N, D = q.shape
+    bn = _snap(N, bn)
+    bd = _snap(D, bd, LANE_GROUP)
+    assert N % bn == 0 and D % bd == 0 and bd % LANE_GROUP == 0
+    grid = (N // bn, D // bd)
+    sg = bd // LANE_GROUP
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, bd=bd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, sg), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, D), dtype),
+        interpret=interpret,
+    )(q, s)

@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Deliberately the SIMPLEST possible implementations (naive materialized
+attention, stepwise recurrences) — independent of the chunked/blocked
+formulations used by both the models and the kernels, so a test failure
+localizes to the optimized code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, *, causal=True, window=0, chunk=0):
+    """Naive softmax attention.  q,k,v: (B, H, S, Dh); f32 math."""
+    B, H, Sq, Dh = q.shape
+    Skv = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (Dh ** -0.5)
+    jq = jnp.arange(Sq)[:, None]
+    jk = jnp.arange(Skv)[None, :]
+    allow = jnp.ones((Sq, Skv), bool)
+    if causal:
+        allow &= jk <= jq
+    if window:
+        allow &= jk > jq - window
+    if chunk:
+        allow &= (jk // chunk) == (jq // chunk)
+    s = jnp.where(allow[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(allow[None, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q1, k, v, *, length):
+    """Single-token decode: q1 (B, H, Dh), cache k/v (B, H, S, Dh), attend to
+    the first ``length`` positions."""
+    s = jnp.einsum("bhd,bhkd->bhk", q1.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q1.shape[-1] ** -0.5)
+    mask = jnp.arange(k.shape[2]) < length
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bhkd->bhd", p,
+                      v.astype(jnp.float32)).astype(q1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU linear scan:  h_t = a_t * h_{t-1} + b_t
+# ---------------------------------------------------------------------------
+
+def rglru_ref(a, b, h0):
+    """a, b: (B, S, W) f32; h0: (B, W).  Stepwise lax.scan oracle."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (a.astype(jnp.float32).transpose(1, 0, 2),
+                          b.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: stepwise stabilized matrix-memory recurrence
+# ---------------------------------------------------------------------------
+
+def mlstm_ref(q, k, v, li, lf):
+    """q,k,v: (B, H, S, Dh) (q,k pre-scaled); li/lf: (B, H, S) log gates.
+    Stepwise oracle of the stabilized mLSTM (xLSTM paper)."""
+    B, H, S, Dh = q.shape
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = xs
+        m_new = jnp.maximum(lft + m, lit)
+        f = jnp.exp(lft + m - m_new)
+        i = jnp.exp(lit - m_new)
+        C = f[..., None, None] * C + i[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = f[..., None] * n + i[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    n0 = jnp.zeros((B, H, Dh), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    xs = (q.astype(jnp.float32).transpose(2, 0, 1, 3),
+          k.astype(jnp.float32).transpose(2, 0, 1, 3),
+          v.astype(jnp.float32).transpose(2, 0, 1, 3),
+          li.astype(jnp.float32).transpose(2, 0, 1),
+          lf.astype(jnp.float32).transpose(2, 0, 1))
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3)       # (B, H, S, Dh)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise int8 quantization (checkpoint compression / grad compression)
+# ---------------------------------------------------------------------------
+
+def quant_ref(x, block: int = 128):
+    """x: (N, D), D % block == 0.  Returns (int8 vals, f32 scales (N, D/block))."""
+    N, D = x.shape
+    xb = x.astype(jnp.float32).reshape(N, D // block, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(N, D), scale
+
+
+def dequant_ref(q, scale, block: int = 128, dtype=jnp.float32):
+    N, D = q.shape
+    xb = q.reshape(N, D // block, block).astype(jnp.float32)
+    return (xb * scale[..., None]).reshape(N, D).astype(dtype)

@@ -1,0 +1,67 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel:  h_t = a_t * h_{t-1} + b_t.
+
+The recurrence is memory-bound VPU work (no MXU): the kernel streams
+time-blocks through VMEM while the carry state h lives in a VMEM scratch
+across the sequential last grid axis.
+
+Grid (n_batch_blocks, n_width_blocks, n_time_blocks); blocks (bb, sb, wb)
+with wb a lane multiple (128) and bb x sb sized to keep the working set
+(2 input blocks + 1 output block + carry) within VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_ref, *, sb: int):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)     # (bb, sb, wb)
+    b = b_ref[...].astype(jnp.float32)
+    h = h_ref[...]                         # (bb, wb)
+
+    def step(s, h):
+        h = a[:, s, :] * h + b[:, s, :]
+        o_ref[:, s, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, sb, step, h)
+    h_ref[...] = h
+
+
+def rglru_scan(a, b, h0, *, bb: int = 8, sb: int = 256, wb: int = 128,
+               interpret: bool = False):
+    """a, b: (B, S, W); h0: (B, W).  Returns h: (B, S, W) (same dtype as b).
+
+    Linear scan with per-timestep decay — the RG-LRU inner loop
+    (RecurrentGemma) after gates/projections are computed by XLA.
+    """
+    B, S, W = a.shape
+    bb = min(bb, B)
+    sb = min(sb, S)
+    wb = min(wb, W)
+    assert B % bb == 0 and S % sb == 0 and W % wb == 0, (a.shape, bb, sb, wb)
+    grid = (B // bb, W // wb, S // sb)     # time last = sequential carry
+    kernel = functools.partial(_rglru_kernel, sb=sb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, sb, wb), lambda i, w, t: (i, t, w)),
+            pl.BlockSpec((bb, sb, wb), lambda i, w, t: (i, t, w)),
+            pl.BlockSpec((bb, wb), lambda i, w, t: (i, w)),
+        ],
+        out_specs=pl.BlockSpec((bb, sb, wb), lambda i, w, t: (i, t, w)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), b.dtype),
+        scratch_shapes=[pltpu.VMEM((bb, wb), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, training/serving drivers.
+
+NOTE: ``dryrun`` is intentionally NOT imported here — it mutates XLA_FLAGS at
+import time and must only be imported as the program entry point.
+"""
+from .mesh import make_production_mesh, make_test_mesh, TPU_V5E

@@ -1,0 +1,283 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract roofline inputs.
+
+MUST be the very first lines — before ANY other import (jax locks the device
+count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import json                # noqa: E402
+import re                  # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+from collections import Counter    # noqa: E402
+from pathlib import Path   # noqa: E402
+
+import jax                 # noqa: E402
+
+from ..configs import ALL_ARCHS, get_config           # noqa: E402
+from ..configs.base import SHAPES, ArchConfig, ShapeConfig  # noqa: E402
+from ..models import build, input_specs               # noqa: E402
+from ..models.spec import abstract_tree               # noqa: E402
+from ..optim import adamw                             # noqa: E402
+from ..parallel import sharding as shd                # noqa: E402
+from .mesh import make_production_mesh, TPU_V5E       # noqa: E402
+from . import hlo_cost                                # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" \
+    / "dryrun"
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches every `dtype[d0,d1,...]` group in an HLO result type
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^)]*\)|\w+\[[\d,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective result bytes (per-device) summed from optimized HLO."""
+    out = Counter()
+    counts = Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if kind.endswith("-done"):
+            continue
+        out[kind] += _type_bytes(m.group(1))
+        counts[kind] += 1
+    return {"bytes_by_type": dict(out), "counts_by_type": dict(counts),
+            "total_bytes": int(sum(out.values()))}
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def production_config(name: str, *, serving: bool = False) -> ArchConfig:
+    """Arch config with production numerics: padded heads for TP=16; serving
+    casts parameters to bf16 (halves weight memory, standard practice)."""
+    cfg = dataclasses.replace(get_config(name), head_pad_multiple=16,
+                              param_dtype="bfloat16")
+    if cfg.name == "llama4-scout-17b-a16e":
+        # top-1 routing: per-row capacity MoE (GShard groups = rows) is the
+        # production path — the dense all-experts path computes 16x the
+        # active FLOPs and its transients do not fit HBM at train_4k.
+        # Exception: prefill_32k uses the dense path — the capacity combine
+        # needs (B,E,C,d)-scale buffers that the CPU backend's bf16-matmul
+        # legalization inflates to f32; with no optimizer state resident the
+        # dense path fits comfortably (documented in EXPERIMENTS.md §Perf).
+        cfg = dataclasses.replace(cfg, moe_impl="capacity")
+    if serving:
+        # int8 KV cache: halves cache memory vs bf16 (standard serving
+        # practice) and keeps the cache out of XLA-CPU's bf16->f32 float
+        # normalization of while-loop carries.
+        cfg = dataclasses.replace(cfg, remat="none", kv_cache_dtype="int8")
+    return cfg
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for ax in ("pod", "data"):
+        n *= mesh.shape.get(ax, 1)
+    return n
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """(callable, example_args, donate) for one dry-run cell."""
+    model = build(cfg)
+    pspec = model.param_spec()
+    params_abs = abstract_tree(pspec, mesh)
+
+    if shape.kind == "train":
+        # >100B params on 16 GiB chips: bf16-native params without an f32
+        # master copy (Gopher-style) — the f32 master alone would be 2 GiB+
+        # per chip.  Smaller archs keep the f32 master.
+        opt_cfg = adamw.AdamWConfig(
+            factored_second_moment=True, momentum_dtype="bfloat16",
+            master_weights=cfg.param_count() < 100e9)
+        opt_abs = abstract_tree(adamw.state_spec(pspec, opt_cfg), mesh)
+        batch_abs = input_specs(cfg, shape, mesh)
+        dp = _dp_size(mesh)
+        k = max(1, shape.global_batch
+                // (dp * cfg.microbatch_rows_per_device))
+        step = model.make_train_step(
+            opt_cfg, microbatches=k,
+            accum_dtype="bfloat16" if k >= 8 else "float32")
+        return step, (params_abs, opt_abs, batch_abs), (0, 1)
+
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape, mesh)
+
+        def prefill(params, batch):
+            return model.prefill(params, batch, max_cache_seq=shape.seq_len)
+        return prefill, (params_abs, batch_abs), ()
+
+    # decode
+    inp = input_specs(cfg, shape, mesh)
+
+    def serve_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+    return serve_step, (params_abs, inp["cache"], inp["token"]), (1,)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             save: bool = True) -> dict:
+    """Lower+compile one cell; returns the roofline-input record."""
+    shape = SHAPES[shape_name]
+    cfg = production_config(arch, serving=shape.kind != "train")
+    if arch == "llama4-scout-17b-a16e" and shape_name == "prefill_32k":
+        # waves must keep the per-wave batch divisible by the DP degree
+        dp = 32 if multi_pod else 16
+        waves = 2 if (shape.global_batch // 2) % dp == 0 else 1
+        cfg = dataclasses.replace(cfg, moe_impl="dense", prefill_waves=waves)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.reshape(-1))
+    t0 = time.time()
+
+    fn, args, donate = build_cell(cfg, shape, mesh)
+    with shd.use_mesh(mesh):
+        jitted = jax.jit(fn, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    walked = hlo_cost.analyze(txt)
+
+    model = build(cfg)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "param_count": model.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        # XLA cost_analysis (loop bodies counted ONCE — kept for reference)
+        "flops_per_device": float(ca.get("flops", 0.0)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "collectives": coll,
+        # loop-aware HLO walk (launch/hlo_cost.py) — the roofline inputs
+        "walked": {
+            "flops_per_device": walked.flops,
+            "hbm_bytes_per_device": walked.hbm_bytes,
+            "coll_bytes_by_type": dict(walked.coll_bytes),
+            "coll_counts_by_type": dict(walked.coll_counts),
+            "coll_bytes_total": float(sum(walked.coll_bytes.values())),
+        },
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": (ma.argument_size_in_bytes
+                               + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               - ma.alias_size_in_bytes),
+        },
+        "hbm_per_chip": TPU_V5E["hbm_bytes"],
+        "timings_s": {"lower": round(t_lower, 2),
+                      "compile": round(t_compile, 2)},
+    }
+    record["fits_hbm"] = bool(
+        record["memory"]["peak_bytes_est"] <= TPU_V5E["hbm_bytes"])
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        path = RESULTS_DIR / f"{arch}__{shape_name}__{record['mesh']}.json"
+        path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def all_cells(multi_pod: bool = False):
+    for cfg in ALL_ARCHS:
+        for shape in cfg.applicable_shapes():
+            yield cfg.name, shape.name, multi_pod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one architecture id")
+    ap.add_argument("--shape", default=None, help="one shape name")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (512 chips) instead of 16x16")
+    ap.add_argument("--all", action="store_true",
+                    help="every applicable (arch x shape) on this mesh")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="with --all: run single-pod AND multi-pod")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--print-hlo-stats", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        cells += list(all_cells(multi_pod=args.multi_pod or False))
+        if args.both_meshes:
+            cells += list(all_cells(multi_pod=True))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        out = RESULTS_DIR / f"{arch}__{shape}__{mesh_name}.json"
+        if args.skip_existing and out.exists():
+            print(f"[skip] {arch} x {shape} x {mesh_name}")
+            continue
+        try:
+            t0 = time.time()
+            rec = run_cell(arch, shape, multi_pod=mp)
+            print(f"[ok]   {arch} x {shape} x {mesh_name}: "
+                  f"flops/dev={rec['flops_per_device']:.3e} "
+                  f"coll={rec['collectives']['total_bytes']:.3e}B "
+                  f"peak={rec['memory']['peak_bytes_est']/2**30:.2f}GiB "
+                  f"fits={rec['fits_hbm']} ({time.time()-t0:.0f}s)")
+        except Exception as e:   # noqa: BLE001 — report and continue
+            failures.append((arch, shape, mesh_name, repr(e)))
+            print(f"[FAIL] {arch} x {shape} x {mesh_name}: {e!r}")
+            traceback.print_exc(limit=3)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,185 @@
+"""Model zoo public API.
+
+``Model`` bundles an ArchConfig with spec/init/step functions; ``input_specs``
+produces ShapeDtypeStruct stand-ins (with shardings when a mesh is given) for
+every (arch x shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..optim import adamw
+from ..parallel import sharding as shd
+from . import spec as spec_mod
+from . import transformer as tfm
+from .spec import ParamSpec, abstract_tree, init_tree, shardings_tree, \
+    tree_size, is_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- parameters --------------------------------------------------------
+    def param_spec(self):
+        return tfm.model_spec(self.cfg)
+
+    def init(self, key):
+        return init_tree(self.param_spec(), key)
+
+    def param_count(self) -> int:
+        return tree_size(self.param_spec())
+
+    # ---- pure model fns ----------------------------------------------------
+    def loss(self, params, batch):
+        return tfm.loss_fn(self.cfg, params, batch)
+
+    def forward(self, params, tokens, **kw):
+        return tfm.forward(self.cfg, params, tokens, **kw)
+
+    def prefill(self, params, batch, max_cache_seq: Optional[int] = None):
+        """Serving prefill.  With cfg.prefill_waves > 1 the request batch is
+        processed in sequential waves (bounds live activation memory; the
+        caches are merged along the batch axis afterwards)."""
+        waves = max(1, getattr(self.cfg, "prefill_waves", 1))
+        B = batch["tokens"].shape[0]
+        if waves == 1 or B % waves:
+            return tfm.forward(self.cfg, params, batch["tokens"],
+                               prefix=batch.get("prefix"),
+                               frames=batch.get("frames"),
+                               collect_cache=True,
+                               max_cache_seq=max_cache_seq)
+
+        bw = B // waves
+        waved = jax.tree.map(
+            lambda x: x.reshape((waves, bw) + x.shape[1:]), batch)
+
+        def one_wave(_, wb):
+            lg, cache = tfm.forward(self.cfg, params, wb["tokens"],
+                                    prefix=wb.get("prefix"),
+                                    frames=wb.get("frames"),
+                                    collect_cache=True,
+                                    max_cache_seq=max_cache_seq)
+            return None, (lg, cache)
+
+        _, (logits, caches) = jax.lax.scan(one_wave, None, waved)
+        # merge the wave axis back into each leaf's batch axis, guided by the
+        # cache spec's logical axis names
+        spec = tfm.cache_spec(self.cfg, bw, max_cache_seq
+                              or batch["tokens"].shape[1])
+
+        def merge(s, leaf):
+            if "batch" not in s.logical:
+                return jax.tree.map(lambda x: x[0], leaf)
+            bi = s.logical.index("batch")
+            out = jnp.moveaxis(leaf, 0, bi)
+            return out.reshape(out.shape[:bi] + (waves * bw,)
+                               + out.shape[bi + 2:])
+
+        cache = jax.tree.map(merge, spec, caches,
+                             is_leaf=lambda x: is_spec(x))
+        logits = logits.reshape((B,) + logits.shape[2:])
+        return logits, cache
+
+    def decode_step(self, params, cache, token):
+        return tfm.decode_step(self.cfg, params, cache, token)
+
+    def cache_spec(self, batch: int, max_seq: int):
+        return tfm.cache_spec(self.cfg, batch, max_seq)
+
+    # ---- training step (with AdamW) ----------------------------------------
+    def make_train_step(self, opt_cfg: adamw.AdamWConfig,
+                        microbatches: int = 1,
+                        accum_dtype: str = "float32"):
+        """Train step with optional gradient accumulation: the global batch is
+        split into ``microbatches`` sequential micro-steps, bounding live
+        activations to one microbatch — required to fit the larger archs'
+        train_4k cells in HBM.  ``accum_dtype="bfloat16"`` halves the
+        accumulator (and its while-loop double buffer); fine for <=16
+        same-scale summands, used by the production dry-run for the 20B+
+        archs."""
+        cfg = self.cfg
+        k = microbatches
+        adt = jnp.dtype(accum_dtype)
+
+        def loss_of(p, b):
+            return tfm.loss_fn(cfg, p, b)
+
+        def train_step(params, opt_state, batch):
+            if k == 1:
+                loss, grads = jax.value_and_grad(loss_of)(params, batch)
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                    batch)
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, adt), params)
+
+                def micro(acc, mb):
+                    l, g = jax.value_and_grad(loss_of)(params, mb)
+                    acc = jax.tree.map(
+                        lambda a, gi: a + gi.astype(adt), acc, g)
+                    return acc, l
+
+                acc, losses = jax.lax.scan(micro, acc0, mbs)
+                # stay in accum dtype; the optimizer casts per-leaf (avoids a
+                # whole-tree f32 transient)
+                grads = jax.tree.map(lambda g_: g_ / k, acc)
+                loss = jnp.mean(losses)
+            new_params, new_state, metrics = adamw.apply_updates(
+                opt_cfg, params, grads, opt_state)
+            metrics = dict(metrics, loss=loss)
+            return new_params, new_state, metrics
+
+        return train_step
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins per (arch x shape)
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ParamSpec tree for one data batch of the given workload shape."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": ParamSpec((B, S), ("batch", "seq_sp" if B == 1 else "seq"),
+                            "int32"),
+        "labels": ParamSpec((B, S), ("batch", "seq_sp" if B == 1 else "seq"),
+                            "int32"),
+    }
+    if cfg.n_prefix_tokens:
+        out["prefix"] = ParamSpec((B, cfg.n_prefix_tokens, cfg.d_model),
+                                  ("batch", None, "act_embed"), "float32")
+    if cfg.is_encoder_decoder:
+        out["frames"] = ParamSpec((B, cfg.encoder_seq, cfg.d_model),
+                                  ("batch", None, "act_embed"), "float32")
+    return out
+
+
+def decode_input_spec(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    out = {"token": ParamSpec((B, 1), ("batch", None), "int32")}
+    if B == 1:
+        out["token"] = ParamSpec((B, 1), (None, None), "int32")
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh=None, rules=None):
+    """ShapeDtypeStructs (with shardings if mesh given) for the dry-run."""
+    if shape.kind in ("train", "prefill"):
+        spec = batch_spec(cfg, shape)
+    else:
+        spec = {
+            "cache": tfm.cache_spec(cfg, shape.global_batch, shape.seq_len),
+            **decode_input_spec(cfg, shape),
+        }
+    return abstract_tree(spec, mesh, rules)

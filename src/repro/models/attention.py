@@ -1,0 +1,341 @@
+"""Attention: GQA projections + memory-bounded softmax attention.
+
+Layout decisions (TPU/GSPMD, see DESIGN.md):
+
+* **Flat padded heads.** q/k/v use a flat head axis padded to the TP multiple
+  (``cfg.head_pad_multiple``, 16 on the production mesh) so the head axis
+  always shards evenly (JAX rejects uneven shardings).  Padded heads carry
+  zero projections and are output-masked, so they are exactly inert; the
+  waste is visible in the roofline useful-FLOP ratio (deepseek 56->64,
+  llama4 40->48, starcoder2 24->32, whisper 6->16).
+* **KV stored un-expanded** ``(B, S, Hkv, Dh)`` (replicated over model — kv
+  heads are few), expanded on the fly to the padded flat layout, sharded.
+* **Banded attention** for sliding-window / chunked-local masks: scan over q
+  blocks, each attending one statically-sliced KV band -> O(S*band) FLOPs and
+  O(qb*band) memory.
+* **Online-softmax attention** (flash-style running max/denominator scan over
+  KV blocks) for full attention -> O(qb*kb) memory at O(S^2) FLOPs.
+* **Decode** uses the grouped (un-expanded) einsum against a KV cache whose
+  sequence axis is sharded over "model" (flash-decoding: GSPMD turns the
+  softmax reductions into cross-device collectives).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .layers import rope
+from .spec import ParamSpec
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec
+# ---------------------------------------------------------------------------
+
+def padded_heads(cfg) -> int:
+    m = getattr(cfg, "head_pad_multiple", 1) or 1
+    return ((cfg.n_heads + m - 1) // m) * m
+
+
+def attn_spec(cfg, cross: bool = False) -> dict:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = padded_heads(cfg), cfg.n_kv_heads
+    dt = cfg.param_dtype
+    return {
+        "wq": ParamSpec((d, hq, dh), ("embed", "heads", "head_dim"), dt),
+        "wk": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim"), dt),
+        "wv": ParamSpec((d, hkv, dh), ("embed", "kv_heads", "head_dim"), dt),
+        "wo": ParamSpec((hq, dh, d), ("heads", "head_dim", "embed"), dt),
+    }
+
+
+def _head_map(cfg) -> jnp.ndarray:
+    """flat (padded) q-head index -> kv head index (pads clamp to last)."""
+    g = cfg.n_heads // cfg.n_kv_heads
+    idx = jnp.arange(padded_heads(cfg)) // g
+    return jnp.minimum(idx, cfg.n_kv_heads - 1)
+
+
+def _head_mask(cfg) -> jnp.ndarray:
+    return (jnp.arange(padded_heads(cfg)) < cfg.n_heads)
+
+
+def expand_kv(cfg, kv: jax.Array) -> jax.Array:
+    """(B, S, Hkv, Dh) -> (B, S, Hq_pad, Dh) via per-head gather."""
+    out = jnp.take(kv, _head_map(cfg), axis=2)
+    return constrain(out, ("batch", "seq", "heads", "head_dim"))
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (flat layout: q/k/v all (B, S, H, Dh))
+# ---------------------------------------------------------------------------
+
+def _block_mask(mode: str, jq: jax.Array, jk: jax.Array, window: int,
+                chunk: int) -> jax.Array:
+    """(len(jq), len(jk)) boolean allow-mask from absolute positions."""
+    q = jq[:, None]
+    k = jk[None, :]
+    if mode == "bidir":
+        return jnp.ones((jq.shape[0], jk.shape[0]), dtype=bool)
+    m = k <= q                                   # causal
+    if mode == "sliding":
+        m &= k > q - window
+    elif mode == "chunked":
+        m &= (k // chunk) == (q // chunk)
+    return m
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    d = min(n, cap)
+    while n % d:
+        d -= 1
+    return d
+
+
+def attention_online(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     mode: str = "causal", window: int = 0, chunk: int = 0,
+                     q_offset: int = 0, qb: int = 512,
+                     kb: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention, O(qb*kb) live score memory:
+    outer scan over q blocks, inner scan over KV blocks with running
+    max/denominator.  Block sizes snap to divisors of the (possibly
+    non-power-of-2) sequence lengths (whisper 1500 frames, VLM 4096+256).
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, H, Dh).  Returns (B, Sq, H, Dh).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    kb = _largest_divisor_leq(Skv, kb)
+    qb = _largest_divisor_leq(Sq, qb)
+    nk = Skv // kb
+    nq = Sq // qb
+    scale = Dh ** -0.5
+
+    # operands stay in input dtype with f32 einsum accumulation: whole-tensor
+    # f32 converts inside the scan get hoisted by XLA into full K/V copies
+    qbl = (q * jnp.asarray(scale, q.dtype)).reshape(
+        B, nq, qb, H, Dh).transpose(1, 0, 3, 2, 4)          # (nq,B,H,qb,Dh)
+    kbl = k.reshape(B, nk, kb, H, Dh).transpose(1, 0, 3, 2, 4)
+    vbl = v.reshape(B, nk, kb, H, Dh).transpose(1, 0, 3, 2, 4)
+
+    def q_block(_, xs):
+        i, qf = xs                                          # qf (B,H,qb,Dh)
+        jq = q_offset + i * qb + jnp.arange(qb)
+
+        def kv_step(carry, ys):
+            m, l, acc = carry
+            kj, vj, j = ys
+            jk = j * kb + jnp.arange(kb)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj,
+                           preferred_element_type=jnp.float32)
+            allow = _block_mask(mode, jq, jk, window, chunk)
+            s = jnp.where(allow[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(allow[None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qb), jnp.float32)
+        a0 = jnp.zeros((B, H, qb, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kbl, vbl, jnp.arange(nk)))
+        return None, acc / jnp.maximum(l, 1e-30)[..., None]
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qbl))
+    # blocks: (nq, B, H, qb, Dh) -> (B, Sq, H, Dh)
+    out = blocks.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def attention_banded(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     mode: str, window: int = 0, chunk: int = 0,
+                     qb: int = 512) -> jax.Array:
+    """Banded attention for sliding/chunked masks: scan over q blocks, one
+    statically-sliced KV band per block -> O(S*band) FLOPs.
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, H, Dh) with Skv == Sq (self-attention).
+    """
+    import math as _math
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    qb = _math.gcd(min(qb, Sq), Sq)
+    if mode == "chunked":
+        qb = _math.gcd(qb, chunk)       # q blocks must not straddle chunks
+        band = min(chunk, Skv)
+    elif mode == "sliding":
+        band = min(window + qb, Skv)
+    else:
+        raise ValueError(mode)
+    nq = Sq // qb
+    scale = Dh ** -0.5
+
+    qbl = q.reshape(B, nq, qb, H, Dh).transpose(1, 0, 3, 2, 4)  # (nq,B,H,qb,Dh)
+    kf = k.transpose(0, 2, 1, 3)   # (B,H,Skv,Dh)
+    vf = v.transpose(0, 2, 1, 3)
+
+    def block(i, qi):
+        q_start = i * qb
+        if mode == "sliding":
+            start = jnp.clip(q_start + qb - band, 0, Skv - band)
+        else:  # chunked: the band is the chunk containing this q block
+            start = jnp.clip((q_start // max(chunk, 1)) * max(chunk, 1),
+                             0, Skv - band)
+        ki = jax.lax.dynamic_slice_in_dim(kf, start, band, axis=2)
+        vi = jax.lax.dynamic_slice_in_dim(vf, start, band, axis=2)
+        jq = q_start + jnp.arange(qb)
+        jk = start + jnp.arange(band)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi * jnp.asarray(scale, qi.dtype),
+                       ki, preferred_element_type=jnp.float32)
+        allow = _block_mask(mode, jq, jk, window, chunk)
+        s = jnp.where(allow[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p.astype(vi.dtype), vi,
+                          preferred_element_type=jnp.float32)
+
+    def step(_, xs):
+        i, qi = xs
+        return None, block(i, qi)
+
+    _, blocks = jax.lax.scan(step, None, (jnp.arange(nq), qbl))
+    # blocks: (nq, B, H, qb, Dh) -> (B, Sq, H, Dh)
+    out = blocks.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, mode: str, window: int = 0, chunk: int = 0,
+              q_offset: int = 0) -> jax.Array:
+    """Dispatch: banded for sliding/chunked (when the band is a real subset),
+    online-softmax otherwise."""
+    Skv = k.shape[1]
+    if mode == "sliding" and window < Skv:
+        return attention_banded(q, k, v, mode="sliding", window=window)
+    if mode == "chunked" and chunk < Skv:
+        return attention_banded(q, k, v, mode="chunked", chunk=chunk)
+    eff = "bidir" if mode == "bidir" else "causal"
+    return attention_online(q, k, v, mode=eff, q_offset=q_offset)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(cfg, q1: jax.Array, ck: jax.Array, cv: jax.Array,
+                     slot_pos: jax.Array, pos: jax.Array, *,
+                     mode: str, window: int = 0, chunk: int = 0) -> jax.Array:
+    """q1: (B, 1, Hq_pad, Dh); cache ck/cv: (B, Sc, Hkv, Dh);
+    slot_pos: (Sc,) absolute position per cache slot (-1 = empty);
+    pos: scalar current position.  Returns (B, 1, Hq_pad, Dh).
+
+    Grouped einsum (no KV expansion — decode FLOPs are tiny, cache memory is
+    not).  With the cache sequence sharded over "model", GSPMD lowers the max
+    / sum reductions to cross-device collectives = flash-decoding.
+    """
+    B, _, Hq, Dh = q1.shape
+    Hkv = ck.shape[2]
+    G = Hq // Hkv if Hq % Hkv == 0 else None
+    scale = Dh ** -0.5
+    allow = (slot_pos >= 0) & (slot_pos <= pos)
+    if mode == "sliding":
+        allow &= slot_pos > pos - window
+    elif mode == "chunked":
+        allow &= (slot_pos // chunk) == (pos // chunk)
+
+    if G is not None:
+        qg = q1.reshape(B, Hkv, G, Dh) * jnp.asarray(scale, q1.dtype)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, ck,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(allow[None, None, None], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(allow[None, None, None], p, 0.0)
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bkgs,bskd->bkgd", p.astype(cv.dtype), cv,
+                       preferred_element_type=jnp.float32)
+        out = (o / jnp.maximum(l, 1e-30)).reshape(B, 1, Hq, Dh)
+    else:
+        kmap = _head_map(cfg)
+        ke = jnp.take(ck, kmap, axis=2)       # (B,Sc,Hq,Dh)
+        ve = jnp.take(cv, kmap, axis=2)
+        qf = q1[:, 0] * jnp.asarray(scale, q1.dtype)
+        s = jnp.einsum("bhd,bshd->bhs", qf, ke,
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(allow[None, None], s, NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.where(allow[None, None], jnp.exp(s - m), 0.0)
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhs,bshd->bhd", p.astype(ve.dtype), ve,
+                       preferred_element_type=jnp.float32)
+        out = (o / jnp.maximum(l, 1e-30))[:, None]
+    return out.astype(q1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full multi-head layer (projections + rope + core + output)
+# ---------------------------------------------------------------------------
+
+class KVCacheLayer(NamedTuple):
+    k: jax.Array          # (B, Sc, Hkv, Dh)
+    v: jax.Array
+    # slot_pos & pos live once per cache, not per layer
+
+
+def project_qkv(cfg, p: dict, x: jax.Array, positions, *,
+                use_rope: bool, compute_dtype):
+    """x: (B,S,d) -> q (B,S,Hq_pad,Dh), k/v (B,S,Hkv,Dh)."""
+    cd = compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    return q, k, v
+
+
+def output_proj(cfg, p: dict, out: jax.Array, compute_dtype) -> jax.Array:
+    out = out * _head_mask(cfg)[None, None, :, None].astype(out.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute_dtype))
+    return constrain(y, ("batch", "seq", "act_embed"))
+
+
+def self_attention(cfg, p: dict, x: jax.Array, positions, *,
+                   mode: str, use_rope: bool, compute_dtype,
+                   window: int = 0, chunk: int = 0):
+    """Training/prefill self-attention.  Returns (y, (k, v)) — the raw KV for
+    cache construction during prefill."""
+    q, k, v = project_qkv(cfg, p, x, positions, use_rope=use_rope,
+                          compute_dtype=compute_dtype)
+    ke, ve = expand_kv(cfg, k), expand_kv(cfg, v)
+    out = attention(q, ke, ve, mode=mode, window=window, chunk=chunk)
+    return output_proj(cfg, p, out, compute_dtype), (k, v)
+
+
+def cross_kv(cfg, p: dict, enc_out: jax.Array, compute_dtype):
+    """Project encoder output (B, F, d) to un-expanded cross K/V."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(compute_dtype))
+    return k, v
+
+
+def cross_attention(cfg, p: dict, x: jax.Array, enc_out: jax.Array,
+                    compute_dtype):
+    """Decoder->encoder attention (whisper).  Returns (y, (k, v)) with the
+    un-expanded cross K/V for cache construction."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype))
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k, v = cross_kv(cfg, p, enc_out, compute_dtype)
+    out = attention(q, expand_kv(cfg, k), expand_kv(cfg, v), mode="bidir")
+    return output_proj(cfg, p, out, compute_dtype), (k, v)

@@ -1,0 +1,179 @@
+"""Shared neural-net layers (pure functional JAX, explicit dtypes)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .spec import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("act_embed",), init="ones")}
+    return {"scale": ParamSpec((d,), ("act_embed",), init="ones"),
+            "bias": ParamSpec((d,), ("act_embed",), init="zeros")}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6):
+    """Norms with f32 *reductions* but elementwise math in the input dtype.
+
+    Deliberately avoids converting the whole activation to f32: a full-tensor
+    convert directly on remat-saved activations gets hoisted out of XLA's
+    backward loop, materializing an f32 copy of every layer's saved input
+    (n_layers x B x S x d) — observed 2x activation-memory blowup.
+    """
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+        return x * inv * p["scale"].astype(x.dtype)
+    mean32 = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True) - jnp.square(mean32)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return ((x - mean32.astype(x.dtype)) * inv * p["scale"].astype(x.dtype)
+            + p["bias"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense 2-matrix or GLU 3-matrix)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d: int, f: int, kind: str, dtype: str,
+             mlp_axis: str = "mlp") -> dict:
+    if kind == "glu":
+        return {
+            "wg": ParamSpec((d, f), ("embed", mlp_axis), dtype),
+            "wu": ParamSpec((d, f), ("embed", mlp_axis), dtype),
+            "wd": ParamSpec((f, d), (mlp_axis, "embed"), dtype),
+        }
+    return {
+        "wi": ParamSpec((d, f), ("embed", mlp_axis), dtype),
+        "wo": ParamSpec((f, d), (mlp_axis, "embed"), dtype),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str, act: str,
+              compute_dtype) -> jax.Array:
+    a = act_fn(act)
+    decode = x.shape[1] == 1
+    if decode:
+        # weight-stationary decode (see moe_dense): replicate the token so
+        # the FSDP-sharded weights are not all-gathered per layer
+        x = constrain(x, (None, "seq", "act_embed"))
+    if kind == "glu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(compute_dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(compute_dtype))
+        h = a(g) * u
+        h = constrain(h, ("batch", "seq", "mlp"))
+        out = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(compute_dtype))
+        return constrain(out, ("batch", "seq", "act_embed")) if decode \
+            else out
+    h = a(jnp.einsum("bsd,df->bsf", x, p["wi"].astype(compute_dtype)))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(compute_dtype))
+    return constrain(out, ("batch", "seq", "act_embed")) if decode else out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh) or (..., S, Hkv, G, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = (1.0 / theta) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    # broadcast over head axes between S and Dh
+    extra = x.ndim - ang.ndim - 1
+    for _ in range(extra):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0) -> jax.Array:
+    """Classic transformer sinusoidal embeddings (whisper encoder/decoder)."""
+    pos = (jnp.arange(seq, dtype=jnp.float32) + offset)[:, None]
+    half = d // 2
+    freqs = (1.0 / 10_000.0) ** (jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int, dtype: str) -> ParamSpec:
+    # d stays UNSHARDED: with vocab over "model" and d over "data", the
+    # token-lookup gather conflicts with batch-over-"data" and GSPMD
+    # replicates the batch with f32 partial sums (full-activation buffers).
+    # vocab-over-"model" alone keeps the lookup local-ish and the tied
+    # unembed einsum vocab-sharded.
+    return ParamSpec((vocab, d), ("vocab", None), dtype, init="normal")
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array,
+                 compute_dtype) -> jax.Array:
+    out = jnp.take(table, tokens, axis=0).astype(compute_dtype)
+    return constrain(out, ("batch", "seq", "act_embed"))
+
+
+def unembed(table_or_head: jax.Array, x: jax.Array, compute_dtype,
+            transpose: bool) -> jax.Array:
+    """Logits = x @ W^T (tied) or x @ W (untied head)."""
+    w = table_or_head.astype(compute_dtype)
+    if transpose:
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  real_vocab: Optional[int] = None) -> jax.Array:
+    """Mean token cross-entropy in f32; positions of padded vocab masked.
+
+    Written with iota comparisons (no gathers / slice-updates over the vocab
+    axis) so a model-sharded vocab stays sharded — GSPMD reduces with a small
+    (B, S) all-reduce instead of all-gathering full-vocab logits.
+    """
+    lf = logits.astype(jnp.float32)
+    vpos = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    if real_vocab is not None and real_vocab < lf.shape[-1]:
+        lf = jnp.where(vpos < real_vocab, lf, -1e30)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    sel = vpos == labels[..., None].astype(jnp.int32)
+    picked = jnp.sum(jnp.where(sel, lf, 0.0), axis=-1)
+    nll = lse - picked
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,214 @@
+"""Mixture-of-Experts FFN with expert parallelism over the "model" axis.
+
+Two implementations (``cfg.moe_impl``):
+
+* ``dense`` — every (local) expert processes every token; the top-k combine
+  weights zero out non-selected experts.  GSPMD-clean: experts shard over
+  "model" (EP), each device computes only its local experts and the final
+  combine is a partial sum -> all-reduce.  FLOP overhead = n_experts / top_k
+  on the expert matmuls (visible in the roofline useful-FLOP ratio).  Token
+  chunking bounds the (E_local, B, Sc, d_ff) transient.
+
+* ``capacity`` — GShard-style fixed-capacity gather: each expert processes at
+  most C = tokens * top_k / E * capacity_factor tokens, gathered by top-C
+  routing score.  Active-FLOPs only (the beyond-paper §Perf optimization);
+  over-capacity tokens are dropped (standard), under-capacity slots padded.
+
+Router always computes in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .layers import act_fn
+from .spec import ParamSpec
+
+
+def moe_spec(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.param_dtype
+    spec = {
+        # router stays replicated: it is tiny (d x E) and sharding its
+        # contracting dim forces an f32 reshard of the full activation
+        "router": ParamSpec((d, e), (None, None), dt),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"), dt),
+        "wu": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"), dt),
+        "wd": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed"), dt),
+    }
+    if cfg.shared_expert:
+        spec["shared"] = {
+            "wg": ParamSpec((d, f), ("embed", "mlp"), dt),
+            "wu": ParamSpec((d, f), ("embed", "mlp"), dt),
+            "wd": ParamSpec((f, d), ("mlp", "embed"), dt),
+        }
+    return spec
+
+
+def _router(cfg, p, x):
+    """Top-k routing.  Returns combine weights (B, S, E) in f32.
+
+    x stays in compute dtype (upcasting the full activation costs a
+    param-d-sized f32 buffer per layer); the einsum accumulates in f32.
+    """
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if cfg.top_k >= cfg.n_experts:
+        return probs
+    vals, idx = jax.lax.top_k(probs, cfg.top_k)          # (B,S,k)
+    vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    combine = jnp.zeros_like(probs)
+    combine = jnp.put_along_axis(combine, idx, vals, axis=-1,
+                                 inplace=False)
+    return combine
+
+
+def _glu(cfg, wg, wu, wd, x, combine, compute_dtype):
+    """Experts einsum: x (B,Sc,d), combine (B,Sc,E) -> (B,Sc,d)."""
+    a = act_fn(cfg.act)
+    g = jnp.einsum("bsd,edf->ebsf", x, wg.astype(compute_dtype))
+    u = jnp.einsum("bsd,edf->ebsf", x, wu.astype(compute_dtype))
+    h = a(g) * u
+    h = h * combine.transpose(2, 0, 1)[..., None].astype(compute_dtype)
+    return jnp.einsum("ebsf,efd->bsd", h, wd.astype(compute_dtype))
+
+
+def moe_dense(cfg, p: dict, x: jax.Array, compute_dtype,
+              token_chunk: int = 1024) -> jax.Array:
+    """Dense-compute MoE with sequence chunking.  x: (B, S, d)."""
+    B, S, d = x.shape
+    decode = S == 1
+    if decode:
+        # weight-stationary decode: activations are tiny (B tokens) while the
+        # FSDP-sharded expert weights are huge — replicating x lets GSPMD
+        # keep weights in place and psum the (E,B,1,f) partials instead of
+        # all-gathering full f32 expert matrices every layer.
+        x = constrain(x, (None, "seq", "act_embed"))
+    combine = _router(cfg, p, x)
+    sc = min(token_chunk, S)
+    if S % sc:
+        sc = S
+    n = S // sc
+
+    if n == 1:
+        y = _glu(cfg, p["wg"], p["wu"], p["wd"], x, combine, compute_dtype)
+    else:
+        xs = x.reshape(B, n, sc, d).transpose(1, 0, 2, 3)
+        cs = combine.reshape(B, n, sc, cfg.n_experts).transpose(1, 0, 2, 3)
+
+        def step(_, xc):
+            xi, ci = xc
+            return None, _glu(cfg, p["wg"], p["wu"], p["wd"], xi, ci,
+                              compute_dtype)
+
+        _, ys = jax.lax.scan(step, None, (xs, cs))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, d)
+
+    if cfg.shared_expert:
+        sp = p["shared"]
+        a = act_fn(cfg.act)
+        h = a(jnp.einsum("bsd,df->bsf", x, sp["wg"].astype(compute_dtype))) \
+            * jnp.einsum("bsd,df->bsf", x, sp["wu"].astype(compute_dtype))
+        h = constrain(h, ("batch", "seq", "mlp"))
+        y = y + jnp.einsum("bsf,fd->bsd", h, sp["wd"].astype(compute_dtype))
+    if decode:
+        y = constrain(y, ("batch", "seq", "act_embed"))
+    return constrain(y, ("batch", "seq", "act_embed"))
+
+
+def moe_capacity(cfg, p: dict, x: jax.Array, compute_dtype,
+                 capacity_factor: float = 1.25) -> jax.Array:
+    """Fixed-capacity expert-parallel MoE (active FLOPs only).
+
+    GShard-style with **groups = batch rows**: each row selects its top-C
+    tokens per expert along the (un-sharded) sequence axis, so every gather
+    and scatter is device-local under GSPMD (batch stays data-sharded, the
+    expert axis stays model-sharded).  Over-capacity tokens are dropped
+    (standard); the combine weight re-weights survivors.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    combine = _router(cfg, p, x)                          # (B, S, E) f32
+
+    C = int(S * k / E * capacity_factor)
+    C = min(max(C, 1), S)
+
+    # Per-(row, expert) top-C token selection by combine weight.
+    scores = combine.transpose(0, 2, 1)                   # (B, E, S)
+    top_w, top_idx = jax.lax.top_k(scores, C)             # (B, E, C)
+    # flat gather along S (no (B,E,S,d) operand broadcast under GSPMD)
+    gathered = jnp.take_along_axis(
+        x, top_idx.reshape(B, E * C)[..., None], axis=1)  # (B, E*C, d)
+    gathered = gathered.reshape(B, E, C, d)
+    gathered = constrain(gathered, ("batch", "experts", None, "act_embed"))
+
+    a = act_fn(cfg.act)
+
+    def expert_glu(xc, wc):
+        g = jnp.einsum("becd,edf->becf", xc, p["wg"].astype(compute_dtype))
+        u = jnp.einsum("becd,edf->becf", xc, p["wu"].astype(compute_dtype))
+        h = (a(g) * u) * wc[..., None].astype(compute_dtype)
+        return jnp.einsum("becf,efd->becd", h, p["wd"].astype(compute_dtype))
+
+    cc = 512                      # capacity chunk bounds einsum transients
+    if C > cc and C % cc == 0:
+        nc = C // cc
+        xs = (gathered.reshape(B, E, nc, cc, d).transpose(2, 0, 1, 3, 4),
+              top_w.reshape(B, E, nc, cc).transpose(2, 0, 1, 3))
+
+        def step(_, xc):
+            return None, expert_glu(*xc)
+
+        _, outs = jax.lax.scan(step, None, xs)
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(B, E, C, d)
+    else:
+        out = expert_glu(gathered, top_w)
+
+    idx_flat = top_idx.reshape(B, E * C)
+    vals = out.reshape(B, E * C, d)
+    if cfg.remat == "none":
+        # Serving: reshard the (small) slot values from expert-sharded to
+        # replicated with a bf16 all-gather BEFORE the combine — otherwise
+        # GSPMD implements the cross-expert combine as a full-activation f32
+        # all-reduce (2x bytes, f32 buffers).  In training the gather's
+        # backward doubles live memory, so the combine stays expert-sharded.
+        vals = constrain(vals, ("batch", None, "act_embed"))
+    if k == 1:
+        # top-1: every token occupies at most one NONZERO-weight slot —
+        # combine by INVERSE GATHER instead of scatter-add (bf16
+        # scatter-adds get upcast to f32 and the EP partial sums all-reduce
+        # full f32 activations; the int32 inverse-index scatter is 1000x
+        # smaller).  Zero-weight slots (capacity padding of other experts)
+        # are dropped from the inverse.
+        idx_inv = jnp.where(top_w.reshape(B, E * C) > 0, idx_flat, S)
+        inv = jax.vmap(lambda idxb: jnp.full((S,), -1, jnp.int32)
+                       .at[idxb].max(jnp.arange(E * C, dtype=jnp.int32),
+                                     mode="drop")
+                       )(idx_inv)
+        sel = inv >= 0
+        y = jnp.take_along_axis(
+            vals, jnp.maximum(inv, 0)[..., None], axis=1)
+        y = jnp.where(sel[..., None], y, jnp.zeros((), compute_dtype))
+    else:
+        # top-k: batched scatter-add (vmap keeps the batch dim aligned under
+        # GSPMD)
+        y = jax.vmap(lambda idxb, valsb: jnp.zeros(
+            (S, d), compute_dtype).at[idxb].add(valsb))(idx_flat, vals)
+
+    if cfg.shared_expert:
+        sp = p["shared"]
+        h = a(jnp.einsum("bsd,df->bsf", x, sp["wg"].astype(compute_dtype))) \
+            * jnp.einsum("bsd,df->bsf", x, sp["wu"].astype(compute_dtype))
+        h = constrain(h, ("batch", "seq", "mlp"))
+        y = y + jnp.einsum("bsf,fd->bsd", h, sp["wd"].astype(compute_dtype))
+    return constrain(y, ("batch", "seq", "act_embed"))
+
+
+def moe_ffn(cfg, p: dict, x: jax.Array, compute_dtype) -> jax.Array:
+    impl = getattr(cfg, "moe_impl", "dense")
+    # decode (S == 1): the dense path is exact and trivially cheap
+    if impl == "capacity" and x.shape[1] > 1:
+        return moe_capacity(cfg, p, x, compute_dtype)
+    return moe_dense(cfg, p, x, compute_dtype)

@@ -1,0 +1,362 @@
+"""Recurrent sequence-mixing blocks: RG-LRU (RecurrentGemma), mLSTM and sLSTM
+(xLSTM).  All recurrences run in float32; linear recurrences use
+``jax.lax.associative_scan`` (log-depth), the non-linear sLSTM uses
+``lax.scan``; mLSTM uses the chunkwise-parallel form (quadratic inside a
+chunk, recurrent across chunks) so training memory stays bounded.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .layers import act_fn
+from .spec import ParamSpec
+
+LRU_C = 8.0          # RG-LRU decay exponent constant (RecurrentGemma)
+
+
+# ===========================================================================
+# RG-LRU
+# ===========================================================================
+
+def _lru_blocks(cfg):
+    """Block-diagonal gate structure (RecurrentGemma: per-head blocks).
+    Blocks align with the model-axis sharding of the LRU width, keeping the
+    gate einsums device-local (a dense W x W gate would all-gather the full
+    (B, S, W) activation every recurrent layer)."""
+    w = cfg.lru_width or cfg.d_model
+    nb = cfg.n_heads
+    while w % nb:
+        nb //= 2
+    return nb, w // nb
+
+
+def rglru_spec(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    cw = cfg.conv_width
+    dt = cfg.param_dtype
+    nb, wb = _lru_blocks(cfg)
+    return {
+        "in_x": ParamSpec((d, w), ("embed", "lru"), dt),
+        "in_y": ParamSpec((d, w), ("embed", "lru"), dt),
+        "conv_w": ParamSpec((cw, w), ("conv", "lru"), dt),
+        "conv_b": ParamSpec((w,), ("lru",), dt, init="zeros"),
+        "gate_a": ParamSpec((nb, wb, wb), ("lru_blocks", None, None), dt),
+        "gate_a_b": ParamSpec((w,), ("lru",), dt, init="zeros"),
+        "gate_x": ParamSpec((nb, wb, wb), ("lru_blocks", None, None), dt),
+        "gate_x_b": ParamSpec((w,), ("lru",), dt, init="zeros"),
+        "lamb": ParamSpec((w,), ("lru",), dt, init="lambda_lru"),
+        "out": ParamSpec((w, d), ("lru", "embed"), dt),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, w) recurrent state, f32
+    conv: jax.Array       # (B, conv_width - 1, w) conv tail
+
+
+def rglru_zero_state(cfg, batch: int, dtype=jnp.float32) -> RGLRUState:
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUState(h=jnp.zeros((batch, w), dtype),
+                      conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None):
+    """Depthwise causal conv along time.  x: (B, S, w); w: (cw, w)."""
+    cw = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = tail.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, S+cw-1, w)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(cw))
+    new_tail = xp[:, -(cw - 1):] if cw > 1 else None
+    return out + b[None, None], new_tail
+
+
+def _rglru_core(p, xw: jax.Array, h0: jax.Array):
+    """The RG-LRU recurrence.  xw: (B, S, w) f32; h0: (B, w) f32.
+
+    Gates are block-diagonal per head (RecurrentGemma), computed with a
+    batched per-block einsum — fully local when blocks align with the
+    model-axis sharding of W."""
+    B, S, W = xw.shape
+    nb, wb, _ = p["gate_a"].shape
+    x4 = constrain(xw.reshape(B, S, nb, wb),
+                   ("batch", "seq", "lru_blocks", None))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bshw,hwv->bshv", x4,
+                   p["gate_a"].astype(jnp.float32)).reshape(B, S, W)
+        + p["gate_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        jnp.einsum("bshw,hwv->bshv", x4,
+                   p["gate_x"].astype(jnp.float32)).reshape(B, S, W)
+        + p["gate_x_b"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lamb"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xw
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * gated_x
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan over time, seeded with h0
+    # by folding h0 into the first step: b_0' = a_0 h0 + b_0.
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block(cfg, p: dict, x: jax.Array, compute_dtype,
+                state: Optional[RGLRUState] = None):
+    """Full RG-LRU temporal block: in-proj, causal conv, recurrence, gated out.
+
+    x: (B, S, d).  Returns (y, new_state).
+    """
+    B, S, d = x.shape
+    cd = compute_dtype
+    y_branch = act_fn("gelu")(jnp.einsum("bsd,dw->bsw", x,
+                                         p["in_y"].astype(cd)))
+    xw = jnp.einsum("bsd,dw->bsw", x, p["in_x"].astype(cd))
+    xw = constrain(xw, ("batch", "seq", "lru"))
+    tail = state.conv if state is not None else None
+    xw, new_tail = _causal_conv(xw, p["conv_w"].astype(cd),
+                                p["conv_b"].astype(cd), tail)
+    h0 = (state.h if state is not None
+          else jnp.zeros((B, xw.shape[-1]), jnp.float32))
+    h, h_last = _rglru_core(p, xw.astype(jnp.float32), h0)
+    h = constrain(h.astype(cd), ("batch", "seq", "lru"))
+    out = jnp.einsum("bsw,wd->bsd", h * y_branch, p["out"].astype(cd))
+    new_state = RGLRUState(
+        h=h_last,
+        conv=(new_tail.astype(jnp.float32) if new_tail is not None
+              else jnp.zeros((B, 0, xw.shape[-1]), jnp.float32)))
+    return constrain(out, ("batch", "seq", "act_embed")), new_state
+
+
+# ===========================================================================
+# mLSTM (chunkwise-parallel matrix memory)
+# ===========================================================================
+
+def mlstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    m = 2 * d                      # up-projection factor 2 (xLSTM)
+    h = cfg.n_heads
+    dt = cfg.param_dtype
+    return {
+        "up": ParamSpec((d, m), ("embed", "lru"), dt),
+        "wq": ParamSpec((m, m), ("lru", None), dt),
+        "wk": ParamSpec((m, m), ("lru", None), dt),
+        "wv": ParamSpec((m, m), ("lru", None), dt),
+        "w_if": ParamSpec((d, 2 * h), ("embed", None), dt),
+        "b_if": ParamSpec((2 * h,), (None,), dt, init="zeros"),
+        "w_o": ParamSpec((d, m), ("embed", "lru"), dt),
+        "down": ParamSpec((m, d), ("lru", "embed"), dt),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array     # (B, H, Dh, Dh) matrix memory, f32
+    n: jax.Array     # (B, H, Dh) normalizer, f32
+    m: jax.Array     # (B, H) running max exponent, f32
+
+
+def mlstm_zero_state(cfg, batch: int) -> MLSTMState:
+    h = cfg.n_heads
+    dh = 2 * cfg.d_model // h
+    return MLSTMState(C=jnp.zeros((batch, h, dh, dh), jnp.float32),
+                      n=jnp.zeros((batch, h, dh), jnp.float32),
+                      m=jnp.zeros((batch, h), jnp.float32))
+
+
+def _mlstm_chunk(q, k, v, li, lf, state: MLSTMState):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B,H,L,Dh) f32; li,lf: (B,H,L) f32 (log input gate, log forget).
+    """
+    B, H, L, Dh = q.shape
+    C0, n0, m0 = state
+    b = jnp.cumsum(lf, axis=-1)                      # (B,H,L) inclusive
+    F = b[..., -1]                                   # (B,H)
+
+    # per-position stabilizer
+    intra_exp = b[..., :, None] - b[..., None, :] + li[..., None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    intra_exp = jnp.where(causal, intra_exp, -jnp.inf)
+    m_intra = intra_exp.max(axis=-1)                 # (B,H,L)
+    m_inter = m0[..., None] + b                      # (B,H,L)
+    m_t = jnp.maximum(m_inter, m_intra)
+    m_t = jnp.maximum(m_t, -1e30)
+
+    g_inter = jnp.exp(m_inter - m_t)                 # (B,H,L)
+    w_intra = jnp.exp(intra_exp - m_t[..., None])
+    w_intra = jnp.where(causal, w_intra, 0.0)
+
+    scores = jnp.einsum("bhld,bhsd->bhls", q, k) * w_intra
+    h_num = (g_inter[..., None] * jnp.einsum("bhld,bhde->bhle", q, C0)
+             + jnp.einsum("bhls,bhsd->bhld", scores, v))
+    n_t = (g_inter * jnp.einsum("bhld,bhd->bhl", q, n0)
+           + scores.sum(axis=-1))
+    denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-m_t))
+    h_out = h_num / denom[..., None]
+
+    # state update to end of chunk
+    s_exp = F[..., None] - b + li                    # (B,H,L)
+    m_next = jnp.maximum(m0 + F, s_exp.max(axis=-1))
+    decay_old = jnp.exp(m0 + F - m_next)
+    w_new = jnp.exp(s_exp - m_next[..., None])       # (B,H,L)
+    C1 = (decay_old[..., None, None] * C0
+          + jnp.einsum("bhl,bhld,bhle->bhde", w_new, k, v))
+    n1 = decay_old[..., None] * n0 + jnp.einsum("bhl,bhld->bhd", w_new, k)
+    return h_out, MLSTMState(C=C1, n=n1, m=m_next)
+
+
+def mlstm_block(cfg, p: dict, x: jax.Array, compute_dtype,
+                state: Optional[MLSTMState] = None):
+    """x: (B, S, d) -> (y, new_state).  S must divide by cfg.mlstm_chunk (or
+    be smaller)."""
+    B, S, d = x.shape
+    cd = compute_dtype
+    H = cfg.n_heads
+    m = 2 * d
+    Dh = m // H
+    xm = jnp.einsum("bsd,dm->bsm", x, p["up"].astype(cd))
+    xm = constrain(xm, ("batch", "seq", "lru"))
+
+    def heads(w):
+        y = jnp.einsum("bsm,mn->bsn", xm, w.astype(cd))
+        return y.reshape(B, S, H, Dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q = heads(p["wq"]) * (Dh ** -0.5)
+    k = heads(p["wk"]) * (Dh ** -0.5)
+    v = heads(p["wv"])
+    gif = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                     p["w_if"].astype(jnp.float32)) + p["b_if"].astype(
+                         jnp.float32)
+    li = gif[..., :H].transpose(0, 2, 1)             # (B,H,S) log input gate
+    lf = jax.nn.log_sigmoid(gif[..., H:]).transpose(0, 2, 1)
+
+    st = state if state is not None else mlstm_zero_state(cfg, B)
+    L = min(cfg.mlstm_chunk, S)
+    if S % L:
+        L = S
+    n_chunks = S // L
+
+    if n_chunks == 1:
+        h_out, st = _mlstm_chunk(q, k, v, li, lf, st)
+    else:
+        def split(t):
+            return t.reshape(B, H, n_chunks, L, *t.shape[3:]).transpose(
+                2, 0, 1, 3, *range(4, t.ndim + 1))
+        qs, ks, vs = split(q), split(k), split(v)
+        lis = li.reshape(B, H, n_chunks, L).transpose(2, 0, 1, 3)
+        lfs = lf.reshape(B, H, n_chunks, L).transpose(2, 0, 1, 3)
+
+        chunk_fn = jax.checkpoint(_mlstm_chunk)
+
+        def step(carry, xs):
+            qi, ki, vi, lii, lfi = xs
+            h, new = chunk_fn(qi, ki, vi, lii, lfi, carry)
+            return new, h
+
+        st, hs = jax.lax.scan(step, st, (qs, ks, vs, lis, lfs))
+        h_out = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, Dh)
+
+    h_seq = h_out.transpose(0, 2, 1, 3).reshape(B, S, m).astype(cd)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dm->bsm", x, p["w_o"].astype(cd)))
+    y = jnp.einsum("bsm,md->bsd", h_seq * o, p["down"].astype(cd))
+    return constrain(y, ("batch", "seq", "act_embed")), st
+
+
+# ===========================================================================
+# sLSTM (scalar memory, exponential gating; sequential scan)
+# ===========================================================================
+
+def slstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    dt = cfg.param_dtype
+    f = cfg.d_ff if cfg.d_ff else ((4 * d // 3 + 127) // 128) * 128
+    return {
+        "w": ParamSpec((d, 4 * d), ("embed", "lru"), dt),       # z,i,f,o
+        "r": ParamSpec((h, dh, 4 * dh), (None, None, None), dt),
+        "b": ParamSpec((4 * d,), ("lru",), dt, init="zeros"),
+        "ffn_g": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "ffn_u": ParamSpec((d, f), ("embed", "mlp"), dt),
+        "ffn_d": ParamSpec((f, d), ("mlp", "embed"), dt),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array     # (B, d) cell, f32
+    n: jax.Array     # (B, d) normalizer, f32
+    m: jax.Array     # (B, d) stabilizer, f32
+    h: jax.Array     # (B, d) hidden, f32
+
+
+def slstm_zero_state(cfg, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z, m=z, h=z)
+
+
+def _slstm_step(cfg, p, state: SLSTMState, wx_t: jax.Array):
+    """wx_t: (B, 4d) precomputed input projection at time t."""
+    B = wx_t.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    c, n, m, h = state
+    # recurrent projection, block-diagonal per head
+    hh = h.reshape(B, H, Dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh,
+                     p["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    pre = wx_t + rec
+    z_, i_, f_, o_ = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    # stabilized exponential gating
+    log_f = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(log_f + m, i_)
+    i = jnp.exp(i_ - m_new)
+    f = jnp.exp(log_f + m - m_new)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return SLSTMState(c=c_new, n=n_new, m=m_new, h=h_new)
+
+
+def slstm_block(cfg, p: dict, x: jax.Array, compute_dtype,
+                state: Optional[SLSTMState] = None):
+    """x: (B, S, d) -> (y, new_state)."""
+    B, S, d = x.shape
+    cd = compute_dtype
+    wx = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                    p["w"].astype(jnp.float32)) + p["b"].astype(jnp.float32)
+    st = state if state is not None else slstm_zero_state(cfg, B)
+
+    step_fn = jax.checkpoint(lambda carry, wx_t: _slstm_step(cfg, p, carry,
+                                                             wx_t))
+
+    def step(carry, wx_t):
+        new = step_fn(carry, wx_t)
+        return new, new.h
+
+    st, hs = jax.lax.scan(step, st, wx.transpose(1, 0, 2))
+    h_seq = hs.transpose(1, 0, 2).astype(cd)         # (B, S, d)
+    a = act_fn(cfg.act)
+    g = jnp.einsum("bsd,df->bsf", h_seq, p["ffn_g"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", h_seq, p["ffn_u"].astype(cd))
+    y = jnp.einsum("bsf,fd->bsd", a(g) * u, p["ffn_d"].astype(cd))
+    return constrain(y, ("batch", "seq", "act_embed")), st

@@ -1,0 +1,629 @@
+"""Model assembly: decoder-only LMs (dense / MoE / SSM / hybrid), the whisper
+encoder-decoder, and VLM early-fusion — all driven by :class:`ArchConfig`.
+
+Layers are grouped into repeating **super-blocks** (e.g. recurrentgemma's
+(rglru, rglru, attn)) and scanned with stacked parameters; a non-dividing
+tail is unrolled.  The same stacks drive ``forward`` (train), ``prefill``
+(returns a KV/state cache) and ``decode_step`` (one token against the cache,
+scanned over layers).
+
+KV caches are ring buffers of per-kind size (full context for full attention,
+``window`` for sliding, ``chunk`` for local-chunked) with absolute slot
+positions; the cache sequence axis carries the logical name ``kv_seq_mp``
+(model-sharded => GSPMD flash-decoding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec
+from .layers import (apply_norm, norm_spec, mlp_spec, apply_mlp, embed_spec,
+                     embed_lookup, unembed, cross_entropy,
+                     sinusoidal_positions)
+from .spec import ParamSpec, is_spec
+
+
+def _kv_quant(k: jax.Array):
+    """Per-(batch, slot, head) absmax int8 quantization of K/V."""
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(k.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(dtype) * scale[..., None].astype(dtype))
+
+ATTN_KINDS = ("attn", "sliding", "chunked", "global_nope", "xattn", "enc")
+
+
+def ffn_kind(kind: str) -> str:
+    """'moe:chunked' -> 'moe';  'attn' -> 'attn'."""
+    return kind.split(":")[0]
+
+
+def attn_kind(kind: str) -> str:
+    """'moe:chunked' -> 'chunked';  'moe' -> 'moe'."""
+    return kind.split(":")[-1]
+
+
+# ---------------------------------------------------------------------------
+# Super-block structure
+# ---------------------------------------------------------------------------
+
+def super_block(cfg):
+    """(pattern, n_repeat, tail_kinds) for the decoder stack."""
+    if cfg.block_pattern:
+        pat = tuple(cfg.block_pattern)
+        pat = tuple("sliding" if (k == "attn" and cfg.attention == "sliding")
+                    else k for k in pat)
+        n = cfg.n_layers // len(pat)
+        tail = tuple(pat[i] for i in range(cfg.n_layers - n * len(pat)))
+        return pat, n, tail
+    if cfg.attention == "chunked_global" and cfg.global_every:
+        g = cfg.global_every
+        pre = "moe:" if cfg.n_experts else ""
+        pat = tuple([pre + "chunked"] * (g - 1) + [pre + "global_nope"])
+        n = cfg.n_layers // g
+        tail = tuple(pat[i] for i in range(cfg.n_layers - n * g))
+        return pat, n, tail
+    if cfg.is_encoder_decoder:
+        return ("xattn",), cfg.n_layers, ()
+    kind = ("moe" if cfg.n_experts else
+            ("sliding" if cfg.attention == "sliding" else "attn"))
+    return (kind,), cfg.n_layers, ()
+
+
+def _kind_spec(cfg, kind: str) -> dict:
+    kind = ffn_kind(kind)
+    d, dt = cfg.d_model, cfg.param_dtype
+    nk = cfg.norm
+    if kind in ("attn", "sliding", "chunked", "global_nope", "enc"):
+        return {"ln1": norm_spec(d, nk),
+                "attn": attn.attn_spec(cfg),
+                "ln2": norm_spec(d, nk),
+                "mlp": mlp_spec(d, cfg.d_ff, cfg.mlp, dt)}
+    if kind == "xattn":
+        return {"ln1": norm_spec(d, nk),
+                "attn": attn.attn_spec(cfg),
+                "lnx": norm_spec(d, nk),
+                "xattn": attn.attn_spec(cfg, cross=True),
+                "ln2": norm_spec(d, nk),
+                "mlp": mlp_spec(d, cfg.d_ff, cfg.mlp, dt)}
+    if kind == "moe":
+        return {"ln1": norm_spec(d, nk),
+                "attn": attn.attn_spec(cfg),
+                "ln2": norm_spec(d, nk),
+                "moe": moe_mod.moe_spec(cfg)}
+    if kind == "rglru":
+        return {"ln1": norm_spec(d, nk),
+                "rglru": rec.rglru_spec(cfg),
+                "ln2": norm_spec(d, nk),
+                "mlp": mlp_spec(d, cfg.d_ff, cfg.mlp, dt)}
+    if kind == "mlstm":
+        return {"ln1": norm_spec(d, nk), "mlstm": rec.mlstm_spec(cfg)}
+    if kind == "slstm":
+        return {"ln1": norm_spec(d, nk), "slstm": rec.slstm_spec(cfg)}
+    raise ValueError(kind)
+
+
+def _stack(spec_tree, n: int):
+    def add(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.dtype,
+                         s.init, fan_axis=-2 if len(s.shape) >= 2 else -1)
+    return jax.tree.map(add, spec_tree, is_leaf=is_spec)
+
+
+def model_spec(cfg) -> dict:
+    """Full parameter tree of ParamSpec leaves."""
+    d, dt = cfg.d_model, cfg.param_dtype
+    pat, n, tail = super_block(cfg)
+    spec: dict = {
+        "embed": embed_spec(cfg.padded_vocab(), d, dt),
+        "final_norm": norm_spec(d, cfg.norm),
+        "stages": tuple(_stack(_kind_spec(cfg, k), n) for k in pat),
+        "tail": tuple(_kind_spec(cfg, k) for k in tail),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec((d, cfg.padded_vocab()),
+                                    ("embed", "vocab"), dt)
+    if cfg.is_encoder_decoder:
+        spec["encoder"] = {
+            "stage": _stack(_kind_spec(cfg, "enc"), cfg.n_encoder_layers),
+            "final_norm": norm_spec(d, cfg.norm),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Per-kind forward (full-sequence mode: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _cache_len(cfg, kind: str, max_seq: int) -> int:
+    kind = attn_kind(kind)
+    if kind == "sliding":
+        return min(cfg.window, max_seq)
+    if kind == "chunked":
+        return min(cfg.chunk, max_seq)
+    return max_seq
+
+
+def _attn_mode(kind: str) -> tuple:
+    """kind -> (mode, use_rope_default)"""
+    kind = attn_kind(kind)
+    return {
+        "attn": ("causal", True),
+        "moe": ("causal", True),            # MoE blocks use standard attention
+        "sliding": ("sliding", True),
+        "chunked": ("chunked", True),
+        "global_nope": ("causal", False),   # llama4 NoPE global layers
+        "enc": ("bidir", False),
+        "xattn": ("causal", False),         # whisper: sinusoidal, not rope
+    }[kind]
+
+
+def apply_layer_full(cfg, kind: str, p: dict, x: jax.Array,
+                     positions: jax.Array, *, collect_cache: bool,
+                     max_seq: int, enc_kv=None):
+    """One block over the full sequence.  Returns (x, cache_entry)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    S = x.shape[1]
+    cache = None
+    if kind in ("mlstm", "slstm", "rglru"):
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        if kind == "rglru":
+            y, state = rec.rglru_block(cfg, p["rglru"], h, cd)
+            x = x + y
+            h2 = apply_norm(p["ln2"], x, cfg.norm)
+            x = x + apply_mlp(p["mlp"], h2, cfg.mlp, cfg.act, cd)
+        elif kind == "mlstm":
+            y, state = rec.mlstm_block(cfg, p["mlstm"], h, cd)
+            x = x + y
+        else:
+            y, state = rec.slstm_block(cfg, p["slstm"], h, cd)
+            x = x + y
+        if collect_cache:
+            cache = state
+        return x, cache
+
+    mode, use_rope = _attn_mode(kind)
+    if cfg.is_encoder_decoder:
+        use_rope = False
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    y, (k, v) = attn.self_attention(
+        cfg, p["attn"], h, positions, mode=mode, use_rope=use_rope,
+        compute_dtype=cd, window=cfg.window, chunk=cfg.chunk)
+    x = x + y
+    cross = None
+    if kind == "xattn":
+        hx = apply_norm(p["lnx"], x, cfg.norm)
+        y, cross = attn.cross_attention(cfg, p["xattn"], hx, enc_kv, cd)
+        x = x + y
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    if ffn_kind(kind) == "moe":
+        x = x + moe_mod.moe_ffn(cfg, p["moe"], h2, cd)
+    else:
+        x = x + apply_mlp(p["mlp"], h2, cfg.mlp, cfg.act, cd)
+
+    if collect_cache and kind != "enc":
+        Sc = _cache_len(cfg, kind, max_seq)
+        kc = _to_cache(k, Sc)
+        vc = _to_cache(v, Sc)
+        kc = constrain(kc, ("batch", "kv_seq_mp", "kv_heads", "head_dim"))
+        vc = constrain(vc, ("batch", "kv_seq_mp", "kv_heads", "head_dim"))
+        if cfg.kv_cache_dtype == "int8":
+            kc, ks = _kv_quant(kc)
+            vc, vs = _kv_quant(vc)
+            entry = {"k": kc, "k_scale": ks, "v": vc, "v_scale": vs}
+        else:
+            entry = {"k": kc, "v": vc}
+        if kind == "xattn":
+            entry["xk"], entry["xv"] = cross
+        cache = entry
+    return x, cache
+
+
+def _to_cache(k: jax.Array, Sc: int) -> jax.Array:
+    """Lay out prefilled K/V (B, S, H, Dh) as a ring buffer of length Sc
+    where absolute position p sits at slot p % Sc."""
+    S = k.shape[1]
+    if S >= Sc:
+        return jnp.roll(k[:, -Sc:], (S - Sc) % Sc, axis=1)
+    pad = jnp.zeros((k.shape[0], Sc - S) + k.shape[2:], k.dtype)
+    return jnp.concatenate([k, pad], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence stack (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg, params, x, positions, *, collect_cache: bool,
+               max_seq: int, enc_kv=None):
+    pat, n, tail = super_block(cfg)
+    caches = {"stages": [], "tail": []}
+    # remat grouping: checkpoint every g super-blocks instead of every one —
+    # divides the saved-activation stack by g at the cost of recompute depth.
+    g = max(1, getattr(cfg, "remat_group", 1))
+    if n % g:
+        g = 1
+
+    def _layer(kind):
+        def f(xh, psl):
+            return apply_layer_full(
+                cfg, kind, psl, xh, positions,
+                collect_cache=collect_cache, max_seq=max_seq, enc_kv=enc_kv)
+        # multi-kind super-blocks: checkpoint each layer so the backward
+        # recompute working set stays at ONE layer, not the whole pattern.
+        if cfg.remat == "full" and len(pat) > 1:
+            f = jax.checkpoint(f)
+        return f
+
+    layer_fns = [_layer(k) for k in pat]
+
+    def body_one(xh, stage_slices):
+        entries = []
+        for fn, psl in zip(layer_fns, stage_slices):
+            xh, entry = fn(xh, psl)
+            entries.append(entry)
+        return xh, tuple(entries)
+
+    if g == 1:
+        body = body_one
+        xs = params["stages"]
+    else:
+        # two-level (sqrt) remat: inner per-super-block checkpoints keep the
+        # backward recompute working set at ONE block while the outer
+        # checkpoint divides the saved-activation stack by g.
+        inner = jax.checkpoint(body_one) if cfg.remat == "full" else body_one
+
+        def body(xh, grouped):
+            outs = []
+            for i in range(g):
+                sl = jax.tree.map(lambda a, i=i: a[i], grouped)
+                xh, ent = inner(xh, sl)
+                outs.append(ent)
+            stacked = (jax.tree.map(lambda *ys: jnp.stack(ys), *outs)
+                       if collect_cache else tuple(outs))
+            return xh, stacked
+        xs = jax.tree.map(
+            lambda a: a.reshape((n // g, g) + a.shape[1:]), params["stages"])
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    x, stage_caches = jax.lax.scan(body, x, xs)
+    if g > 1 and collect_cache:
+        # (n/g, g, ...) -> (n, ...)
+        stage_caches = jax.tree.map(
+            lambda a: a.reshape((n,) + a.shape[2:]), stage_caches)
+    caches["stages"] = stage_caches       # leaves have leading (n,) axis
+
+    for kind, psl in zip(tail, params["tail"]):
+        x, entry = apply_layer_full(cfg, kind, psl, x, positions,
+                                    collect_cache=collect_cache,
+                                    max_seq=max_seq, enc_kv=enc_kv)
+        caches["tail"].append(entry)
+    caches["tail"] = tuple(caches["tail"])
+    return x, caches
+
+
+def _run_encoder(cfg, params, frames: jax.Array):
+    """whisper encoder over stub frame embeddings (B, F, d)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = frames.astype(cd)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(cd)[None]
+    positions = jnp.arange(x.shape[1])
+
+    def body(xh, psl):
+        xh, _ = apply_layer_full(cfg, "enc", psl, xh, positions,
+                                 collect_cache=False, max_seq=x.shape[1])
+        return xh, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["stage"])
+    return apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points: forward (logits), loss, prefill, decode
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, tokens, prefix=None):
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(params["embed"], tokens, cd)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cd)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(cd), x], axis=1)
+        x = constrain(x, ("batch", "seq", "act_embed"))
+    return x
+
+
+def forward(cfg, params, tokens, *, prefix=None, frames=None,
+            collect_cache: bool = False, max_cache_seq: Optional[int] = None):
+    """Full-sequence forward.  Returns (logits, cache_or_None).
+
+    tokens: (B, S) int32; prefix: (B, P, d) early-fusion embeddings (vlm);
+    frames: (B, F, d) stub audio frame embeddings (whisper).
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    enc_kv = None
+    if cfg.is_encoder_decoder:
+        assert frames is not None
+        enc_out = _run_encoder(cfg, params, frames)
+        # cross-attention K/V computed once per layer inside blocks would
+        # re-project per layer; whisper shares the encoder output, so we
+        # pre-project per *layer stack* lazily inside apply via enc_out.
+        enc_kv = enc_out
+
+    x = _embed_inputs(cfg, params, tokens, prefix)
+    if cfg.is_encoder_decoder:
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(cd)[None]
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    max_seq = max_cache_seq or S
+
+    x, caches = _run_stack(cfg, params, x, positions,
+                           collect_cache=collect_cache, max_seq=max_seq,
+                           enc_kv=enc_kv)
+    if collect_cache:
+        # serving prefill: only the next-token logits are needed
+        x = x[:, -1:]
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cd, transpose=True)
+    else:
+        logits = unembed(params["lm_head"], x, cd, transpose=False)
+    if not collect_cache:
+        return logits, None
+    cache = {"layers": caches, "pos": jnp.asarray(S, jnp.int32),
+             "slot_pos": _prefill_slot_pos(cfg, S, max_seq)}
+    return logits, cache
+
+
+def _prefill_slot_pos(cfg, S: int, max_seq: int) -> dict:
+    """Absolute slot positions per distinct cache length (-1 = empty)."""
+    pat, _, tail = super_block(cfg)
+    out = {}
+    for kind in {attn_kind(k) for k in set(pat) | set(tail)}:
+        if kind in ("mlstm", "slstm", "rglru", "enc"):
+            continue
+        Sc = _cache_len(cfg, kind, max_seq)
+        if S >= Sc:
+            pos = jnp.arange(S - Sc, S, dtype=jnp.int32)
+            out[kind] = jnp.roll(pos, (S - Sc) % Sc)
+        else:
+            out[kind] = jnp.concatenate(
+                [jnp.arange(S, dtype=jnp.int32),
+                 jnp.full((Sc - S,), -1, jnp.int32)])
+    return out
+
+
+def loss_fn(cfg, params, batch) -> jax.Array:
+    """Mean next-token cross-entropy; prefix/frames handled per family."""
+    logits, _ = forward(cfg, params, batch["tokens"],
+                        prefix=batch.get("prefix"),
+                        frames=batch.get("frames"))
+    labels = batch["labels"]
+    if "prefix" in batch and batch["prefix"] is not None:
+        P = batch["prefix"].shape[1]
+        logits = logits[:, P:]
+    mask = (labels >= 0)
+    labels = jnp.maximum(labels, 0)
+    return cross_entropy(logits, labels, mask, real_vocab=cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def apply_layer_decode(cfg, kind: str, p: dict, x: jax.Array, entry,
+                       slot_pos, pos, enc_out=None):
+    """One block for a single token.  x: (B, 1, d).  Returns (x, new_entry)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    if kind in ("mlstm", "slstm", "rglru"):
+        h = apply_norm(p["ln1"], x, cfg.norm)
+        if kind == "rglru":
+            y, state = rec.rglru_block(cfg, p["rglru"], h, cd, state=entry)
+            x = x + y
+            h2 = apply_norm(p["ln2"], x, cfg.norm)
+            x = x + apply_mlp(p["mlp"], h2, cfg.mlp, cfg.act, cd)
+        elif kind == "mlstm":
+            y, state = rec.mlstm_block(cfg, p["mlstm"], h, cd, state=entry)
+            x = x + y
+        else:
+            y, state = rec.slstm_block(cfg, p["slstm"], h, cd, state=entry)
+            x = x + y
+        return x, state
+
+    mode, use_rope = _attn_mode(kind)
+    if cfg.is_encoder_decoder:
+        use_rope = False
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    q, k1, v1 = attn.project_qkv(cfg, p["attn"], h, pos[None],
+                                 use_rope=use_rope, compute_dtype=cd)
+    Sc = entry["k"].shape[1]
+    slot = pos % Sc
+    new_entry = dict(entry)
+    if cfg.kv_cache_dtype == "int8":
+        k1q, k1s = _kv_quant(k1)
+        v1q, v1s = _kv_quant(v1)
+        ck = jax.lax.dynamic_update_slice_in_dim(entry["k"], k1q, slot,
+                                                 axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(entry["v"], v1q, slot,
+                                                 axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(entry["k_scale"], k1s,
+                                                 slot, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(entry["v_scale"], v1s,
+                                                 slot, axis=1)
+        new_entry["k_scale"], new_entry["v_scale"] = ks, vs
+        ck_c = _kv_dequant(ck, ks, cd)
+        cv_c = _kv_dequant(cv, vs, cd)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(entry["k"], k1, slot,
+                                                 axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(entry["v"], v1, slot,
+                                                 axis=1)
+        ck_c, cv_c = ck, cv
+    sp = slot_pos[attn_kind(kind)]
+    out = attn.decode_attention(cfg, q, ck_c, cv_c, sp, pos, mode=mode,
+                                window=cfg.window, chunk=cfg.chunk)
+    x = x + attn.output_proj(cfg, p["attn"], out, cd)
+    if kind == "xattn":
+        hx = apply_norm(p["lnx"], x, cfg.norm)
+        qx = jnp.einsum("bsd,dhk->bshk", hx, p["xattn"]["wq"].astype(cd))
+        xk, xv = entry["xk"], entry["xv"]
+        F = xk.shape[1]
+        o = attn.decode_attention(cfg, qx, xk, xv,
+                                  jnp.arange(F, dtype=jnp.int32),
+                                  jnp.asarray(F, jnp.int32), mode="bidir")
+        x = x + attn.output_proj(cfg, p["xattn"], o, cd)
+    h2 = apply_norm(p["ln2"], x, cfg.norm)
+    if ffn_kind(kind) == "moe":
+        x = x + moe_mod.moe_ffn(cfg, p["moe"], h2, cd)
+    else:
+        x = x + apply_mlp(p["mlp"], h2, cfg.mlp, cfg.act, cd)
+    new_entry["k"], new_entry["v"] = ck, cv
+    return x, new_entry
+
+
+def decode_step(cfg, params, cache, token):
+    """token: (B, 1) int32.  Returns (logits (B, 1, V), new_cache)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    pat, n, tail = super_block(cfg)
+    pos = cache["pos"]
+    # Mark the current slot BEFORE attention so the new token attends itself.
+    slot_pos = {k: v.at[pos % v.shape[0]].set(pos)
+                for k, v in cache["slot_pos"].items()}
+    x = _embed_inputs(cfg, params, token)
+    if cfg.is_encoder_decoder:
+        x = x + sinusoidal_positions(1, cfg.d_model, offset=pos).astype(cd)
+
+    def body(xh, xs):
+        stage_slices, cache_slices = xs
+        new_entries = []
+        for kind, psl, ent in zip(pat, stage_slices, cache_slices):
+            xh, ne = apply_layer_decode(cfg, kind, psl, xh, ent, slot_pos,
+                                        pos)
+            new_entries.append(ne)
+        return xh, tuple(new_entries)
+
+    x, new_stage_cache = jax.lax.scan(
+        body, x, (params["stages"], cache["layers"]["stages"]))
+
+    new_tail = []
+    for kind, psl, ent in zip(tail, params["tail"],
+                              cache["layers"]["tail"]):
+        x, ne = apply_layer_decode(cfg, kind, psl, x, ent, slot_pos, pos)
+        new_tail.append(ne)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cd, transpose=True)
+    else:
+        logits = unembed(params["lm_head"], x, cd, transpose=False)
+
+    new_cache = dict(cache)
+    new_cache["layers"] = {"stages": new_stage_cache,
+                           "tail": tuple(new_tail)}
+    new_cache["pos"] = pos + 1
+    new_cache["slot_pos"] = slot_pos
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Abstract cache (for dry-run decode without a prefill pass)
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg, batch: int, max_seq: int) -> dict:
+    """Tree of ParamSpec describing the decode cache (ShapeDtypeStruct-able)."""
+    pat, n, tail = super_block(cfg)
+    cd = cfg.compute_dtype
+    dh = cfg.resolved_head_dim
+
+    def kv_entry(kind, stacked_n):
+        Sc = _cache_len(cfg, kind, max_seq)
+        lead = (stacked_n,) if stacked_n is not None else ()
+        lg = ("layers",) if stacked_n is not None else ()
+        kvd = "int8" if cfg.kv_cache_dtype == "int8" else cd
+        e = {"k": ParamSpec(lead + (batch, Sc, cfg.n_kv_heads, dh),
+                            lg + ("batch", "kv_seq_mp", "kv_heads",
+                                  "head_dim"), kvd),
+             "v": ParamSpec(lead + (batch, Sc, cfg.n_kv_heads, dh),
+                            lg + ("batch", "kv_seq_mp", "kv_heads",
+                                  "head_dim"), kvd)}
+        if cfg.kv_cache_dtype == "int8":
+            e["k_scale"] = ParamSpec(
+                lead + (batch, Sc, cfg.n_kv_heads),
+                lg + ("batch", "kv_seq_mp", "kv_heads"), "bfloat16")
+            e["v_scale"] = ParamSpec(
+                lead + (batch, Sc, cfg.n_kv_heads),
+                lg + ("batch", "kv_seq_mp", "kv_heads"), "bfloat16")
+        if kind == "xattn":
+            F = cfg.encoder_seq
+            e["xk"] = ParamSpec(lead + (batch, F, cfg.n_kv_heads, dh),
+                                lg + ("batch", None, "kv_heads", "head_dim"),
+                                cd)
+            e["xv"] = ParamSpec(lead + (batch, F, cfg.n_kv_heads, dh),
+                                lg + ("batch", None, "kv_heads", "head_dim"),
+                                cd)
+        return e
+
+    def state_entry(kind, stacked_n):
+        lead = (stacked_n,) if stacked_n is not None else ()
+        lg = ("layers",) if stacked_n is not None else ()
+        if kind == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            return rec.RGLRUState(
+                h=ParamSpec(lead + (batch, w), lg + ("batch", "lru"),
+                            "float32"),
+                conv=ParamSpec(lead + (batch, cfg.conv_width - 1, w),
+                               lg + ("batch", None, "lru"), "float32"))
+        if kind == "mlstm":
+            h = cfg.n_heads
+            dhh = 2 * cfg.d_model // h
+            return rec.MLSTMState(
+                C=ParamSpec(lead + (batch, h, dhh, dhh),
+                            lg + ("batch", "heads", None, None), "float32"),
+                n=ParamSpec(lead + (batch, h, dhh),
+                            lg + ("batch", "heads", None), "float32"),
+                m=ParamSpec(lead + (batch, h), lg + ("batch", "heads"),
+                            "float32"))
+        if kind == "slstm":
+            d = cfg.d_model
+            z = lambda: ParamSpec(lead + (batch, d), lg + ("batch", "lru"),
+                                  "float32")
+            return rec.SLSTMState(c=z(), n=z(), m=z(), h=z())
+        raise ValueError(kind)
+
+    def entry(kind, stacked_n):
+        if ffn_kind(kind) in ("mlstm", "slstm", "rglru"):
+            return state_entry(kind, stacked_n)
+        return kv_entry(kind, stacked_n)
+
+    slot_pos = {}
+    for kind in {attn_kind(k) for k in set(pat) | set(tail)}:
+        if kind in ("mlstm", "slstm", "rglru", "enc"):
+            continue
+        Sc = _cache_len(cfg, kind, max_seq)
+        slot_pos[kind] = ParamSpec((Sc,), (None,), "int32")
+
+    cache = {
+        "layers": {
+            "stages": tuple(entry(k, n) for k in pat),
+            "tail": tuple(entry(k, None) for k in tail),
+        },
+        "pos": ParamSpec((), (), "int32"),
+        "slot_pos": slot_pos,
+    }
+    return cache

@@ -1,0 +1,3 @@
+from . import adamw, grad_compress
+from .adamw import AdamWConfig, AdamWState, init_state, state_spec, \
+    apply_updates, schedule, global_norm, clip_by_global_norm

@@ -1,0 +1,183 @@
+"""AdamW with decoupled weight decay, global-norm clipping and schedules.
+
+Functional, pytree-based (no optax dependency).  Optimizer slots inherit the
+parameter sharding (FSDP over "data"), so optimizer state is ZeRO-sharded for
+free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # At-scale memory options (used for the 20B+ archs on 16 GiB/chip):
+    factored_second_moment: bool = False   # Adafactor-style row/col v (>=2D)
+    momentum_dtype: str = "float32"        # "bfloat16" halves m
+    master_weights: bool = True            # f32 master when params are bf16
+
+
+class FactoredV(NamedTuple):
+    """Adafactor-style factored second moment for a >=2D tensor: row/col
+    means over the trailing two axes (leading stack axes kept)."""
+    row: jax.Array    # shape[:-1]           (mean over last axis)
+    col: jax.Array    # shape[:-2] + last    (mean over second-to-last)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # int32 scalar
+    m: object            # pytree like params (momentum_dtype)
+    v: object            # pytree: f32 like params, or FactoredV
+    master: object       # f32 master weights when params are bf16, else None
+
+
+def _wants_factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def init_state(params, cfg: "AdamWConfig" = None) -> AdamWState:
+    """Mixed precision: if params are not f32, keep an f32 master copy in the
+    optimizer state (ZeRO-sharded like everything else); the bf16 working
+    copy is what FSDP all-gathers — halving gather bytes."""
+    cfg = cfg or AdamWConfig()
+    mdt = jnp.dtype(cfg.momentum_dtype)
+    m = jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params)
+
+    def mk_v(p):
+        if cfg.factored_second_moment and _wants_factored(p.shape):
+            return FactoredV(row=jnp.zeros(p.shape[:-1], jnp.float32),
+                             col=jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                           jnp.float32))
+        return jnp.zeros(p.shape, jnp.float32)
+    v = jax.tree.map(mk_v, params)
+    needs_master = cfg.master_weights and any(
+        x.dtype != jnp.float32 for x in jax.tree.leaves(params))
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if needs_master else None)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=m, v=v, master=master)
+
+
+def state_spec(param_spec_tree, cfg: "AdamWConfig" = None):
+    """ParamSpec tree for the optimizer state (mirrors parameter sharding)."""
+    from ..models.spec import ParamSpec, is_spec
+    cfg = cfg or AdamWConfig()
+
+    def clone(s, dtype="float32"):
+        return ParamSpec(s.shape, s.logical, dtype, init="zeros")
+    m = jax.tree.map(lambda s: clone(s, cfg.momentum_dtype),
+                     param_spec_tree, is_leaf=is_spec)
+
+    def mk_v(s):
+        if cfg.factored_second_moment and _wants_factored(s.shape):
+            return FactoredV(
+                row=ParamSpec(s.shape[:-1], s.logical[:-1], "float32",
+                              init="zeros"),
+                col=ParamSpec(s.shape[:-2] + s.shape[-1:],
+                              s.logical[:-2] + s.logical[-1:], "float32",
+                              init="zeros"))
+        return clone(s)
+    v = jax.tree.map(mk_v, param_spec_tree, is_leaf=is_spec)
+    needs_master = cfg.master_weights and any(
+        s.dtype != "float32" for s in jax.tree.leaves(
+            param_spec_tree, is_leaf=is_spec))
+    master = (jax.tree.map(clone, param_spec_tree, is_leaf=is_spec)
+              if needs_master else None)
+    return AdamWState(step=ParamSpec((), (), "int32", init="zeros"), m=m,
+                      v=v, master=master)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(
+        g.dtype), grads), norm
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """One AdamW step.  Returns (new_params, new_state, metrics).
+
+    Global-norm clipping is folded into the per-leaf update as a scalar
+    multiply (no whole-tree clipped-gradient materialization).
+    """
+    gnorm = global_norm(grads)
+    clip_scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, w):
+        """w = f32 master (or the f32 param itself)."""
+        gf = g.astype(jnp.float32) * clip_scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        if isinstance(v, FactoredV):
+            g2 = gf * gf
+            row_new = b2 * v.row + (1 - b2) * jnp.mean(g2, axis=-1)
+            col_new = b2 * v.col + (1 - b2) * jnp.mean(g2, axis=-2)
+            # rank-1 reconstruction (Adafactor): V ~ row x col / mean(row)
+            denom = jnp.maximum(jnp.mean(row_new, axis=-1, keepdims=True),
+                                1e-30)
+            vh = (row_new[..., None] * col_new[..., None, :]
+                  / denom[..., None]) / bc2
+            v_new = FactoredV(row=row_new, col=col_new)
+        else:
+            v_full = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            vh = v_full / bc2
+            v_new = v_full
+        mh = m_new / bc1
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:   # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * w
+        w_new = w - lr * delta
+        return w_new.astype(p.dtype), m_new.astype(m.dtype), v_new, w_new
+
+    is_v_leaf = lambda x: isinstance(x, FactoredV)
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.flatten(state.v, is_leaf=is_v_leaf)[0]
+    has_master = state.master is not None
+    flat_w = (jax.tree.leaves(state.master) if has_master
+              else [p.astype(jnp.float32) for p in flat_p])
+    out = [upd(p, g, m, v, w) for p, g, m, v, w in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_master = (jax.tree.unflatten(treedef, [o[3] for o in out])
+                  if has_master else None)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v,
+                             master=new_master), metrics

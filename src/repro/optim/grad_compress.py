@@ -1,0 +1,66 @@
+"""Int8 blockwise gradient compression with error feedback.
+
+At 1000+ nodes the cross-pod gradient reduction is bandwidth-bound; blockwise
+int8 halves-to-quarters the exchanged bytes (uses the ``quant_blockwise``
+Pallas kernel). Quantization error is carried in a per-leaf **error-feedback
+buffer** (Seide et al. / 1-bit SGD lineage): the residual from step t is
+added to the gradient at t+1, so compression noise behaves like delayed —
+not lost — signal, and SGD/Adam convergence is preserved.
+
+The compress/decompress pair simulates the wire format locally (this
+container has one process); the trainer-side semantics (what the optimizer
+sees) are exactly what a compressed all-reduce would deliver, and the unit
+tests property-check the error-feedback telescoping.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+
+
+class CompressState(NamedTuple):
+    error: object          # pytree like grads (f32 residuals)
+
+
+def init_state(grads_like) -> CompressState:
+    return CompressState(error=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def _roundtrip(x: jax.Array, force_interpret: Optional[bool] = None):
+    """Quantize -> dequantize (the wire)."""
+    if x.size < 1024:                   # tiny leaves ride uncompressed
+        return x.astype(jnp.float32), 0, x.size * 4
+    q, s, pad = kops.quantize_array(x.astype(jnp.float32),
+                                    force_interpret=force_interpret)
+    wire = q.nbytes + s.nbytes
+    back = kops.dequantize_array(q, s, shape=x.shape, dtype="float32",
+                                 pad=pad, force_interpret=force_interpret)
+    return back, wire, x.size * 4
+
+
+def compress_grads(grads, state: CompressState,
+                   force_interpret: Optional[bool] = None):
+    """Returns (decompressed grads as the receiver sees them, new state,
+    stats dict)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(state.error)
+    out, new_err = [], []
+    wire_bytes = 0
+    raw_bytes = 0
+    for g, e in zip(leaves, errs):
+        target = g.astype(jnp.float32) + e        # error feedback
+        back, wire, raw = _roundtrip(target, force_interpret)
+        out.append(back.astype(g.dtype))
+        new_err.append(target - back)             # residual for next step
+        wire_bytes += wire
+        raw_bytes += raw
+    stats = {"wire_bytes": wire_bytes, "raw_bytes": raw_bytes,
+             "ratio": wire_bytes / max(raw_bytes, 1)}
+    return (jax.tree.unflatten(treedef, out),
+            CompressState(error=jax.tree.unflatten(treedef, new_err)),
+            stats)

@@ -1,0 +1,4 @@
+from . import sharding
+from .sharding import (set_active_mesh, active_mesh, use_mesh, constrain,
+                       resolve_pspec, named_sharding, tree_pspecs,
+                       tree_shardings, DEFAULT_RULES)

@@ -1,0 +1,174 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes to
+mesh axes, with divisibility-aware resolution.
+
+Mesh axes (launch/mesh.py):
+  single-pod : ("data", "model")           = (16, 16)   -> 256 chips
+  multi-pod  : ("pod", "data", "model")    = (2, 16, 16) -> 512 chips
+
+Parallelism mapping:
+  DP   : batch over ("pod", "data")
+  FSDP : weight "embed" axis over "data" (ZeRO-style fully-sharded params +
+         optimizer state; GSPMD inserts the all-gathers)
+  TP   : heads / mlp / vocab over "model"
+  EP   : experts over "model"
+  SP   : long-context sequence over "data" when batch == 1; attention
+         batch-split over ("data","model") when heads don't divide "model"
+
+JAX requires divisible shardings (uneven sharding is rejected at jit time),
+so resolution drops any mesh axis that does not divide the dimension.
+
+Model code never receives a mesh argument; the launcher installs the active
+mesh via :func:`set_active_mesh` and the model constrains activations through
+:func:`constrain`, which is a no-op when no mesh is active (single-device
+smoke tests).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Each logical axis maps to a mesh axis (or tuple of axes, or None).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "batch_split": ("pod", "data", "model"),  # attention batch-split fallback
+    "seq": None,
+    "seq_sp": ("data",),        # sequence-parallel (long-context, batch==1)
+    "kv_seq": None,             # decode KV cache sequence (un-sharded default)
+    "kv_seq_mp": ("model",),    # decode KV cache sharded over model (flash-decode)
+    "embed": ("data",),         # FSDP axis on parameters
+    "act_embed": None,          # activations' d_model stays unsharded
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": None,
+    "layers": None,
+    "lru": ("model",),
+    "lru_blocks": ("model",),
+    "conv": None,
+    "stack": None,
+}
+
+
+class _MeshState(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[dict] = None
+
+
+_STATE = _MeshState()
+
+
+def set_active_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Install the mesh used by :func:`constrain` (launcher / dry-run only)."""
+    _STATE.mesh = mesh
+    _STATE.rules = rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def active_rules() -> dict:
+    return getattr(_STATE, "rules", None) or DEFAULT_RULES
+
+
+class use_mesh:
+    """Context manager combining ``set_active_mesh`` + ``with mesh:``."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        set_active_mesh(self.mesh, self.rules)
+        self.mesh.__enter__()
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_active_mesh(None, None)
+        return self.mesh.__exit__(*exc)
+
+
+def resolve_pspec(logical: Sequence[Optional[str]], mesh: Mesh,
+                  rules: Optional[dict] = None,
+                  shape: Optional[Sequence[int]] = None) -> P:
+    """Map logical axis names to a PartitionSpec on ``mesh``.
+
+    Rules whose mesh axes are absent from the mesh are dropped (the same
+    logical spec works on the 2D and 3D meshes).  A mesh axis is used at most
+    once; later logical axes that would reuse it are left unsharded.  If
+    ``shape`` is given, any mesh axis that does not evenly divide the
+    dimension is dropped (JAX rejects uneven shardings).
+    """
+    rules = rules or active_rules()
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        target = rules.get(name)
+        if target is None:
+            out.append(None)
+            continue
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if shape is not None:
+            keep = []
+            dim = shape[i]
+            for a in axes:
+                if dim % mesh.shape[a] == 0 and dim >= mesh.shape[a]:
+                    keep.append(a)
+                    dim //= mesh.shape[a]
+            axes = tuple(keep)
+        if not axes:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(logical: Sequence[Optional[str]], mesh: Mesh,
+                   rules: Optional[dict] = None,
+                   shape: Optional[Sequence[int]] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_pspec(logical, mesh, rules, shape))
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_pspec(logical, mesh, active_rules(), x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def can_shard(dim: int, logical_name: str) -> bool:
+    """True if ``dim`` would actually be sharded under the active mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return False
+    spec = resolve_pspec((logical_name,), mesh, active_rules(), (dim,))
+    return len(spec) > 0 and spec[0] is not None
+
+
+def tree_pspecs(spec_tree, mesh: Mesh, rules: Optional[dict] = None):
+    """Map a tree of ParamSpec-like leaves (with .logical/.shape) to
+    PartitionSpecs."""
+    return jax.tree.map(
+        lambda s: resolve_pspec(s.logical, mesh, rules, s.shape), spec_tree,
+        is_leaf=lambda s: hasattr(s, "logical"))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Optional[dict] = None):
+    return jax.tree.map(
+        lambda s: named_sharding(s.logical, mesh, rules, s.shape), spec_tree,
+        is_leaf=lambda s: hasattr(s, "logical"))

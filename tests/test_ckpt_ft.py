@@ -1,0 +1,294 @@
+"""Checkpoint runtime + fault-tolerance tests: atomicity, corruption
+fallback, buddy recovery, compression, bit-exact resume, elasticity,
+watchdog, energy accounting."""
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (ShardedStore, StoreConfig, CheckpointManager,
+                        ManagerConfig, BuddyReplica)
+from repro.configs import get_config, reduced
+from repro.core.params import PowerParams
+from repro.core.policy import CheckpointPolicy, PolicyConfig
+from repro.data import for_arch
+from repro.energy import EnergyMeter, Phase, PAPER_EXASCALE_PROFILE
+from repro.ft import (FailureInjector, FailureModel, FaultTolerantTrainer,
+                      TrainerConfig, StepTimeWatchdog, plan_reshard)
+from repro.models import build
+from repro.optim import adamw
+
+PW = PAPER_EXASCALE_PROFILE.power_params()
+
+
+def small_tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (128, 64)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jax.random.normal(k, (4096, 32))}}
+
+
+# ---------------------------------------------------------------------------
+# Store
+# ---------------------------------------------------------------------------
+
+class TestStore:
+    def test_roundtrip(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        tree = small_tree()
+        store.save(5, tree)
+        out, step = store.restore(tree)
+        assert step == 5
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_retention_gc(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path), retain=2))
+        tree = small_tree()
+        for s in (1, 2, 3, 4):
+            store.save(s, tree)
+        gens = [g.name for g in store.generations()]
+        assert gens == ["step_000000003", "step_000000004"]
+
+    def test_corruption_falls_back_one_generation(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        t1 = small_tree(1)
+        t2 = small_tree(2)
+        store.save(1, t1)
+        store.save(2, t2)
+        # corrupt the newest shard
+        newest = store.generations()[-1]
+        shard = next(newest.glob("shard_*.npz"))
+        data = bytearray(shard.read_bytes())
+        data[100] ^= 0xFF
+        shard.write_bytes(bytes(data))
+        out, step = store.restore(t1)
+        assert step == 1          # fell back
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(t1["a"]))
+
+    def test_torn_write_no_manifest_is_invisible(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        tree = small_tree()
+        store.save(1, tree)
+        # simulate a torn write: shard present, manifest missing
+        torn = tmp_path / "step_000000009"
+        torn.mkdir()
+        (torn / "shard_00000.npz").write_bytes(b"garbage")
+        out, step = store.restore(tree)
+        assert step == 1
+
+    def test_compressed_checkpoint_smaller_and_close(self, tmp_path):
+        plain = ShardedStore(StoreConfig(root=str(tmp_path / "p")))
+        comp = ShardedStore(StoreConfig(root=str(tmp_path / "c"),
+                                        compress=True))
+        tree = {"w": jax.random.normal(jax.random.key(0), (512, 512))}
+        m1 = plain.save(1, tree)
+        m2 = comp.save(1, tree)
+        assert m2["bytes"] < 0.4 * m1["bytes"]
+        out, _ = comp.restore(tree)
+        rel = float(jnp.max(jnp.abs(out["w"] - tree["w"]))
+                    / jnp.max(jnp.abs(tree["w"])))
+        assert rel < 0.01
+
+    def test_restore_empty_store(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        out, step = store.restore(small_tree())
+        assert out is None and step is None
+
+
+# ---------------------------------------------------------------------------
+# Manager (async, buddy, policy-driven cadence)
+# ---------------------------------------------------------------------------
+
+def _policy(strategy="fixed", period=10.0, **kw):
+    return CheckpointPolicy(PolicyConfig(strategy=strategy,
+                                         fixed_period_s=period, **kw), PW)
+
+
+class TestManager:
+    def test_async_checkpoint_and_restore(self, tmp_path):
+        pol = _policy()
+        mgr = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path))),
+                                pol)
+        tree = small_tree()
+        mgr.checkpoint(3, tree)
+        mgr.wait()
+        out, step, source = mgr.restore(tree)
+        assert step == 3 and source == "store"
+
+    def test_buddy_recovery_when_store_lost(self, tmp_path):
+        pol = _policy()
+        mgr = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path))),
+                                pol)
+        tree = small_tree()
+        mgr.checkpoint(7, tree, block=True)
+        # catastrophic store loss
+        for g in mgr.store.generations():
+            for p in sorted(g.glob("**/*"), reverse=True):
+                p.unlink()
+            g.rmdir()
+        out, step, source = mgr.restore(tree)
+        assert step == 7 and source == "buddy"
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_policy_cadence(self, tmp_path):
+        pol = _policy(period=5.0)
+        for _ in range(5):
+            pol.observe_step_time(1.0)     # 1 s/step -> every 5 steps
+        mgr = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path))),
+                                pol)
+        tree = small_tree()
+        saved = [step for step in range(1, 21)
+                 if mgr.maybe_checkpoint(step, tree)]
+        mgr.wait()
+        assert saved == [1, 6, 11, 16]
+
+    def test_measured_C_feeds_policy(self, tmp_path):
+        pol = _policy(strategy="algo_t", C_s=99.0, mu_s=3600.0)
+        mgr = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path))),
+                                pol)
+        mgr.checkpoint(1, small_tree(), block=True)
+        assert pol.checkpoint_params().C < 10.0   # measured, not the prior
+
+
+# ---------------------------------------------------------------------------
+# Energy meter
+# ---------------------------------------------------------------------------
+
+class TestEnergyMeter:
+    def test_phase_integration(self):
+        m = EnergyMeter(PAPER_EXASCALE_PROFILE)
+        m.add(Phase.COMPUTE, 10.0)
+        m.add(Phase.CHECKPOINT_IO, 2.0)
+        m.add(Phase.CHECKPOINT_IO, 1.0, advances_wall=False)  # overlapped
+        m.add(Phase.DOWN, 1.0)
+        e = m.energy_j()
+        assert e["static"] == pytest.approx(13.0 * 10.0)
+        assert e["compute"] == pytest.approx(10.0 * 10.0)
+        assert e["io"] == pytest.approx(3.0 * 100.0)
+        assert m.report()["rho"] == pytest.approx(5.5)
+
+    def test_negative_interval_raises(self):
+        m = EnergyMeter(PAPER_EXASCALE_PROFILE)
+        with pytest.raises(ValueError):
+            m.add(Phase.COMPUTE, -1.0)
+
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+class TestWatchdog:
+    def test_flags_stragglers_and_escalates(self):
+        w = StepTimeWatchdog()
+        for i in range(20):
+            assert not w.observe(i, 1.0 + 0.001 * (i % 3))
+        assert w.observe(20, 5.0)
+        assert w.observe(21, 5.0)
+        assert w.observe(22, 5.0)
+        assert w.events[-1]["escalate"]
+        # baseline was not poisoned by the stragglers
+        assert w.mean < 1.1
+
+    def test_quiet_run_no_events(self):
+        w = StepTimeWatchdog()
+        rng = np.random.default_rng(0)
+        for i in range(200):
+            w.observe(i, 1.0 + 0.01 * rng.standard_normal())
+        assert w.events == []
+
+
+# ---------------------------------------------------------------------------
+# Elastic plan
+# ---------------------------------------------------------------------------
+
+class TestElastic:
+    def test_plan_shrinks_data_axis(self):
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(len(jax.devices()))
+        plan = plan_reshard(mesh, n_failed_hosts=0, devices_per_host=1)
+        assert plan.new_shape == dict(mesh.shape)
+
+    def test_reshard_roundtrip_across_meshes(self, tmp_path):
+        """Save under one mesh, restore under a smaller one."""
+        store = ShardedStore(StoreConfig(str(tmp_path)))
+        tree = small_tree()
+        store.save(1, tree)
+        out, _ = store.restore(tree)   # single-device 'new mesh'
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Fault-tolerant trainer end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_rig():
+    cfg = reduced(get_config("starcoder2-3b"))
+    m = build(cfg)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1)
+    step_fn = jax.jit(m.make_train_step(ocfg))
+    return cfg, m, ocfg, step_fn
+
+
+def _trainer(tmp, rig, mu_s, seed=0, steps=20, strategy="algo_t"):
+    cfg, m, ocfg, step_fn = rig
+    params = m.init(jax.random.key(0))
+    opt = adamw.init_state(params, ocfg)
+    data = for_arch(cfg, batch=4, seq_len=64, seed=1)
+    pol = CheckpointPolicy(PolicyConfig(strategy=strategy, C_s=0.05,
+                                        R_s=0.05, D_s=0.1, mu_s=mu_s,
+                                        omega=0.5), PW)
+    mgr = CheckpointManager(ShardedStore(StoreConfig(root=str(tmp))), pol)
+    meter = EnergyMeter(PAPER_EXASCALE_PROFILE)
+    inj = FailureInjector(FailureModel(mu_s=mu_s, downtime_s=0.1, seed=seed))
+    return FaultTolerantTrainer(
+        train_step=step_fn, state=(params, opt), data=data, policy=pol,
+        manager=mgr, meter=meter, failures=inj,
+        config=TrainerConfig(total_steps=steps, sim_seconds_per_step=1.0))
+
+
+class TestFaultTolerantTrainer:
+    def test_failures_do_not_change_result(self, tmp_path, tiny_rig):
+        """Kill-anywhere property: final params identical with/without
+        injected failures."""
+        t_clean = _trainer(tmp_path / "clean", tiny_rig, mu_s=float("inf"))
+        rep_c = t_clean.run()
+        t_fail = _trainer(tmp_path / "fail", tiny_rig, mu_s=7.0, seed=3)
+        rep_f = t_fail.run()
+        assert rep_f["n_failures"] >= 1
+        assert rep_f["final_step"] == rep_c["final_step"]
+        for a, b in zip(jax.tree.leaves(t_clean.state[0]),
+                        jax.tree.leaves(t_fail.state[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_loss_decreases(self, tmp_path, tiny_rig):
+        t = _trainer(tmp_path, tiny_rig, mu_s=float("inf"), steps=10)
+        rep = t.run()
+        assert rep["losses"][-1] < rep["losses"][0]
+
+    def test_failures_cost_time(self, tmp_path, tiny_rig):
+        t_clean = _trainer(tmp_path / "c", tiny_rig, mu_s=float("inf"))
+        t_fail = _trainer(tmp_path / "f", tiny_rig, mu_s=6.0, seed=1)
+        rc, rf = t_clean.run(), t_fail.run()
+        assert rf["wall_s"] > rc["wall_s"]
+        assert rf["energy"]["E_total_j"] > rc["energy"]["E_total_j"]
+
+    def test_energy_report_has_paper_parameters(self, tmp_path, tiny_rig):
+        t = _trainer(tmp_path, tiny_rig, mu_s=50.0, steps=10)
+        rep = t.run()
+        assert rep["energy"]["rho"] == pytest.approx(5.5)
+        assert "predicted_energy_ratio" in rep["policy"]
+
+    def test_algo_e_longer_period_than_algo_t(self, tmp_path, tiny_rig):
+        tt = _trainer(tmp_path / "t", tiny_rig, mu_s=200.0, strategy="algo_t")
+        te = _trainer(tmp_path / "e", tiny_rig, mu_s=200.0, strategy="algo_e")
+        assert te.policy.period_seconds() > tt.policy.period_seconds()

@@ -1,0 +1,265 @@
+"""Tests for the analytical core: formulas, optimizers, paper claims."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CheckpointParams, PowerParams, EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7,
+    fig12_checkpoint, fig3_checkpoint,
+    time_final, time_fault_free, time_lost_per_failure, phase_times,
+    energy_final, energy_breakdown, K_dE_dT,
+    t_opt_time, t_opt_time_numeric, t_opt_energy, t_opt_energy_numeric,
+    t_young, t_daly, t_msk_energy, energy_quadratic_coefficients,
+    paper_printed_coefficients, period_for, evaluate, sweep_nodes,
+)
+from repro.core.model import K_dE_dT_autodiff
+
+
+CK = fig12_checkpoint(300.0)          # C=R=10, D=1, omega=1/2, mu=300
+PW = EXASCALE_POWER_RHO55             # P = 10/10/100, rho=5.5
+
+
+# ---------------------------------------------------------------------------
+# §3.1 time model
+# ---------------------------------------------------------------------------
+
+class TestTimeModel:
+    def test_fault_free_overhead(self):
+        # With omega=1 the checkpoint is free: T_ff == T_base.
+        ck = CheckpointParams(C=10, R=10, D=1, mu=300, omega=1.0)
+        assert float(time_fault_free(50.0, ck, 1000.0)) == pytest.approx(1000.0)
+        # With omega=0, a period of T delivers T-C work units.
+        ck0 = CheckpointParams(C=10, R=10, D=1, mu=300, omega=0.0)
+        assert float(time_fault_free(50.0, ck0, 1000.0)) == pytest.approx(
+            1000.0 * 50.0 / 40.0)
+
+    def test_time_lost_per_failure_is_linear_in_T(self):
+        # D + R + omega C + T/2  (paper's A/B average collapses to T/2)
+        got = float(time_lost_per_failure(60.0, CK))
+        assert got == pytest.approx(1 + 10 + 0.5 * 10 + 30.0)
+
+    def test_time_final_no_failures_limit(self):
+        # mu -> infinity: T_final -> T_ff.
+        ck = CheckpointParams(C=10, R=10, D=1, mu=1e15, omega=0.5)
+        assert float(time_final(50.0, ck, 777.0)) == pytest.approx(
+            float(time_fault_free(50.0, ck, 777.0)), rel=1e-9)
+
+    def test_t_opt_time_closed_form_equals_eq1(self):
+        # Eq. (1): sqrt(2 (1-omega) C (mu - (D+R+omega C)))
+        expect = math.sqrt(2 * 0.5 * 10 * (300 - (1 + 10 + 5)))
+        assert t_opt_time(CK) == pytest.approx(expect, rel=1e-12)
+
+    def test_t_opt_time_matches_numeric_argmin(self):
+        for mu in (30.0, 60.0, 120.0, 300.0):
+            for omega in (0.0, 0.3, 0.9):
+                ck = CheckpointParams(C=10, R=10, D=1, mu=mu, omega=omega)
+                assert t_opt_time(ck) == pytest.approx(
+                    t_opt_time_numeric(ck), rel=1e-5)
+
+    def test_t_opt_is_interior_minimum(self):
+        t = t_opt_time(CK)
+        f = lambda x: float(time_final(x, CK))
+        assert f(t) < f(t * 0.9) and f(t) < f(t * 1.1)
+
+    def test_omega_one_degenerates_gracefully(self):
+        # Fully-overlapped checkpoints: a=0, closed form -> 0; numeric fallback
+        # must return a usable period (model still penalizes failures ~T/2).
+        ck = CheckpointParams(C=10, R=10, D=1, mu=300, omega=1.0)
+        t = t_opt_time(ck)
+        lo, hi = ck.valid_period_range()
+        assert lo <= t <= hi
+
+
+# ---------------------------------------------------------------------------
+# §3.2 energy model
+# ---------------------------------------------------------------------------
+
+class TestEnergyModel:
+    def test_phase_identity_blocking(self):
+        # omega == 0: no overlap, T_final == T_cal + T_io + T_down.
+        ck = CheckpointParams(C=10, R=10, D=1, mu=300, omega=0.0)
+        ph = phase_times(60.0, ck, 1000.0)
+        assert float(ph.T_final) == pytest.approx(
+            float(ph.T_cal + ph.T_io + ph.T_down), rel=1e-12)
+
+    def test_phase_overlap_nonblocking(self):
+        # omega > 0: CPU and I/O overlap, sum exceeds wall-clock.
+        ph = phase_times(60.0, CK, 1000.0)
+        assert float(ph.T_cal + ph.T_io + ph.T_down) > float(ph.T_final)
+
+    def test_energy_breakdown_sums(self):
+        bd = energy_breakdown(60.0, CK, PW, 1000.0)
+        assert bd["E_final"] == pytest.approx(
+            bd["E_cal"] + bd["E_io"] + bd["E_down"] + bd["E_static"])
+        assert bd["E_final"] == pytest.approx(
+            float(energy_final(60.0, CK, PW, 1000.0)))
+
+    def test_K_dE_dT_is_quadratic(self):
+        # The product K * E' interpolated from 3 points predicts a 4th.
+        c2, c1, c0 = energy_quadratic_coefficients(CK, PW)
+        for t in (40.0, 77.0, 133.0, 200.0):
+            q = float(K_dE_dT(t, CK, PW))
+            assert q == pytest.approx(c2 * t * t + c1 * t + c0, rel=1e-8)
+
+    def test_analytic_derivative_matches_autodiff(self):
+        ts = np.array([35.0, 60.0, 120.0, 240.0])
+        np.testing.assert_allclose(
+            K_dE_dT(ts, CK, PW), K_dE_dT_autodiff(ts, CK, PW),
+            rtol=1e-9)
+
+    def test_paper_printed_coefficients_match(self):
+        # DESIGN.md erratum: the FINAL printed display of the paper is correct
+        # (the intermediate display is mistyped); verify against the
+        # mechanically-derived coefficients to near machine precision.
+        ours = energy_quadratic_coefficients(CK, PW)
+        paper = paper_printed_coefficients(CK, PW)
+        for o, p in zip(ours, paper):
+            assert o == pytest.approx(p, rel=1e-9)
+
+    def test_derived_coefficients_match_interpolation_everywhere(self):
+        # Our corrected closed form == exact interpolation, for all alpha.
+        from repro.core.optimal import derived_coefficients
+        for mu in (60.0, 300.0):
+            for omega in (0.0, 0.5, 0.9):
+                for pw in (PW, EXASCALE_POWER_RHO7):
+                    ck = CheckpointParams(C=10, R=10, D=1, mu=mu, omega=omega)
+                    ours = energy_quadratic_coefficients(ck, pw)
+                    closed = derived_coefficients(ck, pw)
+                    for o, p in zip(ours, closed):
+                        assert o == pytest.approx(p, rel=1e-9)
+
+    def test_paper_erratum_alpha_neq_1(self):
+        # The paper's printed display is wrong when alpha != 1 (rho=7 has
+        # alpha=2): documented erratum (DESIGN.md).
+        ck = CheckpointParams(C=10, R=10, D=1, mu=60.0, omega=0.0)
+        ours = energy_quadratic_coefficients(ck, EXASCALE_POWER_RHO7)
+        paper = paper_printed_coefficients(ck, EXASCALE_POWER_RHO7)
+        assert ours[0] != pytest.approx(paper[0], rel=1e-3)
+
+    def test_t_opt_energy_root_matches_numeric_argmin(self):
+        for mu in (60.0, 120.0, 300.0):
+            ck = fig12_checkpoint(mu)
+            assert t_opt_energy(ck, PW) == pytest.approx(
+                t_opt_energy_numeric(ck, PW), rel=1e-6)
+
+    def test_t_opt_energy_is_interior_minimum(self):
+        t = t_opt_energy(CK, PW)
+        f = lambda x: float(energy_final(x, CK, PW))
+        assert f(t) < f(t * 0.9) and f(t) < f(t * 1.1)
+
+    def test_energy_period_exceeds_time_period_when_io_expensive(self):
+        # beta >> alpha: checkpoints cost much energy -> AlgoE stretches T.
+        assert t_opt_energy(CK, PW) > t_opt_time(CK)
+
+    def test_equal_powers_collapse_to_time_optimum(self):
+        # alpha == beta == gamma -> E proportional-ish to time-like objective;
+        # with P_io == P_cal the energy optimum moves close to AlgoT.
+        pw = PowerParams(P_static=10.0, P_cal=10.0, P_io=10.0, P_down=10.0)
+        te = t_opt_energy(CK, pw)
+        tt = t_opt_time(CK)
+        assert abs(te - tt) / tt < 0.25
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+class TestBaselines:
+    def test_young_daly_values(self):
+        assert t_young(CK) == pytest.approx(math.sqrt(2 * 10 * 300) + 10)
+        assert t_daly(CK) == pytest.approx(math.sqrt(2 * 10 * 311) + 10)
+
+    def test_daly_geq_young(self):
+        assert t_daly(CK) >= t_young(CK)
+
+    def test_young_close_to_algo_t_when_blocking(self):
+        # For omega=0 and C,D,R << mu, Eq. (1) ~ Young's formula.
+        ck = CheckpointParams(C=1.0, R=1.0, D=0.1, mu=10000.0, omega=0.0)
+        assert t_opt_time(ck) == pytest.approx(t_young(ck), rel=0.02)
+
+    def test_msk_energy_period_positive_and_valid(self):
+        t = t_msk_energy(CK, PW)
+        lo, hi = CK.valid_period_range()
+        assert lo < t < hi
+
+    def test_period_for_dispatch(self):
+        assert period_for("algo_t", CK) == t_opt_time(CK)
+        assert period_for("algo_e", CK, PW) == t_opt_energy(CK, PW)
+        assert period_for("young", CK) == t_young(CK)
+        assert period_for("daly", CK) == t_daly(CK)
+        with pytest.raises(ValueError):
+            period_for("nope", CK)
+
+
+# ---------------------------------------------------------------------------
+# Paper §4 experimental claims
+# ---------------------------------------------------------------------------
+
+class TestPaperClaims:
+    def test_rho_values(self):
+        assert EXASCALE_POWER_RHO55.rho == pytest.approx(5.5)
+        assert EXASCALE_POWER_RHO7.rho == pytest.approx(7.0)
+
+    def test_claim_20pct_energy_10pct_time_at_mu300(self):
+        """'With current values, we can save more than 20% of energy with an
+        MTBF of 300 min, at the price of an increase of 10% in the execution
+        time' — ratio conventions of Figures 1-2 (ratio - 1)."""
+        pt = evaluate(fig12_checkpoint(300.0), EXASCALE_POWER_RHO55)
+        assert pt.energy_ratio - 1.0 > 0.20      # 22.5% measured
+        assert 0.05 < pt.time_ratio - 1.0 < 0.15  # 10.3% measured
+
+    def test_claim_30pct_peak_between_1e6_and_1e7_nodes(self):
+        """Fig. 3: 'up to 30% for a time overhead of only 12%', peak between
+        1e6 and 1e7 nodes (rho=7 panel); ratios -> 1 at 1e8."""
+        ns = [1e5, 1e6, 3e6, 1e7, 1e8]
+        pts = sweep_nodes(ns, EXASCALE_POWER_RHO7)
+        e_gain = [p.energy_ratio - 1.0 for p in pts]
+        t_loss = [p.time_ratio - 1.0 for p in pts]
+        peak = max(e_gain)
+        peak_n = ns[e_gain.index(peak)]
+        assert 0.25 < peak < 0.35                 # ~29% measured
+        assert 1e6 <= peak_n <= 1e7
+        assert t_loss[e_gain.index(peak)] < 0.15  # ~12% measured
+        # Convergence to 1 at extreme node counts:
+        assert e_gain[-1] == pytest.approx(0.0, abs=1e-6)
+        assert t_loss[-1] == pytest.approx(0.0, abs=1e-6)
+
+    def test_energy_gain_increases_with_rho(self):
+        from repro.core import sweep_rho
+        pts = sweep_rho([1.0, 2.0, 5.5, 7.0, 10.0], 300.0)
+        gains = [p.energy_saving for p in pts]
+        assert all(g2 >= g1 - 1e-12 for g1, g2 in zip(gains, gains[1:]))
+
+    def test_algo_e_never_beats_algo_t_on_time(self):
+        for mu in (30.0, 120.0, 300.0):
+            pt = evaluate(fig12_checkpoint(mu), EXASCALE_POWER_RHO55)
+            assert pt.time_ratio >= 1.0 - 1e-12
+            assert pt.energy_ratio >= 1.0 - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+class TestValidation:
+    def test_invalid_params_raise(self):
+        with pytest.raises(ValueError):
+            CheckpointParams(C=10, R=10, D=1, mu=300, omega=1.5)
+        with pytest.raises(ValueError):
+            CheckpointParams(C=-1, R=10, D=1, mu=300)
+        with pytest.raises(ValueError):
+            CheckpointParams(C=1, R=1, D=1, mu=0)
+        with pytest.raises(ValueError):
+            PowerParams(P_static=0.0, P_cal=1, P_io=1)
+
+    def test_infeasible_platform_raises_in_optimizer(self):
+        # mu smaller than the per-failure overhead: no valid period.
+        ck = CheckpointParams(C=10, R=10, D=1, mu=12.0, omega=0.0)
+        with pytest.raises(ValueError):
+            t_opt_time_numeric(ck)
+
+    def test_platform_mtbf_scaling(self):
+        ck = CheckpointParams.from_platform(
+            n_nodes=1000, mu_ind=1000.0 * 300.0, C=1, R=1, D=0.1)
+        assert ck.mu == pytest.approx(300.0)

@@ -1,0 +1,136 @@
+"""Monte-Carlo simulator vs closed-form expectations, and policy behaviour."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointParams, PowerParams, EXASCALE_POWER_RHO55,
+                        simulate, simulate_once, t_opt_time, t_opt_energy,
+                        CheckpointPolicy, PolicyConfig)
+from repro.core import model
+
+
+CK = CheckpointParams(C=10.0, R=10.0, D=1.0, mu=300.0, omega=0.5)
+PW = EXASCALE_POWER_RHO55
+
+
+class TestSimulatorVsModel:
+    """The first-order model should match simulation to a few percent in its
+    validity regime (C, D, R << mu)."""
+
+    @pytest.mark.parametrize("T", [40.0, 53.3, 90.0, 128.0])
+    def test_wall_time_matches(self, T):
+        sim = simulate(T, CK, PW, T_base=4000.0, n_trials=400, seed=0)
+        pred = float(model.time_final(T, CK, 4000.0))
+        # allow 3% model bias + 3 standard errors
+        tol = 0.03 * pred + 3.0 * sim["T_final_se"]
+        assert abs(sim["T_final"] - pred) < tol
+
+    @pytest.mark.parametrize("T", [40.0, 53.3, 128.0])
+    def test_energy_matches(self, T):
+        sim = simulate(T, CK, PW, T_base=4000.0, n_trials=400, seed=1)
+        pred = float(model.energy_final(T, CK, PW, 4000.0))
+        tol = 0.03 * pred + 3.0 * sim["E_final_se"]
+        assert abs(sim["E_final"] - pred) < tol
+
+    def test_phase_times_match(self):
+        T = 60.0
+        sim = simulate(T, CK, PW, T_base=4000.0, n_trials=400, seed=2)
+        ph = model.phase_times(T, CK, 4000.0)
+        assert sim["T_cal"] == pytest.approx(float(ph.T_cal), rel=0.04)
+        assert sim["T_io"] == pytest.approx(float(ph.T_io), rel=0.06)
+
+    def test_no_failures_limit(self):
+        ck = CheckpointParams(C=10, R=10, D=1, mu=1e12, omega=0.5)
+        r = simulate_once(60.0, ck, PW, 1000.0, np.random.default_rng(0))
+        assert r.n_failures == 0
+        assert r.wall_time == pytest.approx(
+            float(model.time_fault_free(60.0, ck, 1000.0)), rel=2e-3)
+
+    def test_algo_t_beats_neighbors_in_simulation(self):
+        """The analytic optimum should (statistically) dominate clearly
+        sub-optimal periods in simulated wall time."""
+        t_star = t_opt_time(CK)
+        wall_star = simulate(t_star, CK, PW, 4000.0, n_trials=300,
+                             seed=3)["T_final"]
+        for t in (t_star / 3.0, t_star * 3.0):
+            wall = simulate(t, CK, PW, 4000.0, n_trials=300, seed=3)["T_final"]
+            assert wall_star < wall
+
+    def test_algo_e_saves_energy_in_simulation(self):
+        t_t = t_opt_time(CK)
+        t_e = t_opt_energy(CK, PW)
+        st = simulate(t_t, CK, PW, 4000.0, n_trials=400, seed=4)
+        se = simulate(t_e, CK, PW, 4000.0, n_trials=400, seed=4)
+        assert se["E_final"] < st["E_final"]          # AlgoE saves energy...
+        assert se["T_final"] > st["T_final"]          # ...and costs time.
+
+    def test_rollback_semantics(self):
+        """Work is never lost beyond one period + checkpoint overlap."""
+        rng = np.random.default_rng(5)
+        r = simulate_once(60.0, CK, PW, 2000.0, rng)
+        # executed work >= useful work; overhead bounded by failures * (T + C)
+        assert r.work_executed >= 2000.0 - 1e-9
+        assert r.work_executed <= 2000.0 + r.n_failures * (60.0 + 10.0) + 60.0
+
+
+class TestCheckpointPolicy:
+    def test_policy_converges_to_measured_params(self):
+        pol = CheckpointPolicy(PolicyConfig(strategy="algo_t", C_s=600.0,
+                                            mu_s=7200.0), PW)
+        for _ in range(50):
+            pol.observe_checkpoint(duration_s=60.0,
+                                   slowdown_work_fraction=0.5)
+        ck = pol.checkpoint_params()
+        assert ck.C == pytest.approx(60.0, rel=1e-6)
+        assert ck.omega == pytest.approx(0.5, rel=1e-6)
+
+    def test_policy_period_matches_formula(self):
+        pol = CheckpointPolicy(PolicyConfig(strategy="algo_t", C_s=10.0,
+                                            R_s=10.0, D_s=1.0, mu_s=300.0,
+                                            omega=0.5), PW)
+        assert pol.period_seconds() == pytest.approx(t_opt_time(CK), rel=1e-9)
+
+    def test_policy_period_steps(self):
+        pol = CheckpointPolicy(PolicyConfig(strategy="fixed",
+                                            fixed_period_s=100.0), PW)
+        for _ in range(20):
+            pol.observe_step_time(2.0)
+        assert pol.period_steps() == 50
+
+    def test_mu_estimation_from_failure_log(self):
+        pol = CheckpointPolicy(PolicyConfig(strategy="algo_t", mu_s=1000.0),
+                               PW)
+        t = 0.0
+        rng = np.random.default_rng(0)
+        pol.observe_failure(t)
+        for _ in range(200):
+            t += rng.exponential(500.0)
+            pol.observe_failure(t)
+        assert pol.mu_estimate_s == pytest.approx(500.0, rel=0.2)
+
+    def test_energy_strategy_longer_period(self):
+        cfgT = PolicyConfig(strategy="algo_t", C_s=10, R_s=10, D_s=1,
+                            mu_s=300, omega=0.5)
+        cfgE = PolicyConfig(strategy="algo_e", C_s=10, R_s=10, D_s=1,
+                            mu_s=300, omega=0.5)
+        pT = CheckpointPolicy(cfgT, PW)
+        pE = CheckpointPolicy(cfgE, PW)
+        assert pE.period_seconds() > pT.period_seconds()
+
+    def test_report_contains_predictions(self):
+        pol = CheckpointPolicy(PolicyConfig(strategy="algo_e", C_s=10, R_s=10,
+                                            D_s=1, mu_s=300, omega=0.5), PW)
+        rep = pol.report()
+        assert rep["predicted_energy_ratio"] > 1.0
+        assert rep["predicted_time_ratio"] > 1.0
+
+    def test_drift_triggers_resolve(self):
+        pol = CheckpointPolicy(PolicyConfig(strategy="algo_t", C_s=10, R_s=10,
+                                            D_s=1, mu_s=300, omega=0.5), PW)
+        p0 = pol.period_seconds()
+        # 4x larger C (well past drift threshold) must change the decision.
+        for _ in range(50):
+            pol.observe_checkpoint(duration_s=40.0)
+        p1 = pol.period_seconds()
+        assert p1 > p0 * 1.5

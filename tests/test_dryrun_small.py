@@ -1,0 +1,176 @@
+"""Dry-run machinery tests that work on the single-device pytest process:
+HLO cost-walker correctness, collective parsing, input specs, and validation
+of the generated dry-run artifacts (skipped when absent)."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, reduced
+from repro.configs.base import SHAPES
+from repro.launch import hlo_cost
+from repro.models import build, input_specs
+from repro.optim import adamw
+
+RESULTS = Path(__file__).resolve().parents[1] / "benchmarks" / "results" \
+    / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# HLO cost walker
+# ---------------------------------------------------------------------------
+
+SAMPLE_HLO = """HloModule test, is_scheduled=true
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %c = s32[] constant(7)
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %ar)
+}
+
+ENTRY %main (a: f32[8,8]) -> (s32[], f32[8,8]) {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %a)
+  ROOT %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+}
+"""
+
+
+class TestHloCost:
+    def test_loop_aware_flops(self):
+        cost = hlo_cost.analyze(SAMPLE_HLO)
+        # 8x8x8 dot = 2*8*8*8 = 1024 flops, x 7 trips
+        assert cost.flops == pytest.approx(1024 * 7)
+
+    def test_loop_aware_collectives(self):
+        cost = hlo_cost.analyze(SAMPLE_HLO)
+        assert cost.coll_bytes["all-reduce"] == pytest.approx(8 * 8 * 4 * 7)
+        assert cost.coll_counts["all-reduce"] == 7
+
+    def test_trip_count_parsing(self):
+        comps = hlo_cost.parse_module(SAMPLE_HLO)
+        assert hlo_cost._trip_count(comps["cond"]) == 7
+
+    def test_walker_vs_analytic_on_real_compile(self):
+        """Compile a tiny train step (1-device) and compare the walker's
+        FLOPs against first-principles accounting within 2x."""
+        cfg = reduced(get_config("codeqwen1.5-7b"), n_layers=2, d_model=128)
+        model = build(cfg)
+        ocfg = adamw.AdamWConfig()
+        step = model.make_train_step(ocfg)
+        params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        opt = jax.eval_shape(lambda: adamw.init_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params),
+            ocfg))
+        batch = {"tokens": jax.ShapeDtypeStruct((4, 128), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((4, 128), jnp.int32)}
+        compiled = jax.jit(step).lower(params, opt, batch).compile()
+        cost = hlo_cost.analyze(compiled.as_text())
+        N = model.param_count()
+        tokens = 4 * 128
+        low = 6 * (N - cfg.padded_vocab() * cfg.d_model) * tokens
+        high = 14 * N * tokens          # fwd+bwd+remat+attention slack
+        assert low * 0.5 < cost.flops < high, (cost.flops, low, high)
+
+
+# ---------------------------------------------------------------------------
+# input_specs
+# ---------------------------------------------------------------------------
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", [c.name for c in ALL_ARCHS])
+    def test_train_specs_shapes(self, arch):
+        cfg = get_config(arch)
+        spec = input_specs(cfg, SHAPES["train_4k"])
+        assert spec["tokens"].shape == (256, 4096)
+        assert spec["labels"].dtype == jnp.int32
+        if cfg.is_encoder_decoder:
+            assert spec["frames"].shape == (256, cfg.encoder_seq,
+                                            cfg.d_model)
+        if cfg.n_prefix_tokens:
+            assert spec["prefix"].shape == (256, cfg.n_prefix_tokens,
+                                            cfg.d_model)
+
+    @pytest.mark.parametrize("arch", [c.name for c in ALL_ARCHS])
+    def test_decode_specs_have_cache(self, arch):
+        cfg = get_config(arch)
+        spec = input_specs(cfg, SHAPES["decode_32k"])
+        assert spec["token"].shape == (128, 1)
+        leaves = jax.tree.leaves(spec["cache"])
+        assert leaves, "cache must not be empty"
+
+    def test_sliding_archs_have_bounded_decode_cache(self):
+        for name, bound in (("starcoder2-3b", 4096),
+                            ("recurrentgemma-9b", 2048)):
+            cfg = get_config(name)
+            spec = input_specs(cfg, SHAPES["long_500k"])
+            kv_lens = {l.shape[-3] for l in jax.tree.leaves(spec["cache"])
+                       if hasattr(l, "shape") and len(l.shape) >= 4}
+            assert max(kv_lens) <= bound, (name, kv_lens)
+
+
+# ---------------------------------------------------------------------------
+# Generated artifacts (integration — skips when the sweep hasn't run)
+# ---------------------------------------------------------------------------
+
+class TestDryRunArtifacts:
+    @pytest.fixture(scope="class")
+    def records(self):
+        files = sorted(RESULTS.glob("*.json"))
+        if not files:
+            pytest.skip("dry-run artifacts not generated")
+        return [json.loads(f.read_text()) for f in files]
+
+    def test_every_applicable_cell_present_on_both_meshes(self, records):
+        have = {(r["arch"], r["shape"], r["mesh"]) for r in records}
+        for cfg in ALL_ARCHS:
+            for shape in cfg.applicable_shapes():
+                for mesh in ("pod16x16", "pod2x16x16"):
+                    assert (cfg.name, shape.name, mesh) in have, (
+                        cfg.name, shape.name, mesh)
+
+    def test_all_fit_hbm(self, records):
+        over = [(r["arch"], r["shape"], r["mesh"],
+                 r["memory"]["peak_bytes_est"] / 2**30)
+                for r in records if not r["fits_hbm"]]
+        assert not over, over
+
+    def test_records_have_roofline_inputs(self, records):
+        for r in records:
+            if "walked" not in r:
+                continue
+            assert r["walked"]["flops_per_device"] > 0, (r["arch"],
+                                                         r["shape"])
+            assert r["walked"]["hbm_bytes_per_device"] > 0
+
+    def test_multi_pod_shards_the_pod_axis(self, records):
+        """The 512-chip mesh must move bytes across pods for training
+        (gradient reduction over 'pod')."""
+        trains = [r for r in records
+                  if r["shape"] == "train_4k" and "walked" in r]
+        by_mesh = {}
+        for r in trains:
+            by_mesh.setdefault(r["arch"], {})[r["mesh"]] = r
+        checked = 0
+        for arch, d in by_mesh.items():
+            if len(d) == 2:
+                multi = d["pod2x16x16"]["walked"]["coll_bytes_total"]
+                assert multi > 0
+                checked += 1
+        assert checked >= 5

@@ -1,0 +1,240 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), sweeping shapes and
+dtypes per the deliverable-(c) requirement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+from repro.kernels.mlstm_scan import mlstm_scan as ml_raw
+from repro.kernels.quant_blockwise import quantize, dequantize
+from repro.kernels.rglru_scan import rglru_scan as rg_raw
+
+I = dict(force_interpret=True)
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.key(key), shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,Dh,dtype", [
+        (256, 128, jnp.float32), (512, 128, jnp.float32),
+        (256, 256, jnp.float32), (256, 128, jnp.bfloat16)])
+    @pytest.mark.parametrize("mode,w,c", [
+        ("causal", 0, 0), ("sliding", 128, 0), ("chunked", 0, 128),
+        ("bidir", 0, 0)])
+    def test_matches_ref(self, S, Dh, dtype, mode, w, c):
+        q, k, v = (rand(i, (3, S, Dh), dtype) for i in range(3))
+        out = fa_raw(q, k, v, mode=mode, window=w, chunk=c, qb=128, kb=128,
+                     interpret=True)
+        r = ref.attention_ref(
+            q[:, None].swapaxes(1, 1).reshape(3, 1, S, Dh),
+            k.reshape(3, 1, S, Dh), v.reshape(3, 1, S, Dh),
+            causal=(mode != "bidir"), window=w, chunk=c).reshape(3, S, Dh)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(r, np.float32), atol=tol,
+                                   rtol=tol)
+
+    def test_model_layout_wrapper(self):
+        B, S, H, Dh = 2, 256, 4, 128
+        q, k, v = (rand(i, (B, S, H, Dh), jnp.float32) for i in range(3))
+        out = ops.flash_attention(q, k, v, mode="causal", **I)
+        r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3),
+                              causal=True).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=1e-4)
+
+    def test_matches_model_attention_path(self):
+        """Kernel == the model's XLA online-softmax path (two independent
+        implementations of the same math)."""
+        from repro.models.attention import attention
+        B, S, H, Dh = 2, 512, 2, 128
+        q, k, v = (rand(i + 10, (B, S, H, Dh), jnp.float32) for i in range(3))
+        xla = attention(q, k, v, mode="causal")
+        pal = ops.flash_attention(q, k, v, mode="causal", **I)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(xla),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+class TestRGLRU:
+    @pytest.mark.parametrize("B,S,W", [(4, 512, 256), (8, 256, 128),
+                                       (2, 1024, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, S, W, dtype):
+        a = jax.nn.sigmoid(rand(0, (B, S, W), jnp.float32) - 1.0).astype(
+            dtype)
+        b = rand(1, (B, S, W), dtype)
+        h0 = rand(2, (B, W), jnp.float32)
+        out = ops.rglru_scan(a, b, h0, **I)
+        r = ref.rglru_ref(a, b, h0)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(r, np.float32), atol=tol,
+                                   rtol=tol)
+
+    def test_carry_across_time_blocks(self):
+        """sb smaller than S: the carry must flow across grid steps."""
+        B, S, W = 2, 512, 128
+        a = jnp.full((B, S, W), 0.9)
+        b = jnp.ones((B, S, W)) * 0.1
+        h0 = jnp.zeros((B, W))
+        out = rg_raw(a, b, h0, bb=2, sb=64, wb=128, interpret=True)
+        r = ref.rglru_ref(a, b, h0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=1e-5)
+
+    def test_matches_model_rglru_core(self):
+        """Kernel == the model's associative_scan implementation."""
+        from repro.models.recurrent import _rglru_core
+        from repro.models.spec import init_tree
+        from repro.models.recurrent import rglru_spec
+        from repro.configs import get_config, reduced
+        cfg = reduced(get_config("recurrentgemma-9b"), d_model=128)
+        p = init_tree(rglru_spec(cfg), jax.random.key(0))
+        B, S, W = 2, 256, cfg.lru_width
+        xw = rand(5, (B, S, W), jnp.float32) * 0.1
+        h0 = jnp.zeros((B, W))
+        h_model, _ = _rglru_core(p, xw, h0)
+        # reproduce (block-diagonal) gate math, then kernel-scan it
+        import jax.numpy as jnp2
+        nb, wb, _ = p["gate_a"].shape
+        x4 = xw.reshape(B, S, nb, wb)
+        r = jax.nn.sigmoid(jnp2.einsum("bshw,hwv->bshv", x4,
+                                       p["gate_a"]).reshape(B, S, W)
+                           + p["gate_a_b"])
+        i = jax.nn.sigmoid(jnp2.einsum("bshw,hwv->bshv", x4,
+                                       p["gate_x"]).reshape(B, S, W)
+                           + p["gate_x_b"])
+        log_a = -8.0 * jax.nn.softplus(p["lamb"]) * r
+        a = jnp2.exp(log_a)
+        beta = jnp2.sqrt(jnp2.maximum(1 - jnp2.exp(2 * log_a), 1e-12))
+        b = beta * (i * xw)
+        h_kernel = ops.rglru_scan(a, b, h0, **I)
+        np.testing.assert_allclose(np.asarray(h_kernel),
+                                   np.asarray(h_model), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class TestMLSTM:
+    @pytest.mark.parametrize("S,Dh,chunk", [(512, 128, 128), (256, 128, 256),
+                                            (512, 256, 64)])
+    def test_matches_stepwise_ref(self, S, Dh, chunk):
+        B, H = 2, 2
+        q = rand(0, (B, H, S, Dh), jnp.float32) * Dh ** -0.5
+        k = rand(1, (B, H, S, Dh), jnp.float32) * Dh ** -0.5
+        v = rand(2, (B, H, S, Dh), jnp.float32)
+        li = rand(3, (B, H, S), jnp.float32) * 0.5
+        lf = jax.nn.log_sigmoid(rand(4, (B, H, S), jnp.float32) + 2.0)
+        out = ops.mlstm_scan(q, k, v, li, lf, chunk=chunk, **I)
+        r = ref.mlstm_ref(q, k, v, li, lf)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=1e-4,
+                                   rtol=1e-3)
+
+    def test_chunk_invariance(self):
+        """Different chunk sizes give the same function."""
+        B, H, S, Dh = 1, 2, 256, 128
+        q = rand(0, (B, H, S, Dh), jnp.float32) * Dh ** -0.5
+        k = rand(1, (B, H, S, Dh), jnp.float32) * Dh ** -0.5
+        v = rand(2, (B, H, S, Dh), jnp.float32)
+        li = rand(3, (B, H, S), jnp.float32)
+        lf = jax.nn.log_sigmoid(rand(4, (B, H, S), jnp.float32) + 1.0)
+        o64 = ops.mlstm_scan(q, k, v, li, lf, chunk=64, **I)
+        o256 = ops.mlstm_scan(q, k, v, li, lf, chunk=256, **I)
+        np.testing.assert_allclose(np.asarray(o64), np.asarray(o256),
+                                   atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise quantization
+# ---------------------------------------------------------------------------
+
+class TestQuant:
+    @pytest.mark.parametrize("shape", [(512, 512), (256, 128), (1024, 640)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_roundtrip_error_bound(self, shape, dtype):
+        x = (rand(0, shape, jnp.float32) * 5).astype(dtype)
+        q, s = quantize(x.astype(jnp.float32), interpret=True)
+        back = dequantize(q, s, interpret=True)
+        # absmax-int8: error <= scale/2 = absmax/254 per 128-block
+        err = np.abs(np.asarray(back) - np.asarray(x, np.float32))
+        bound = np.abs(np.asarray(x, np.float32)).reshape(
+            shape[0], -1, 128).max(-1) / 254.0 + 1e-6
+        assert (err.reshape(shape[0], -1, 128).max(-1) <= bound + 1e-5).all()
+
+    def test_matches_ref(self):
+        x = rand(1, (256, 512), jnp.float32)
+        q, s = quantize(x, interpret=True)
+        qr, sr = ref.quant_ref(x)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+    def test_any_shape_wrapper(self):
+        for shape in [(3, 7, 190), (1000,), (5, 999)]:
+            x = rand(2, shape, jnp.float32) * 2
+            q, s, pad = ops.quantize_array(x, **I)
+            back = ops.dequantize_array(q, s, shape=shape, dtype="float32",
+                                        pad=pad, **I)
+            rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+            assert rel < 0.01, (shape, rel)
+            assert q.dtype == jnp.int8
+            # 4x compression vs f32 (payload only)
+            assert q.nbytes <= x.nbytes / 4 + 1024
+
+    def test_compression_ratio_for_checkpoints(self):
+        """The paper-facing claim: int8 blockwise shrinks checkpoint payloads
+        ~4x vs f32 (~2x vs bf16) at <1% RMS error."""
+        x = rand(3, (4096, 512), jnp.float32)
+        q, s, pad = ops.quantize_array(x, **I)
+        payload = q.nbytes + s.nbytes
+        assert payload < 0.3 * x.nbytes
+        back = ops.dequantize_array(q, s, shape=x.shape, dtype="float32",
+                                    pad=pad, **I)
+        rms = float(jnp.sqrt(jnp.mean((back - x) ** 2))
+                    / jnp.sqrt(jnp.mean(x ** 2)))
+        assert rms < 0.01, rms
+
+
+# ---------------------------------------------------------------------------
+# Flash-decoding kernel
+# ---------------------------------------------------------------------------
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("S,Dh,L", [(1024, 128, 1024), (1024, 128, 700),
+                                        (512, 256, 64), (768, 128, 768)])
+    def test_matches_ref(self, S, Dh, L):
+        from repro.kernels.decode_attention import decode_attention
+        BH = 4
+        q1 = rand(0, (BH, 1, Dh), jnp.float32)
+        k = rand(1, (BH, S, Dh), jnp.float32)
+        v = rand(2, (BH, S, Dh), jnp.float32)
+        out = decode_attention(q1, k, v, L, kb=256, interpret=True)
+        r = ref.decode_ref(q1[:, 0].reshape(BH, 1, Dh), k[:, None],
+                           v[:, None], length=L)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(r[:, 0]), atol=1e-4)
+
+    def test_bf16(self):
+        from repro.kernels.decode_attention import decode_attention
+        BH, S, Dh = 2, 512, 128
+        q1 = rand(0, (BH, 1, Dh), jnp.bfloat16)
+        k = rand(1, (BH, S, Dh), jnp.bfloat16)
+        v = rand(2, (BH, S, Dh), jnp.bfloat16)
+        out = decode_attention(q1, k, v, S, interpret=True)
+        r = ref.decode_ref(q1[:, 0].reshape(BH, 1, Dh), k[:, None],
+                           v[:, None], length=S)
+        np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                                   np.asarray(r[:, 0], np.float32),
+                                   atol=3e-2, rtol=3e-2)

@@ -1,0 +1,182 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, assume, HealthCheck
+
+from repro.core import (CheckpointParams, PowerParams, energy_final,
+                        time_final, t_opt_time, t_opt_time_numeric,
+                        t_opt_energy, t_opt_energy_numeric,
+                        energy_quadratic_coefficients)
+from repro.core.optimal import derived_coefficients
+from repro.kernels import ops, ref
+
+SETTINGS = dict(max_examples=40, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+# --- strategies -------------------------------------------------------------
+
+ckpt_params = st.builds(
+    CheckpointParams,
+    C=st.floats(0.5, 20.0),
+    R=st.floats(0.1, 20.0),
+    D=st.floats(0.0, 5.0),
+    mu=st.floats(100.0, 10_000.0),
+    omega=st.floats(0.0, 0.95),
+)
+
+power_params = st.builds(
+    PowerParams,
+    P_static=st.floats(1.0, 50.0),
+    P_cal=st.floats(0.1, 100.0),
+    P_io=st.floats(0.1, 500.0),
+    P_down=st.floats(0.0, 20.0),
+)
+
+
+class TestAnalyticalInvariants:
+    @settings(**SETTINGS)
+    @given(ckpt_params)
+    def test_closed_form_time_optimum_is_argmin(self, ck):
+        assume(ck.valid_period_range()[1] > ck.valid_period_range()[0] * 1.01)
+        t_star = t_opt_time(ck)
+        t_num = t_opt_time_numeric(ck)
+        # the two optimizers agree...
+        assert t_star == pytest.approx(t_num, rel=1e-4)
+        # ...and perturbations never improve the objective
+        f = lambda t: float(time_final(t, ck))
+        lo, hi = ck.valid_period_range()
+        for c in (0.8, 0.95, 1.05, 1.2):
+            t = min(max(t_star * c, lo * 1.001), hi * 0.999)
+            assert f(t_star) <= f(t) + 1e-9 * abs(f(t))
+
+    @settings(**SETTINGS)
+    @given(ckpt_params, power_params)
+    def test_energy_root_is_argmin_and_quadratic_is_exact(self, ck, pw):
+        assume(ck.valid_period_range()[1] > ck.valid_period_range()[0] * 1.01)
+        te = t_opt_energy(ck, pw)
+        tn = t_opt_energy_numeric(ck, pw)
+        e = lambda t: float(energy_final(t, ck, pw))
+        assert e(te) <= e(tn) * (1 + 1e-6)
+        # interpolated quadratic == closed-form derived coefficients
+        qi = energy_quadratic_coefficients(ck, pw)
+        qd = derived_coefficients(ck, pw)
+        for a, b in zip(qi, qd):
+            assert a == pytest.approx(b, rel=1e-6, abs=1e-12)
+
+    @settings(**SETTINGS)
+    @given(ckpt_params, power_params)
+    def test_energy_never_below_static_floor(self, ck, pw):
+        assume(ck.valid_period_range()[1] > ck.valid_period_range()[0] * 1.01)
+        te = t_opt_energy(ck, pw)
+        # E >= P_static * T_final >= P_static * T_base
+        assert float(energy_final(te, ck, pw)) >= pw.P_static * 1.0
+
+    @settings(**SETTINGS)
+    @given(ckpt_params)
+    def test_more_failures_longer_runtime(self, ck):
+        """T_final is monotonically decreasing in mu at fixed T."""
+        assume(ck.valid_period_range()[1] > ck.valid_period_range()[0] * 1.01)
+        t = t_opt_time(ck)
+        worse = CheckpointParams(C=ck.C, R=ck.R, D=ck.D, mu=ck.mu / 2,
+                                 omega=ck.omega)
+        lo, hi = worse.valid_period_range()
+        assume(lo * 1.01 < t < hi * 0.99)
+        assert float(time_final(t, worse)) > float(time_final(t, ck))
+
+
+class TestKernelProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 4), st.sampled_from([128, 256]),
+           st.sampled_from([128, 256]))
+    def test_flash_attention_rows_sum_to_convex_combination(self, b, s, dh):
+        """Attention outputs are convex combinations of V rows: outputs are
+        bounded by V's min/max per dim."""
+        q = jax.random.normal(jax.random.key(0), (b, s, dh))
+        k = jax.random.normal(jax.random.key(1), (b, s, dh))
+        v = jax.random.normal(jax.random.key(2), (b, s, dh))
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, mode="causal", qb=128, kb=128,
+                              interpret=True)
+        vmax = np.asarray(v).max(axis=1, keepdims=True)
+        vmin = np.asarray(v).min(axis=1, keepdims=True)
+        o = np.asarray(out)
+        assert (o <= vmax + 1e-4).all() and (o >= vmin - 1e-4).all()
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_quant_roundtrip_error_bound_random(self, seed):
+        x = jax.random.normal(jax.random.key(seed), (64, 256)) * \
+            (10.0 ** jax.random.uniform(jax.random.key(seed + 1), (), minval=-3, maxval=3))
+        q, s = ref.quant_ref(np.asarray(x))
+        back = ref.dequant_ref(q, s)
+        blocks = np.asarray(x).reshape(64, -1, 128)
+        bound = np.abs(blocks).max(-1, keepdims=True) / 127.0 * 0.5 + 1e-9
+        err = np.abs(np.asarray(back).reshape(64, -1, 128) - blocks)
+        assert (err <= bound + 1e-6).all()
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_rglru_decay_bounds_state(self, seed):
+        """With |a|<1 and bounded inputs, the linear scan stays bounded by
+        max|b|/(1-max|a|) + |h0|."""
+        key = jax.random.key(seed)
+        a = jax.nn.sigmoid(jax.random.normal(key, (2, 128, 64)))
+        a = jnp.minimum(a, 0.95)
+        b = jax.random.normal(jax.random.key(seed + 1), (2, 128, 64))
+        h0 = jnp.zeros((2, 64))
+        h = ref.rglru_ref(a, b, h0)
+        bound = float(jnp.max(jnp.abs(b))) / (1 - 0.95) + 1e-3
+        assert float(jnp.max(jnp.abs(h))) <= bound
+
+
+class TestDataPipelineProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(0, 100))
+    def test_batches_are_pure_functions_of_state(self, seed, step):
+        from repro.data import SyntheticLM, DataConfig
+        cfg = DataConfig(vocab_size=512, batch=2, seq_len=16, seed=seed)
+        d1 = SyntheticLM(cfg, step=step)
+        d2 = SyntheticLM(cfg, step=step)
+        b1, b2 = d1.peek(), d2.peek()
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        # tokens in range
+        t = np.asarray(b1["tokens"])
+        assert (t >= 0).all() and (t < 512).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 50), st.integers(1, 20))
+    def test_restore_resumes_exact_stream(self, start, advance):
+        from repro.data import SyntheticLM, DataConfig
+        cfg = DataConfig(vocab_size=128, batch=2, seq_len=8, seed=7)
+        d = SyntheticLM(cfg, step=start)
+        state = d.state()
+        stream1 = [np.asarray(next(d)["tokens"]) for _ in range(advance)]
+        d2 = SyntheticLM(cfg)
+        d2.restore(state)
+        stream2 = [np.asarray(next(d2)["tokens"]) for _ in range(advance)]
+        for a, b in zip(stream1, stream2):
+            np.testing.assert_array_equal(a, b)
+
+
+class TestShardingProperties:
+    @settings(max_examples=30, deadline=None)
+    @given(st.sampled_from(["batch", "vocab", "heads", "mlp", "experts"]),
+           st.integers(1, 64))
+    def test_resolution_never_breaks_divisibility(self, name, dim):
+        from repro.parallel.sharding import resolve_pspec
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(len(jax.devices()))
+        spec = resolve_pspec((name,), mesh, shape=(dim,))
+        size = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                size *= mesh.shape[a]
+        assert dim % size == 0
