@@ -1,0 +1,83 @@
+"""Scalar vs batched Figure-2 sweep timing -> BENCH_sweep.json.
+
+Times the seed per-point loop (``tradeoff.sweep_mu_rho(engine="scalar")``)
+against the batched ``repro.sim`` grid evaluation on (a) the seed benchmark
+grid and (b) a dense production-resolution grid, and records the numbers in
+``BENCH_sweep.json`` at the repo root (plus a copy under
+``benchmarks/results/``).  Acceptance target: >= 10x on the Fig. 2 sweep.
+"""
+import json
+import time
+from pathlib import Path
+
+from ._util import emit, RESULTS
+
+SEED_MUS = [30, 60, 90, 120, 180, 240, 300, 420, 600]
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _best_of(fn, repeat):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _time_pair(mus, rhos, scalar_repeat, batched_repeat):
+    import numpy as np
+    from repro.core.tradeoff import sweep_mu_rho
+    from repro.sim import sweep_mu_rho_grid
+
+    scalar_s = _best_of(lambda: sweep_mu_rho(mus, rhos, engine="scalar"),
+                        scalar_repeat)
+    t0 = time.perf_counter()
+    res = sweep_mu_rho_grid(mus, rhos)
+    cold_s = time.perf_counter() - t0
+    batched_s = _best_of(lambda: sweep_mu_rho_grid(mus, rhos), batched_repeat)
+
+    # Cross-check the two paths agree before trusting the timing.
+    ref = sweep_mu_rho(mus, rhos, engine="scalar")
+    err = max(abs(res.energy_ratio[i][j] - ref[i][j].energy_ratio)
+              for i in range(len(mus)) for j in range(len(rhos)))
+    assert err < 1e-9, f"scalar/batched sweep disagree: {err}"
+
+    return {"n_points": len(mus) * len(rhos),
+            "scalar_s": scalar_s,
+            "batched_cold_s": cold_s,
+            "batched_warm_s": batched_s,
+            "speedup_warm": scalar_s / batched_s}
+
+
+def run():
+    import numpy as np
+
+    seed_grid = _time_pair(SEED_MUS, list(np.linspace(1.0, 10.0, 10)),
+                           scalar_repeat=5, batched_repeat=10)
+    dense_grid = _time_pair(list(np.linspace(30.0, 600.0, 96)),
+                            list(np.linspace(1.0, 10.0, 100)),
+                            scalar_repeat=1, batched_repeat=3)
+    payload = {
+        "benchmark": "fig2_mu_rho_sweep",
+        "unit": "seconds",
+        "fig2_seed_grid": seed_grid,
+        "dense_grid": dense_grid,
+    }
+    for path in (ROOT / "BENCH_sweep.json", RESULTS / "BENCH_sweep.json"):
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+    return payload
+
+
+def main():
+    payload = run()
+    s, d = payload["fig2_seed_grid"], payload["dense_grid"]
+    emit("bench_sweep", s["batched_warm_s"] * 1e6,
+         f"fig2 {s['n_points']}pts speedup={s['speedup_warm']:.1f}x; "
+         f"dense {d['n_points']}pts speedup={d['speedup_warm']:.1f}x "
+         f"-> BENCH_sweep.json")
+
+
+if __name__ == "__main__":
+    main()

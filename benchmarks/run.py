@@ -11,10 +11,10 @@ import traceback
 def main() -> None:
     from . import (fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
                    table_baselines, table_simulation, table_arch_periods,
-                   bench_kernels, roofline)
+                   bench_kernels, bench_sweep, roofline)
     modules = [fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
                table_baselines, table_simulation, table_arch_periods,
-               bench_kernels, roofline]
+               bench_kernels, bench_sweep, roofline]
     print("name,us_per_call,derived")
     failures = 0
     for m in modules:

@@ -1,36 +1,29 @@
 """Per-architecture instantiation of the paper's model on the production
-mesh: checkpoint bytes -> C, platform MTBF -> optimal periods & predicted
-energy gains, for the paper profile and a v5e-host profile."""
+mesh, via the ``repro.sim`` scenario catalog: checkpoint bytes -> C,
+platform MTBF -> optimal periods & predicted energy gains — the whole
+architecture table solved as one batched grid."""
 from ._util import emit, timed, RESULTS
 
 
 def run():
     from repro.configs import ALL_ARCHS
-    from repro.core import CheckpointParams, t_opt_time, t_opt_energy, \
-        evaluate
-    from repro.energy import PAPER_EXASCALE_PROFILE, TPU_V5E_HOST_PROFILE
-    from repro.models import build
+    from repro.sim import arch_grid, evaluate_grid
+    from repro.sim.scenarios import STATE_BYTES_PER_PARAM
 
-    # I/O model: 64 hosts/pod, 8 GB/s effective per host (buddy/NVMe tier);
-    # optimizer state = bf16 params + bf16 m + f32 master (+factored v).
-    hosts = 64
-    bw = 8e9
-    n_nodes = 256                       # chips as failure units
-    mu_ind_s = 125.0 * 365 * 24 * 3600  # Jaguar-derived per-unit MTBF
-    mu_s = mu_ind_s / n_nodes
-    D_s, omega = 60.0, 0.5
+    hosts, bw = 64, 8e9
+    names = [c.name for c in ALL_ARCHS]
+    grid = arch_grid(names, hosts=hosts, bw=bw, n_nodes=256, D_s=60.0,
+                     omega=0.5, profile="paper")
+    res = evaluate_grid(grid)
 
     rows = []
-    pw = PAPER_EXASCALE_PROFILE.power_params()
-    for cfg in ALL_ARCHS:
-        n = build(cfg).param_count()
-        state_bytes = n * (2 + 2 + 4)   # bf16 p + bf16 m + f32 master
-        C = state_bytes / (hosts * bw)
-        ck = CheckpointParams(C=C, R=C, D=D_s, mu=mu_s, omega=omega)
-        pt = evaluate(ck, pw)
-        rows.append((cfg.name, n / 1e9, state_bytes / 2**30, C,
-                     pt.T_time, pt.T_energy,
-                     pt.energy_ratio, pt.time_ratio))
+    for i, name in enumerate(names):
+        C = float(grid.C[i])
+        state_bytes = C * hosts * bw
+        n = state_bytes / STATE_BYTES_PER_PARAM
+        rows.append((name, n / 1e9, state_bytes / 2**30, C,
+                     float(res.T_time[i]), float(res.T_energy[i]),
+                     float(res.energy_ratio[i]), float(res.time_ratio[i])))
     out = RESULTS / "table_arch_periods.csv"
     with open(out, "w") as f:
         f.write("arch,params_B,state_GiB,C_s,T_opt_time_s,T_opt_energy_s,"
@@ -43,7 +36,7 @@ def run():
 
 
 def main():
-    (out, big), us = timed(run, repeat=1)
+    (out, big), us = timed(run, repeat=2)
     emit("table_arch_periods", us,
          f"largest C: {big[0]} C={big[3]:.1f}s T_opt={big[4]:.0f}s "
          f"-> {out.name}")

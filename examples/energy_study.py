@@ -1,7 +1,9 @@
 """Reproduce the paper's experimental section (Figures 1-3) from the library
-API and check its headline claims.
+API and check its headline claims — sweeps run on the batched ``repro.sim``
+subsystem, and the Fig. 1/2 operating point is additionally validated by the
+vectorized Monte-Carlo engine against the closed-form expectations.
 
-    PYTHONPATH=src python examples/energy_study.py
+    PYTHONPATH=src python examples/energy_study.py        (or pip install -e .)
 """
 import sys
 from pathlib import Path
@@ -9,33 +11,55 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.core import (sweep_rho, sweep_nodes, fig12_checkpoint, evaluate,
-                        EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7)
+from repro.core import EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7
+from repro.sim import (ParamGrid, get_scenario, list_scenarios, simulate_grid,
+                       sweep_nodes_grid, sweep_rho_grid)
+from repro.sim.sweep import evaluate_grid
 
 
 def main():
-    print("== Figure 1/2 operating point (mu=300 min, rho=5.5) ==")
-    pt = evaluate(fig12_checkpoint(300.0), EXASCALE_POWER_RHO55)
-    print(f"energy gain {(pt.energy_ratio-1)*100:.1f}% "
+    print("== Scenario catalog ==")
+    for name, doc in list_scenarios().items():
+        print(f"  {name:15s} {doc}")
+
+    print("\n== Figure 1/2 operating point (mu=300 min, rho=5.5) ==")
+    sc = get_scenario("exascale_rho55", mu_min=300.0)
+    grid = ParamGrid.from_params(sc.ckpt, sc.power).reshape((1,))
+    pt = evaluate_grid(grid)
+    print(f"energy gain {(pt.energy_ratio[0]-1)*100:.1f}% "
           f"(paper: 'more than 20%'), "
-          f"time loss {(pt.time_ratio-1)*100:.1f}% (paper: '~10%')")
+          f"time loss {(pt.time_ratio[0]-1)*100:.1f}% (paper: '~10%')")
+
+    print("\n== Monte-Carlo validation of that point (batched engine) ==")
+    T_base = 4000.0
+    sim_t = simulate_grid(pt.T_time, grid, T_base, n_trials=300, seed=0)
+    sim_e = simulate_grid(pt.T_energy, grid, T_base, n_trials=300, seed=0)
+    print(f"  AlgoT: simulated E = {sim_t['E_final'][0]:.0f} "
+          f"(model {pt.E_time[0]*T_base:.0f})")
+    print(f"  AlgoE: simulated E = {sim_e['E_final'][0]:.0f} "
+          f"(model {pt.E_energy[0]*T_base:.0f})")
+    print(f"  simulated energy gain: "
+          f"{(sim_t['E_final'][0]/sim_e['E_final'][0]-1)*100:.1f}%")
 
     print("\n== Figure 1: gain vs rho at mu=300 ==")
-    for p in sweep_rho([1, 2, 4, 5.5, 7, 10], 300.0):
-        print(f"  rho={p.power.rho:5.2f}  e_ratio={p.energy_ratio:.3f}  "
-              f"t_ratio={p.time_ratio:.3f}")
+    rhos = [1, 2, 4, 5.5, 7, 10]
+    res = sweep_rho_grid(rhos, 300.0)
+    for j, r in enumerate(rhos):
+        print(f"  rho={r:5.2f}  e_ratio={res.energy_ratio[0, j]:.3f}  "
+              f"t_ratio={res.time_ratio[0, j]:.3f}")
 
     print("\n== Figure 3: scalability (rho=7) ==")
     ns = [1e5, 1e6, 3e6, 1e7, 1e8]
-    pts = sweep_nodes(ns, EXASCALE_POWER_RHO7)
-    for n, p in zip(ns, pts):
-        print(f"  N={n:9.0e} mu={p.ckpt.mu:8.2f} min  "
-              f"e_ratio={p.energy_ratio:.3f}  t_ratio={p.time_ratio:.3f}")
-    peak = max(pts, key=lambda p: p.energy_ratio)
-    print(f"peak gain {(peak.energy_ratio-1)*100:.0f}% at "
-          f"{(peak.time_ratio-1)*100:.0f}% overhead "
+    res3 = sweep_nodes_grid(ns, EXASCALE_POWER_RHO7)
+    for i, n in enumerate(ns):
+        print(f"  N={n:9.0e} mu={res3.grid.mu[i]:8.2f} min  "
+              f"e_ratio={res3.energy_ratio[i]:.3f}  "
+              f"t_ratio={res3.time_ratio[i]:.3f}")
+    k = int(np.argmax(res3.energy_ratio))
+    print(f"peak gain {(res3.energy_ratio[k]-1)*100:.0f}% at "
+          f"{(res3.time_ratio[k]-1)*100:.0f}% overhead "
           f"(paper: 'up to 30% for ~12%'); ratios -> "
-          f"{pts[-1].energy_ratio:.3f}/{pts[-1].time_ratio:.3f} at 1e8 nodes")
+          f"{res3.energy_ratio[-1]:.3f}/{res3.time_ratio[-1]:.3f} at 1e8 nodes")
 
 
 if __name__ == "__main__":

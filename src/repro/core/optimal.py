@@ -172,7 +172,10 @@ def t_opt_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
     """AlgoE: the positive root of the exact quadratic K(T) E'(T) = 0.
 
     Falls back to the numeric argmin when the quadratic has no root inside
-    the valid range (e.g. the minimum sits on the bracket boundary).
+    the valid range (e.g. the minimum sits on the bracket boundary), when
+    the in-bracket root is a *maximum* of E (E'' < 0 there — E' = Q/K with
+    K > 0, so sign(E'') at a root equals sign(Q')), or when the numeric
+    argmin finds strictly lower energy than the chosen root.
     """
     lo, hi = _bracket(ckpt)
     try:
@@ -187,11 +190,22 @@ def t_opt_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
              and lo < r.real < hi]
     if not cands:
         return t_opt_energy_numeric(ckpt, power)
-    if len(cands) == 1:
-        return cands[0]
     # Pick the root where E is smallest (E' sign change - to +).
     es = [float(model.energy_final(t, ckpt, power)) for t in cands]
-    return cands[int(np.argmin(es))]
+    t_best = cands[int(np.argmin(es))]
+    if len(cands) == 1 and 2.0 * c2 * t_best + c1 > 0.0:
+        # Unique in-bracket root satisfying the minimum condition (E' = Q/K
+        # with K > 0, so sign(E'') at the root equals sign(Q')): E' crosses
+        # - to + exactly once, this is the interior minimum.
+        return t_best
+    # Otherwise (maximum-branch root, or several roots where a boundary
+    # minimum may win) cross-check against the numeric argmin and prefer it
+    # on disagreement.
+    t_num = t_opt_energy_numeric(ckpt, power)
+    e_num = float(model.energy_final(t_num, ckpt, power))
+    if 2.0 * c2 * t_best + c1 <= 0.0 or e_num < min(es) * (1.0 - 1e-12):
+        return t_num
+    return t_best
 
 
 def t_opt_energy_numeric(ckpt: CheckpointParams, power: PowerParams,

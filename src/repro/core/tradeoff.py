@@ -3,6 +3,13 @@
 All ratios follow the paper's conventions:
   time_ratio   = T_final(AlgoE) / T_final(AlgoT)   (>= 1; "loss in time")
   energy_ratio = E_final(AlgoT) / E_final(AlgoE)   (>= 1; "gain in energy")
+
+``evaluate`` is the scalar reference path (one point, exact solvers from
+``optimal``).  The sweep functions delegate to the batched ``repro.sim``
+subsystem by default — the whole grid is solved in a few jitted float64
+calls — and return the same ``TradeoffPoint`` lists as before; pass
+``engine="scalar"`` to force the per-point reference loop (used by the
+parity tests and the sweep benchmark).
 """
 from __future__ import annotations
 
@@ -54,16 +61,34 @@ def evaluate(ckpt: CheckpointParams, power: PowerParams) -> TradeoffPoint:
                          time_ratio=t_ratio, energy_ratio=e_ratio)
 
 
+def _points_from_grid(res) -> np.ndarray:
+    """GridResult -> object array of TradeoffPoint with the grid's shape."""
+    grid = res.grid
+    out = np.empty(grid.shape, dtype=object)
+    for idx in np.ndindex(grid.shape):
+        out[idx] = TradeoffPoint(
+            ckpt=grid.ckpt_at(idx), power=grid.power_at(idx),
+            T_time=float(res.T_time[idx]), T_energy=float(res.T_energy[idx]),
+            time_ratio=float(res.time_ratio[idx]),
+            energy_ratio=float(res.energy_ratio[idx]))
+    return out
+
+
 # ----------------------------------------------------------------------
 # Figure 1: ratios as a function of rho, for several mu
 # ----------------------------------------------------------------------
 
 def sweep_rho(rhos: Sequence[float], mu_minutes: float,
-              alpha: float = 1.0) -> list[TradeoffPoint]:
+              alpha: float = 1.0,
+              engine: str = "batched") -> list[TradeoffPoint]:
     """C=R=10, D=1, omega=1/2 (paper Fig. 1); rho swept at fixed alpha."""
-    ck = fig12_checkpoint(mu_minutes)
-    return [evaluate(ck, PowerParams.from_rho(rho=r, alpha=alpha))
-            for r in rhos]
+    if engine == "scalar":
+        ck = fig12_checkpoint(mu_minutes)
+        return [evaluate(ck, PowerParams.from_rho(rho=r, alpha=alpha))
+                for r in rhos]
+    from .. import sim
+    res = sim.sweep_rho_grid(rhos, mu_minutes, alpha)
+    return list(_points_from_grid(res)[0])
 
 
 # ----------------------------------------------------------------------
@@ -72,10 +97,15 @@ def sweep_rho(rhos: Sequence[float], mu_minutes: float,
 
 def sweep_mu_rho(mus: Sequence[float],
                  rhos: Sequence[float],
-                 alpha: float = 1.0) -> list[list[TradeoffPoint]]:
-    return [[evaluate(fig12_checkpoint(mu), PowerParams.from_rho(rho=r,
-                                                                 alpha=alpha))
-             for r in rhos] for mu in mus]
+                 alpha: float = 1.0,
+                 engine: str = "batched") -> list[list[TradeoffPoint]]:
+    if engine == "scalar":
+        return [[evaluate(fig12_checkpoint(mu),
+                          PowerParams.from_rho(rho=r, alpha=alpha))
+                 for r in rhos] for mu in mus]
+    from .. import sim
+    res = sim.sweep_mu_rho_grid(mus, rhos, alpha)
+    return [list(row) for row in _points_from_grid(res)]
 
 
 # ----------------------------------------------------------------------
@@ -83,6 +113,11 @@ def sweep_mu_rho(mus: Sequence[float],
 # ----------------------------------------------------------------------
 
 def sweep_nodes(n_nodes: Sequence[float],
-                power: PowerParams) -> list[TradeoffPoint]:
+                power: PowerParams,
+                engine: str = "batched") -> list[TradeoffPoint]:
     """C=R=1, D=0.1, omega=1/2, mu = 120 min at 1e6 nodes, ~ 1/N."""
-    return [evaluate(fig3_checkpoint(n), power) for n in n_nodes]
+    if engine == "scalar":
+        return [evaluate(fig3_checkpoint(n), power) for n in n_nodes]
+    from .. import sim
+    res = sim.sweep_nodes_grid(n_nodes, power)
+    return list(_points_from_grid(res))

@@ -14,7 +14,11 @@ import dataclasses
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types on the mesh
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto on every axis
+    AxisType = None
 
 from ..parallel import sharding as shd
 
@@ -57,9 +61,11 @@ def build_mesh(plan: ElasticPlan):
     for s in shape:
         need *= s
     devs = jax.devices()[:need]
-    return jax.make_mesh(shape, names,
-                         devices=devs,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    if AxisType is not None:
+        return jax.make_mesh(shape, names,
+                             devices=devs,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, names, devices=devs)
 
 
 def reshard_tree(tree, spec_tree, new_mesh, rules=None):

@@ -11,7 +11,12 @@ import math
 from typing import Optional
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 exposes explicit axis types on the mesh
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are implicitly Auto on every axis
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -50,9 +55,11 @@ def _mesh(shape, axes) -> Mesh:
             f"dry-run entry point must set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
             f"BEFORE importing jax.")
-    return jax.make_mesh(shape, axes,
-                         devices=devs[:need],
-                         axis_types=(AxisType.Auto,) * len(shape))
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             devices=devs[:need],
+                             axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, devices=devs[:need])
 
 
 #: TPU v5e hardware constants used by the roofline analysis (per chip).

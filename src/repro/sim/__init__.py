@@ -1,0 +1,24 @@
+"""Vectorized simulation + sweep subsystem.
+
+Layers:
+  scenarios — declarative catalog of platform/power scenarios and the
+              struct-of-arrays :class:`ParamGrid` the batched layers consume.
+  engine    — the Monte-Carlo trajectory loop as a fixed-shape ``jax.lax.scan``
+              phase machine, vmapped over trials and parameter batches.
+  sweep     — batched closed-form model + period solvers (AlgoT/AlgoE/Young/
+              Daly/MSK) evaluated for a whole grid in a few jitted calls.
+
+The scalar ``repro.core.simulator.simulate_once`` remains the reference
+oracle; ``tests/test_sim_engine.py`` pins the batched engine to it
+trajectory-for-trajectory under a shared failure schedule.
+"""
+from .scenarios import (ParamGrid, Scenario, get_scenario, list_scenarios,
+                        register_scenario, mu_rho_grid, nodes_grid,
+                        product_grid, arch_grid, grid_from_scenarios)
+from .engine import (TrajectoryBatch, ScheduledRNG, simulate_trajectories,
+                     simulate_grid, presample_gaps)
+from .sweep import (GridResult, evaluate_grid, golden_section_batched,
+                    t_opt_time_batched, t_opt_energy_batched,
+                    t_young_batched, t_daly_batched, t_msk_energy_batched,
+                    time_final_batched, energy_final_batched,
+                    sweep_rho_grid, sweep_mu_rho_grid, sweep_nodes_grid)

@@ -1,0 +1,350 @@
+"""Batched Monte-Carlo trajectory engine (``jax.lax.scan`` phase machine).
+
+The scalar event loop of ``repro.core.simulator.simulate_once`` rewritten as
+a fixed-shape scan so it can be ``vmap``-ed over trials and again over
+parameter batches, and jitted in float64 (under the local ``enable_x64``
+context — global JAX dtype state is untouched).
+
+Scan-state layout (one trajectory; all scalars):
+
+    wall        f64  wall-clock time
+    committed   f64  work protected by the last COMPLETED checkpoint
+    live        f64  work executed since the last rollback point
+    work_exec   f64  total CPU work executed (incl. re-execution)
+    io_time     f64  cumulative I/O-active time (ckpt writes + recoveries)
+    down_time   f64  cumulative downtime
+    next_fail   f64  absolute time of the next failure
+    phase_left  f64  time remaining in the current phase
+    snapshot    f64  work value being written by the in-flight checkpoint
+    phase       i32  0 = compute (rate 1), 1 = checkpoint (rate omega)
+    n_fail      i32  failures so far
+    n_ckpt      i32  committed checkpoints so far
+    fail_idx    i32  next index into the pre-sampled failure-gap array
+    done        bool trajectory reached T_base work
+
+One scan step processes one *event* (phase-segment completion or failure),
+mirroring the scalar loop body branch-for-branch; steps after ``done`` are
+no-ops.  Checkpoint-commit semantics follow the paper: a checkpoint commits
+the state as of the *beginning* of its phase, so the omega*C work done
+concurrently is only protected by the NEXT completed checkpoint.
+
+Failure times are consumed from a per-trajectory array of exponential gaps
+(pre-sampled outside the scan).  Feeding the same gaps to the scalar oracle
+via :class:`ScheduledRNG` reproduces trajectories bit-for-bit — the parity
+tests rely on this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+try:  # newer jax re-exports the x64 context at top level
+    from jax import enable_x64
+except ImportError:
+    from jax.experimental import enable_x64
+
+from .scenarios import ParamGrid
+
+COMPUTE, CHECKPOINT = 0, 1
+
+#: work-completion slack, identical to the scalar simulator's epsilon.
+_EPS = 1e-12
+
+
+class ScheduledRNG:
+    """np.random.Generator stand-in replaying a fixed gap schedule.
+
+    ``simulate_once(..., rng=ScheduledRNG(gaps))`` consumes exactly the
+    pre-sampled inter-failure gaps the batched engine was given, enabling
+    trajectory-for-trajectory parity checks.
+    """
+
+    def __init__(self, gaps):
+        self._gaps = [float(g) for g in np.asarray(gaps).ravel()]
+        self._i = 0
+
+    def exponential(self, scale: float = 1.0) -> float:
+        if self._i >= len(self._gaps):
+            return math.inf          # schedule exhausted: no more failures
+        g = self._gaps[self._i]
+        self._i += 1
+        return g
+
+
+@dataclasses.dataclass(frozen=True)
+class TrajectoryBatch:
+    """Per-trajectory outputs, shape ``grid.shape + (n_trials,)``."""
+
+    wall_time: np.ndarray        # paper's T_final
+    energy: np.ndarray           # paper's E_final
+    work_executed: np.ndarray    # paper's T_cal
+    io_time: np.ndarray          # paper's T_io
+    down_time: np.ndarray        # paper's T_down
+    n_failures: np.ndarray
+    n_checkpoints: np.ndarray
+    truncated: np.ndarray        # scan budget exhausted before completion
+    gaps_exhausted: np.ndarray   # failure schedule ran dry (tail simulated
+                                 # as failure-free -> potentially biased)
+
+
+def _run_one(T, C, R, D, omega, T_base, gaps, n_steps):
+    """One trajectory: scalar parameter tracers + a (F,) gap vector.
+
+    Failure times come entirely from ``gaps`` (pre-sampled with scale mu
+    outside the scan), so mu itself never enters the kernel.
+    """
+    f64 = gaps.dtype
+    n_gaps = gaps.shape[0]
+
+    init = (jnp.zeros((), f64),            # wall
+            jnp.zeros((), f64),            # committed
+            jnp.zeros((), f64),            # live
+            jnp.zeros((), f64),            # work_exec
+            jnp.zeros((), f64),            # io_time
+            jnp.zeros((), f64),            # down_time
+            gaps[0],                       # next_fail
+            T - C,                         # phase_left
+            jnp.zeros((), f64),            # snapshot
+            jnp.zeros((), jnp.int32),      # phase = COMPUTE
+            jnp.zeros((), jnp.int32),      # n_fail
+            jnp.zeros((), jnp.int32),      # n_ckpt
+            jnp.ones((), jnp.int32),       # fail_idx (gaps[0] consumed)
+            jnp.zeros((), jnp.bool_))      # done
+
+    def step(carry, _):
+        (wall, committed, live, work_exec, io_time, down_time,
+         next_fail, phase_left, snapshot, phase,
+         n_fail, n_ckpt, fail_idx, done) = carry
+
+        in_ckpt = phase == CHECKPOINT
+        rate = jnp.where(in_ckpt, omega, 1.0)
+        t_done = jnp.where(rate > 0.0,
+                           (T_base - live) / jnp.where(rate > 0.0, rate, 1.0),
+                           jnp.inf)
+        t_next = jnp.minimum(phase_left, t_done)
+        no_fail = wall + t_next < next_fail
+
+        # ---- branch A: the phase segment completes without failure ----
+        wall_a = wall + t_next
+        live_a = live + rate * t_next
+        work_a = work_exec + rate * t_next
+        io_a = io_time + jnp.where(in_ckpt, t_next, 0.0)
+        left_a = phase_left - t_next
+        finished = live_a >= T_base - _EPS
+        boundary = jnp.logical_and(~finished, left_a <= _EPS)
+        start_ckpt = jnp.logical_and(boundary, ~in_ckpt)
+        end_ckpt = jnp.logical_and(boundary, in_ckpt)
+        phase_a = jnp.where(start_ckpt, CHECKPOINT,
+                            jnp.where(end_ckpt, COMPUTE, phase))
+        left_a = jnp.where(start_ckpt, C, jnp.where(end_ckpt, T - C, left_a))
+        snapshot_a = jnp.where(start_ckpt, live_a, snapshot)
+        committed_a = jnp.where(end_ckpt, snapshot, committed)
+        n_ckpt_a = n_ckpt + end_ckpt.astype(jnp.int32)
+
+        # ---- branch B: a failure strikes mid-segment ----
+        dt = next_fail - wall
+        work_b = work_exec + rate * dt
+        io_b = io_time + jnp.where(in_ckpt, dt, 0.0) + R
+        wall_b = next_fail + D + R
+        down_b = down_time + D
+        gap = jnp.where(fail_idx < n_gaps,
+                        gaps[jnp.minimum(fail_idx, n_gaps - 1)], jnp.inf)
+        next_fail_b = wall_b + gap
+
+        def sel(a_val, b_val):
+            return jnp.where(no_fail, a_val, b_val)
+
+        new = (sel(wall_a, wall_b),
+               sel(committed_a, committed),
+               sel(live_a, committed),          # failure rolls back to commit
+               sel(work_a, work_b),
+               sel(io_a, io_b),
+               sel(down_time, down_b),
+               sel(next_fail, next_fail_b),
+               sel(left_a, T - C),
+               sel(snapshot_a, snapshot),
+               sel(phase_a, COMPUTE).astype(jnp.int32),
+               sel(n_fail, n_fail + 1).astype(jnp.int32),
+               sel(n_ckpt_a, n_ckpt).astype(jnp.int32),
+               sel(fail_idx, fail_idx + 1).astype(jnp.int32),
+               jnp.logical_or(done, jnp.logical_and(no_fail, finished)))
+
+        keep = lambda old, upd: jnp.where(done, old, upd)
+        return tuple(keep(o, u) for o, u in zip(carry, new)), None
+
+    final, _ = lax.scan(step, init, None, length=n_steps)
+    (wall, _committed, _live, work_exec, io_time, down_time,
+     _nf, _pl, _snap, _phase, n_fail, n_ckpt, fail_idx, done) = final
+    return {"wall_time": wall, "work_executed": work_exec,
+            "io_time": io_time, "down_time": down_time,
+            "n_failures": n_fail, "n_checkpoints": n_ckpt,
+            "truncated": ~done,
+            # fail_idx > n_gaps means an inf gap was drawn at some point,
+            # i.e. part of the trajectory ran under "no more failures".
+            "gaps_exhausted": fail_idx > n_gaps}
+
+
+def _make_runner(n_steps: int):
+    def run_grid(T, C, R, D, omega, T_base, gaps):
+        def one(t, c, r, d, o, tb, g):
+            return _run_one(t, c, r, d, o, tb, g, n_steps)
+        over_trials = jax.vmap(one, in_axes=(None,) * 6 + (0,))
+        over_grid = jax.vmap(over_trials, in_axes=(0,) * 6 + (0,))
+        return over_grid(T, C, R, D, omega, T_base, gaps)
+    return jax.jit(run_grid)
+
+
+_RUNNERS: dict = {}
+
+
+def _runner(n_steps: int):
+    if n_steps not in _RUNNERS:
+        _RUNNERS[n_steps] = _make_runner(n_steps)
+    return _RUNNERS[n_steps]
+
+
+# ---------------------------------------------------------------------------
+# Budget estimation
+# ---------------------------------------------------------------------------
+
+def _expected_failures(T, grid: ParamGrid, T_base) -> np.ndarray:
+    """E[#failures] from the closed-form model, clipped to be usable even
+    slightly outside the model's validity range."""
+    a, b = grid.a, grid.b
+    denom = (T - a) * (b - T / (2.0 * grid.mu))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        tf = np.where(denom > 1e-12, T_base * T / denom, np.inf)
+    # Divergent/degenerate points: fall back to a crude geometric bound.
+    tf = np.where(np.isfinite(tf) & (tf > 0), tf, 50.0 * T_base)
+    return tf / grid.mu
+
+
+def default_fail_capacity(T, grid: ParamGrid, T_base) -> int:
+    """Pre-sampled gaps per trajectory: mean + 10 sigma (Poisson) margin."""
+    nf = _expected_failures(T, grid, T_base)
+    return int(np.max(np.ceil(nf + 10.0 * np.sqrt(nf + 1.0) + 10.0)))
+
+
+def default_step_budget(T, grid: ParamGrid, T_base) -> int:
+    """Scan length: expected events with a 2x + fluctuation margin."""
+    work_per_period = np.maximum(T - grid.a, 1e-9)
+    periods = T_base / work_per_period
+    nf = _expected_failures(T, grid, T_base)
+    # Each failure costs one event plus re-execution of at most one period
+    # of work (2 phase events per period, +2 for the partial segments).
+    per_fail = 2.0 * np.maximum(T / work_per_period, 1.0) + 4.0
+    events = 2.0 * periods + 2.0 + nf * per_fail
+    margin = 10.0 * np.sqrt(nf + 1.0) * per_fail
+    return int(np.max(np.ceil(2.0 * events + margin + 64.0)))
+
+
+def presample_gaps(grid: ParamGrid, n_trials: int, capacity: int,
+                   seed: int = 0) -> np.ndarray:
+    """Exponential(mu) inter-failure gaps, shape ``(B, n_trials, capacity)``."""
+    rng = np.random.default_rng(seed)
+    mu = grid.ravel().mu[:, None, None]
+    return rng.exponential(scale=mu,
+                           size=(grid.size, n_trials, capacity))
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
+                          n_trials: int = 200, seed: int = 0,
+                          gaps: Optional[np.ndarray] = None,
+                          n_steps: Optional[int] = None) -> TrajectoryBatch:
+    """Simulate every (grid point x trial) trajectory in one jitted call.
+
+    ``T`` broadcasts against ``grid.shape``.  ``gaps`` (grid.size, n_trials,
+    F) overrides the pre-sampled failure schedule — pass the same schedule to
+    the scalar oracle via :class:`ScheduledRNG` for parity checks.
+    """
+    flat = grid.ravel()
+    T_arr = np.broadcast_to(np.asarray(T, dtype=np.float64),
+                            grid.shape).ravel()
+    Tb_arr = np.broadcast_to(np.asarray(T_base, dtype=np.float64),
+                             grid.shape).ravel()
+    if np.any(T_arr <= (1.0 - flat.omega) * flat.C):
+        raise ValueError("period too short: no work progress per period")
+
+    if gaps is None:
+        cap = default_fail_capacity(T_arr, flat, Tb_arr)
+        gaps = presample_gaps(flat, n_trials, cap, seed=seed)
+    else:
+        gaps = np.asarray(gaps, dtype=np.float64)
+        if gaps.ndim == 1:
+            gaps = gaps[None, None, :]
+        if gaps.ndim == 2:
+            gaps = gaps[None, :, :]
+        want = (flat.size, gaps.shape[-2], gaps.shape[-1])
+        gaps = np.broadcast_to(gaps, want)
+        n_trials = gaps.shape[-2]
+    if n_steps is None:
+        n_steps = default_step_budget(T_arr, flat, Tb_arr)
+    # Round the (static) scan length up to a power of two: extra steps are
+    # no-ops, and bucketing keeps the jit cache at O(log) distinct programs
+    # instead of one recompile per distinct parameter set.
+    n_steps = 1 << (max(int(n_steps), 1) - 1).bit_length()
+
+    with enable_x64():
+        out = _runner(int(n_steps))(
+            jnp.asarray(T_arr), jnp.asarray(flat.C), jnp.asarray(flat.R),
+            jnp.asarray(flat.D), jnp.asarray(flat.omega),
+            jnp.asarray(Tb_arr), jnp.asarray(gaps))
+        out = {k: np.asarray(v) for k, v in out.items()}
+
+    shp = grid.shape + (n_trials,)
+    bc = lambda x: x.reshape(grid.shape + (1,))
+    wall = out["wall_time"].reshape(shp)
+    work = out["work_executed"].reshape(shp)
+    io = out["io_time"].reshape(shp)
+    down = out["down_time"].reshape(shp)
+    energy = (bc(grid.P_static) * wall + bc(grid.P_cal) * work
+              + bc(grid.P_io) * io + bc(grid.P_down) * down)
+    return TrajectoryBatch(
+        wall_time=wall, energy=energy, work_executed=work, io_time=io,
+        down_time=down,
+        n_failures=out["n_failures"].reshape(shp),
+        n_checkpoints=out["n_checkpoints"].reshape(shp),
+        truncated=out["truncated"].reshape(shp),
+        gaps_exhausted=out["gaps_exhausted"].reshape(shp))
+
+
+def simulate_grid(T, grid: ParamGrid, T_base: float = 1.0,
+                  n_trials: int = 200, seed: int = 0,
+                  gaps: Optional[np.ndarray] = None,
+                  n_steps: Optional[int] = None) -> dict:
+    """Batched analogue of ``core.simulator.simulate``: mean/SE summaries.
+
+    Returns a dict of arrays of ``grid.shape`` with the same keys as the
+    scalar ``simulate`` ("T_final", "T_final_se", "E_final", ...).
+    """
+    tb = simulate_trajectories(T, grid, T_base, n_trials=n_trials, seed=seed,
+                               gaps=gaps, n_steps=n_steps)
+    if np.any(tb.truncated):
+        raise RuntimeError(
+            f"{int(tb.truncated.sum())} trajectories exceeded the scan "
+            f"budget; pass a larger n_steps (check params)")
+    if np.any(tb.gaps_exhausted):
+        raise RuntimeError(
+            f"{int(tb.gaps_exhausted.sum())} trajectories exhausted their "
+            f"failure schedule (tail simulated failure-free); pass a gaps "
+            f"array with larger capacity")
+    out = {}
+    n = tb.wall_time.shape[-1]
+    for key, arr in (("T_final", tb.wall_time), ("E_final", tb.energy),
+                     ("T_cal", tb.work_executed), ("T_io", tb.io_time),
+                     ("T_down", tb.down_time),
+                     ("n_failures", tb.n_failures.astype(np.float64))):
+        out[key] = arr.mean(axis=-1)
+        out[key + "_se"] = arr.std(axis=-1, ddof=1) / math.sqrt(n)
+    return out

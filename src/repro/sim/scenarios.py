@@ -1,0 +1,302 @@
+"""Scenario catalog + parameter grids for the batched simulation layers.
+
+A :class:`Scenario` is one named (checkpoint, power) operating point — the
+paper's figure setups, the Exascale §4 scenarios, and per-architecture
+instantiations from ``repro.configs`` all live in one registry instead of
+ad-hoc helper functions scattered over ``core.params`` and the benchmarks.
+
+A :class:`ParamGrid` is the struct-of-arrays form the vectorized engine and
+sweep consume: every resilience/power parameter as a broadcast ``float64``
+array of a common shape, so a whole (scenario x parameter) grid is evaluated
+in a few jitted calls.
+
+Registering a new scenario::
+
+    @register_scenario("my_platform")
+    def my_platform(mu_min: float = 600.0) -> Scenario:
+        ck = CheckpointParams(C=2.0, R=2.0, D=0.5, mu=mu_min, omega=0.25)
+        pw = PowerParams.from_ratios(alpha=0.8, beta=4.0)
+        return Scenario(name="my_platform", ckpt=ck, power=pw)
+
+    get_scenario("my_platform", mu_min=120.0)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Sequence
+
+import numpy as np
+
+from ..core.params import (CheckpointParams, PowerParams,
+                           EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7,
+                           MU_IND_JAGUAR_MIN)
+
+
+# ---------------------------------------------------------------------------
+# Scenario: one named operating point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    ckpt: CheckpointParams
+    power: PowerParams
+    T_base: float = 1.0
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Callable[..., Scenario]] = {}
+
+
+def register_scenario(name: str):
+    """Decorator: register a named Scenario constructor."""
+    def deco(fn: Callable[..., Scenario]):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_scenario(name: str, **kwargs) -> Scenario:
+    try:
+        ctor = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"one of {sorted(_REGISTRY)}") from None
+    return ctor(**kwargs)
+
+
+def list_scenarios() -> dict:
+    """name -> first docstring line of each registered constructor."""
+    return {n: (fn.__doc__ or "").strip().splitlines()[0] if fn.__doc__ else ""
+            for n, fn in sorted(_REGISTRY.items())}
+
+
+# -- the paper's figure setups ----------------------------------------------
+
+@register_scenario("fig12")
+def fig12(mu_min: float = 300.0, rho: float = 5.5,
+          alpha: float = 1.0) -> Scenario:
+    """Figures 1-2: C=R=10 min, D=1 min, omega=1/2; power from target rho."""
+    ck = CheckpointParams(C=10.0, R=10.0, D=1.0, mu=mu_min, omega=0.5)
+    pw = PowerParams.from_rho(rho=rho, alpha=alpha)
+    return Scenario(name=f"fig12(mu={mu_min:g},rho={rho:g})", ckpt=ck,
+                    power=pw, description="paper Figures 1-2 setup")
+
+
+@register_scenario("fig3")
+def fig3(n_nodes: float = 1.0e6, rho: float = 5.5) -> Scenario:
+    """Figure 3: C=R=1 min, D=0.1 min, omega=1/2, mu=120 min @ 1e6 nodes."""
+    mu = 120.0 * (1.0e6 / float(n_nodes))
+    ck = CheckpointParams(C=1.0, R=1.0, D=0.1, mu=mu, omega=0.5)
+    pw = EXASCALE_POWER_RHO55 if abs(rho - 5.5) < 1e-9 else (
+        EXASCALE_POWER_RHO7 if abs(rho - 7.0) < 1e-9
+        else PowerParams.from_rho(rho=rho, alpha=1.0))
+    return Scenario(name=f"fig3(N={n_nodes:g},rho={rho:g})", ckpt=ck,
+                    power=pw, description="paper Figure 3 scalability setup")
+
+
+# -- §4 Exascale operating points -------------------------------------------
+
+@register_scenario("exascale_rho55")
+def exascale_rho55(mu_min: float = 300.0) -> Scenario:
+    """Exascale scenario #1: 20 mW/node, half static (rho = 5.5)."""
+    ck = CheckpointParams(C=10.0, R=10.0, D=1.0, mu=mu_min, omega=0.5)
+    return Scenario(name=f"exascale_rho55(mu={mu_min:g})", ckpt=ck,
+                    power=EXASCALE_POWER_RHO55,
+                    description="paper §4 Exascale power scenario, rho=5.5")
+
+
+@register_scenario("exascale_rho7")
+def exascale_rho7(mu_min: float = 300.0) -> Scenario:
+    """Exascale scenario #2: P_static = 5 mW, same overheads (rho = 7)."""
+    ck = CheckpointParams(C=10.0, R=10.0, D=1.0, mu=mu_min, omega=0.5)
+    return Scenario(name=f"exascale_rho7(mu={mu_min:g})", ckpt=ck,
+                    power=EXASCALE_POWER_RHO7,
+                    description="paper §4 Exascale power scenario, rho=7")
+
+
+@register_scenario("jaguar")
+def jaguar(n_nodes: int = 45208, C: float = 10.0, R: float = 10.0,
+           D: float = 1.0, omega: float = 0.5) -> Scenario:
+    """Jaguar-derived platform: mu_ind ~ 125 years, mu = mu_ind / N."""
+    ck = CheckpointParams(C=C, R=R, D=D,
+                         mu=MU_IND_JAGUAR_MIN / float(n_nodes), omega=omega)
+    return Scenario(name=f"jaguar(N={n_nodes})", ckpt=ck,
+                    power=EXASCALE_POWER_RHO55,
+                    description="Jaguar per-proc MTBF scaled to N units")
+
+
+# -- per-architecture instantiation (production mesh) ------------------------
+
+#: optimizer state = bf16 params + bf16 momentum + f32 master copy.
+STATE_BYTES_PER_PARAM = 2 + 2 + 4
+
+
+def _arch_checkpoint_seconds(arch: str, hosts: int, bw: float) -> float:
+    from ..configs import get_config
+    from ..models import build
+    n = build(get_config(arch)).param_count()
+    return n * STATE_BYTES_PER_PARAM / (hosts * bw)
+
+
+@register_scenario("arch")
+def arch(arch: str = "dbrx-132b", hosts: int = 64, bw: float = 8e9,
+         n_nodes: int = 256, D_s: float = 60.0, omega: float = 0.5,
+         profile: str = "paper") -> Scenario:
+    """One production architecture: C from checkpoint bytes / host I/O bw."""
+    from ..energy import PAPER_EXASCALE_PROFILE, TPU_V5E_HOST_PROFILE
+    mu_ind_s = 125.0 * 365 * 24 * 3600          # Jaguar-derived per-unit MTBF
+    C = _arch_checkpoint_seconds(arch, hosts, bw)
+    ck = CheckpointParams(C=C, R=C, D=D_s, mu=mu_ind_s / n_nodes, omega=omega)
+    pw = (PAPER_EXASCALE_PROFILE if profile == "paper"
+          else TPU_V5E_HOST_PROFILE).power_params()
+    return Scenario(name=f"arch({arch})", ckpt=ck, power=pw,
+                    description=f"{arch} on the production mesh "
+                                f"({hosts} hosts @ {bw:g} B/s)")
+
+
+# ---------------------------------------------------------------------------
+# ParamGrid: struct-of-arrays parameter batches
+# ---------------------------------------------------------------------------
+
+_FIELDS = ("C", "R", "D", "mu", "omega",
+           "P_static", "P_cal", "P_io", "P_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamGrid:
+    """Broadcast float64 arrays of checkpoint + power parameters.
+
+    All nine fields share one shape after construction; the batched engine
+    and sweep treat the leading axes as the parameter batch.
+    """
+
+    C: np.ndarray
+    R: np.ndarray
+    D: np.ndarray
+    mu: np.ndarray
+    omega: np.ndarray
+    P_static: np.ndarray
+    P_cal: np.ndarray
+    P_io: np.ndarray
+    P_down: np.ndarray
+
+    def __post_init__(self):
+        arrs = np.broadcast_arrays(*(np.asarray(getattr(self, f),
+                                                dtype=np.float64)
+                                     for f in _FIELDS))
+        for f, a in zip(_FIELDS, arrs):
+            object.__setattr__(self, f, np.ascontiguousarray(a))
+
+    # -- shape plumbing ------------------------------------------------------
+    @property
+    def shape(self) -> tuple:
+        return self.C.shape
+
+    @property
+    def size(self) -> int:
+        return self.C.size
+
+    def ravel(self) -> "ParamGrid":
+        return ParamGrid(**{f: getattr(self, f).ravel() for f in _FIELDS})
+
+    def reshape(self, shape) -> "ParamGrid":
+        return ParamGrid(**{f: getattr(self, f).reshape(shape)
+                            for f in _FIELDS})
+
+    def fields(self) -> dict:
+        """Dict-of-arrays view (a jit-friendly pytree)."""
+        return {f: getattr(self, f) for f in _FIELDS}
+
+    # -- derived (paper §3) --------------------------------------------------
+    @property
+    def a(self) -> np.ndarray:
+        return (1.0 - self.omega) * self.C
+
+    @property
+    def b(self) -> np.ndarray:
+        return 1.0 - (self.D + self.R + self.omega * self.C) / self.mu
+
+    def period_bounds(self) -> tuple:
+        """(lo, hi) of the raw valid-period interval per grid point."""
+        return np.maximum(self.a, self.C), 2.0 * self.mu * self.b
+
+    def valid(self) -> np.ndarray:
+        """Non-degenerate mask — mirrors ``tradeoff.evaluate``'s guard."""
+        lo, hi = self.period_bounds()
+        return hi > lo * (1.0 + 1e-9)
+
+    @property
+    def rho(self) -> np.ndarray:
+        return (self.P_static + self.P_io) / (self.P_static + self.P_cal)
+
+    # -- object views --------------------------------------------------------
+    def ckpt_at(self, idx) -> CheckpointParams:
+        return CheckpointParams(C=float(self.C[idx]), R=float(self.R[idx]),
+                                D=float(self.D[idx]), mu=float(self.mu[idx]),
+                                omega=float(self.omega[idx]))
+
+    def power_at(self, idx) -> PowerParams:
+        return PowerParams(P_static=float(self.P_static[idx]),
+                           P_cal=float(self.P_cal[idx]),
+                           P_io=float(self.P_io[idx]),
+                           P_down=float(self.P_down[idx]))
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_params(cls, ckpt: CheckpointParams,
+                    power: PowerParams) -> "ParamGrid":
+        return cls(C=ckpt.C, R=ckpt.R, D=ckpt.D, mu=ckpt.mu, omega=ckpt.omega,
+                   P_static=power.P_static, P_cal=power.P_cal,
+                   P_io=power.P_io, P_down=power.P_down)
+
+
+def grid_from_scenarios(scens: Iterable[Scenario]) -> ParamGrid:
+    """Stack scenarios along one leading axis (shape ``(len(scens),)``)."""
+    scens = list(scens)
+    return ParamGrid(
+        C=[s.ckpt.C for s in scens], R=[s.ckpt.R for s in scens],
+        D=[s.ckpt.D for s in scens], mu=[s.ckpt.mu for s in scens],
+        omega=[s.ckpt.omega for s in scens],
+        P_static=[s.power.P_static for s in scens],
+        P_cal=[s.power.P_cal for s in scens],
+        P_io=[s.power.P_io for s in scens],
+        P_down=[s.power.P_down for s in scens])
+
+
+def product_grid(ckpts: Sequence[CheckpointParams],
+                 powers: Sequence[PowerParams]) -> ParamGrid:
+    """Outer product grid of shape ``(len(ckpts), len(powers))``."""
+    col = lambda xs: np.asarray(xs, dtype=np.float64)[:, None]
+    row = lambda xs: np.asarray(xs, dtype=np.float64)[None, :]
+    return ParamGrid(
+        C=col([c.C for c in ckpts]), R=col([c.R for c in ckpts]),
+        D=col([c.D for c in ckpts]), mu=col([c.mu for c in ckpts]),
+        omega=col([c.omega for c in ckpts]),
+        P_static=row([p.P_static for p in powers]),
+        P_cal=row([p.P_cal for p in powers]),
+        P_io=row([p.P_io for p in powers]),
+        P_down=row([p.P_down for p in powers]))
+
+
+def mu_rho_grid(mus: Sequence[float], rhos: Sequence[float],
+                alpha: float = 1.0) -> ParamGrid:
+    """Figures 1-2 grid: fig12 resilience x powers at target rho values."""
+    ckpts = [get_scenario("fig12", mu_min=float(m)).ckpt for m in mus]
+    powers = [PowerParams.from_rho(rho=float(r), alpha=alpha) for r in rhos]
+    return product_grid(ckpts, powers)
+
+
+def nodes_grid(n_nodes: Sequence[float], power: PowerParams) -> ParamGrid:
+    """Figure 3 grid: scalability in N at one power scenario (1-D)."""
+    ckpts = [get_scenario("fig3", n_nodes=float(n)).ckpt for n in n_nodes]
+    return product_grid(ckpts, [power]).reshape((len(ckpts),))
+
+
+def arch_grid(archs: Sequence[str] | None = None, **kwargs) -> ParamGrid:
+    """All (or the named) production architectures as one 1-D grid."""
+    if archs is None:
+        from ..configs import ALL_ARCHS
+        archs = [c.name for c in ALL_ARCHS]
+    return grid_from_scenarios(get_scenario("arch", arch=a, **kwargs)
+                               for a in archs)

@@ -1,0 +1,362 @@
+"""Batched closed-form model + period solvers over a :class:`ParamGrid`.
+
+Vectorized (leading-batch-axes) counterparts of ``core.model`` and
+``core.optimal``: the §3.1/§3.2 expectations, the golden-section minimizer,
+the AlgoT closed form, the AlgoE quadratic root (corrected coefficients from
+``optimal.derived_coefficients``, vectorized), and the Young/Daly/MSK
+baselines — all evaluated for a whole grid in a few jitted float64 calls.
+
+Root-selection semantics match the fixed scalar solver: E' = Q/K with K > 0
+on the valid interval, so the energy *minimum* is the root of the quadratic
+Q where Q' > 0; any point where that root is missing, complex, or outside
+the bracket — or where its energy is beaten by the batched golden-section
+argmin — falls back to the numeric result elementwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+try:  # newer jax re-exports the x64 context at top level
+    from jax import enable_x64
+except ImportError:
+    from jax.experimental import enable_x64
+
+from ..core.params import PowerParams
+from . import scenarios
+from .scenarios import ParamGrid
+
+_GOLDEN = (math.sqrt(5.0) - 1.0) / 2.0
+
+# p: dict of broadcastable jnp float64 arrays with the ParamGrid field names.
+
+
+def _ab(p):
+    a = (1.0 - p["omega"]) * p["C"]
+    b = 1.0 - (p["D"] + p["R"] + p["omega"] * p["C"]) / p["mu"]
+    return a, b
+
+
+def time_final_batched(T, p, T_base=1.0):
+    """§3.1: T_final = T_base * T / ((T-a)(b - T/2mu)), elementwise."""
+    a, b = _ab(p)
+    return T_base * T / ((T - a) * (b - T / (2.0 * p["mu"])))
+
+
+def _re_exec(T, p):
+    C, omega = p["C"], p["omega"]
+    return (omega * C + (T**2 - C**2) / (2.0 * T)
+            + omega * C**2 / (2.0 * T))
+
+
+def _io_per_failure(T, p):
+    return p["R"] + p["C"]**2 / (2.0 * T)
+
+
+def energy_final_batched(T, p, T_base=1.0):
+    """§3.2: E_final = T_cal P_cal + T_io P_io + T_down P_down + Tf P_static."""
+    C, omega = p["C"], p["omega"]
+    Tf = time_final_batched(T, p, T_base)
+    nf = Tf / p["mu"]
+    T_cal = T_base + nf * _re_exec(T, p)
+    T_io = T_base * C / (T - (1.0 - omega) * C) + nf * _io_per_failure(T, p)
+    T_down = nf * p["D"]
+    return (T_cal * p["P_cal"] + T_io * p["P_io"]
+            + T_down * p["P_down"] + Tf * p["P_static"])
+
+
+def _bracket(p):
+    """Shrunk (lo, hi) per grid point, mirroring ``optimal._bracket``.
+
+    Degenerate points (hi0 <= lo0) get a harmless placeholder bracket; the
+    caller masks them out via ``valid``.
+    """
+    a, b = _ab(p)
+    lo0 = jnp.maximum(a, p["C"])
+    hi0 = 2.0 * p["mu"] * b
+    valid = hi0 > lo0 * (1.0 + 1e-9)
+    hi0 = jnp.where(valid, hi0, 2.0 * lo0 + 1.0)
+    span = hi0 - lo0
+    return lo0 + 1e-9 * span + 1e-12, hi0 - 1e-9 * span, valid
+
+
+def golden_section_batched(f: Callable, lo, hi, iters: int = 40):
+    """Elementwise golden-section argmin of ``f`` on [lo, hi].
+
+    Branchless (``jnp.where``) form of ``optimal.golden_section`` carrying
+    the two interior function values, so each iteration costs ONE batched
+    evaluation of ``f`` — the loop is sequential, so per-step cost is what
+    dominates on small grids.
+    """
+    a, b = lo, hi
+    c = b - _GOLDEN * (b - a)
+    d = a + _GOLDEN * (b - a)
+    fc, fd = f(c), f(d)
+
+    def body(_, st):
+        a, b, c, d, fc, fd = st
+        left = fc < fd
+        a2 = jnp.where(left, a, c)
+        b2 = jnp.where(left, d, b)
+        new = jnp.where(left, b2 - _GOLDEN * (b2 - a2),
+                        a2 + _GOLDEN * (b2 - a2))
+        fnew = f(new)
+        c2 = jnp.where(left, new, d)
+        fc2 = jnp.where(left, fnew, fd)
+        d2 = jnp.where(left, c, new)
+        fd2 = jnp.where(left, fc, fnew)
+        return (a2, b2, c2, d2, fc2, fd2)
+
+    a, b, _, _, _, _ = lax.fori_loop(0, iters, body, (a, b, c, d, fc, fd))
+    return 0.5 * (a + b)
+
+
+# ---------------------------------------------------------------------------
+# Period solvers
+# ---------------------------------------------------------------------------
+
+def _t_opt_time_from(p, t_num):
+    """AlgoT closed form, falling back to the supplied numeric argmin."""
+    a, b = _ab(p)
+    lo, hi, _ = _bracket(p)
+    val = 2.0 * a * b * p["mu"]
+    t_closed = jnp.clip(jnp.sqrt(jnp.maximum(val, 0.0)), lo, hi)
+    return jnp.where(val > 0.0, t_closed, t_num)
+
+
+def t_opt_time_batched(p, T_base=1.0):
+    """AlgoT, Eq. (1) closed form; numeric fallback where it degenerates.
+
+    Degenerate grid points (no valid period: the scalar solver raises)
+    return NaN — the elementwise analogue of that error.
+    """
+    lo, hi, valid = _bracket(p)
+    t_num = golden_section_batched(
+        lambda t: time_final_batched(t, p, T_base), lo, hi)
+    return jnp.where(valid, _t_opt_time_from(p, t_num), jnp.nan)
+
+
+def _energy_quadratic(p):
+    """Vectorized corrected coefficients (``optimal.derived_coefficients``)."""
+    a, b = _ab(p)
+    C, mu, omega = p["C"], p["mu"], p["omega"]
+    al = p["P_cal"] / p["P_static"]
+    be = p["P_io"] / p["P_static"]
+    ga = p["P_down"] / p["P_static"]
+    P = al * omega * C + be * p["R"] + ga * p["D"]
+    Q = (be - al * (1.0 - omega)) * C**2
+    c2 = (1.0 / (2.0 * mu) + P / (2.0 * mu**2) + al * b / (2.0 * mu)
+          + (al * a - be * C) / (4.0 * mu**2))
+    c1 = (be * C - al * a) * b / mu + Q / (2.0 * mu**2)
+    c0 = (-a * b * (P + mu) / mu - be * C * b**2
+          - Q * (b / (2.0 * mu) + a / (4.0 * mu**2)))
+    return c2, c1, c0
+
+
+def _t_opt_energy_from(p, T_base, t_num):
+    """AlgoE quadratic root, guarded by the supplied numeric argmin."""
+    lo, hi, _ = _bracket(p)
+    c2, c1, c0 = _energy_quadratic(p)
+
+    disc = c1**2 - 4.0 * c2 * c0
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    safe_c2 = jnp.where(jnp.abs(c2) > 1e-300, c2, 1.0)
+    r1 = (-c1 - sq) / (2.0 * safe_c2)
+    r2 = (-c1 + sq) / (2.0 * safe_c2)
+    safe_c1 = jnp.where(jnp.abs(c1) > 1e-300, c1, 1.0)
+    rlin = -c0 / safe_c1
+
+    def is_min_root(r):
+        # E'' sign at a root of E' equals the sign of Q' (K > 0 in-bracket).
+        return ((disc >= 0.0) & (jnp.abs(c2) > 1e-300)
+                & (r > lo) & (r < hi) & (2.0 * c2 * r + c1 > 0.0))
+
+    lin_ok = (jnp.abs(c2) <= 1e-300) & (jnp.abs(c1) > 1e-300) \
+        & (rlin > lo) & (rlin < hi) & (c1 > 0.0)
+
+    t_root = jnp.where(is_min_root(r1), r1,
+                       jnp.where(is_min_root(r2), r2,
+                                 jnp.where(lin_ok, rlin, t_num)))
+    # Safeguard: never return a root whose energy loses to the numeric argmin.
+    e_root = energy_final_batched(t_root, p, T_base)
+    e_num = energy_final_batched(t_num, p, T_base)
+    return jnp.where(e_root <= e_num * (1.0 + 1e-9), t_root, t_num)
+
+
+def t_opt_energy_batched(p, T_base=1.0):
+    """AlgoE: minimum-branch quadratic root, numeric fallback elementwise.
+
+    Degenerate grid points (no valid period) return NaN.
+    """
+    lo, hi, valid = _bracket(p)
+    t_num = golden_section_batched(
+        lambda t: energy_final_batched(t, p, T_base), lo, hi)
+    return jnp.where(valid, _t_opt_energy_from(p, T_base, t_num), jnp.nan)
+
+
+def t_young_batched(p):
+    return jnp.sqrt(2.0 * p["C"] * p["mu"]) + p["C"]
+
+
+def t_daly_batched(p):
+    return jnp.sqrt(2.0 * p["C"] * (p["mu"] + p["D"] + p["R"])) + p["C"]
+
+
+def _msk_energy(T, p0, T_base=1.0):
+    """MSK objective on the omega=0 parameter set (paper §3.2 side note)."""
+    C, R = p0["C"], p0["R"]
+    Tf = time_final_batched(T, p0, T_base)
+    nf = Tf / p0["mu"]
+    T_cal = T_base + nf * (T - 2.0 * C) / 2.0
+    T_io = T_base * C / (T - C) + nf * (R + C)
+    T_down = nf * p0["D"]
+    return (T_cal * p0["P_cal"] + T_io * p0["P_io"]
+            + T_down * p0["P_down"] + Tf * p0["P_static"])
+
+
+def _msk_setup(p):
+    """(omega=0 params, lo, hi, valid) for the MSK numeric argmin."""
+    p0 = dict(p)
+    p0["omega"] = jnp.zeros_like(p["omega"])
+    lo, hi, valid = _bracket(p0)
+    return p0, jnp.maximum(lo, 2.0 * p0["C"] + 1e-12), hi, valid
+
+
+def t_msk_energy_batched(p, T_base=1.0):
+    """MSK energy-optimal period; degenerate points return NaN."""
+    p0, lo, hi, valid = _msk_setup(p)
+    t = golden_section_batched(lambda t: _msk_energy(t, p0, T_base), lo, hi)
+    return jnp.where(valid, t, jnp.nan)
+
+
+# ---------------------------------------------------------------------------
+# Grid evaluation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GridResult:
+    """Periods/ratios for a whole grid; arrays of ``grid.shape``.
+
+    Degenerate points (``~valid``: C of the order of the MTBF, no usable
+    period) carry T_time = T_energy = C and ratios of exactly 1.0, matching
+    the scalar ``tradeoff.evaluate`` convention; their Tf_*/E_* are NaN.
+    """
+
+    grid: ParamGrid
+    T_base: float
+    T_time: np.ndarray           # AlgoT period
+    T_energy: np.ndarray         # AlgoE period
+    T_young: np.ndarray
+    T_daly: np.ndarray
+    T_msk: np.ndarray
+    Tf_time: np.ndarray          # T_final at the AlgoT period
+    Tf_energy: np.ndarray        # T_final at the AlgoE period
+    E_time: np.ndarray           # E_final at the AlgoT period
+    E_energy: np.ndarray         # E_final at the AlgoE period
+    time_ratio: np.ndarray       # Tf_energy / Tf_time  (>= 1, "loss")
+    energy_ratio: np.ndarray     # E_time / E_energy    (>= 1, "gain")
+    valid: np.ndarray
+
+    @property
+    def energy_saving(self) -> np.ndarray:
+        return 1.0 - 1.0 / self.energy_ratio
+
+    @property
+    def time_overhead(self) -> np.ndarray:
+        return self.time_ratio - 1.0
+
+
+_FIELD_ORDER = ("C", "R", "D", "mu", "omega",
+                "P_static", "P_cal", "P_io", "P_down")
+_OUT_ORDER = ("T_time", "T_energy", "T_young", "T_daly", "T_msk",
+              "Tf_time", "Tf_energy", "E_time", "E_energy",
+              "time_ratio", "energy_ratio", "valid")
+
+
+@jax.jit
+def _evaluate_core(P, T_base):
+    # P is one stacked (9, N) array — a single host->device transfer and a
+    # single dispatch beat nine tiny ones on small grids.
+    p = dict(zip(_FIELD_ORDER, P))
+    lo, hi, valid = _bracket(p)
+    p0, lo_m, hi_m, _ = _msk_setup(p)
+
+    # The three numeric argmins (AlgoT fallback, AlgoE guard, MSK) share ONE
+    # golden-section loop over a stacked leading axis: the loop is sequential
+    # and dispatch-bound on small grids, so fusing it is a ~3x win there.
+    sel = jnp.arange(3).reshape((3,) + (1,) * lo.ndim)
+
+    def objective(t):
+        return jnp.where(sel == 0, time_final_batched(t, p, T_base),
+                         jnp.where(sel == 1,
+                                   energy_final_batched(t, p, T_base),
+                                   _msk_energy(t, p0, T_base)))
+
+    t_num = golden_section_batched(objective,
+                                   jnp.stack([lo, lo, lo_m]),
+                                   jnp.stack([hi, hi, hi_m]))
+    Tt = _t_opt_time_from(p, t_num[0])
+    Te = _t_opt_energy_from(p, T_base, t_num[1])
+    Ty = t_young_batched(p)
+    Td = t_daly_batched(p)
+    Tm = t_num[2]
+    Tf_t = time_final_batched(Tt, p, T_base)
+    Tf_e = time_final_batched(Te, p, T_base)
+    E_t = energy_final_batched(Tt, p, T_base)
+    E_e = energy_final_batched(Te, p, T_base)
+    nan = jnp.full_like(Tt, jnp.nan)
+    C = p["C"]
+    one = jnp.ones_like(Tt)
+    return jnp.stack([jnp.where(valid, Tt, C),
+                      jnp.where(valid, Te, C),
+                      Ty, Td,
+                      jnp.where(valid, Tm, C),
+                      jnp.where(valid, Tf_t, nan),
+                      jnp.where(valid, Tf_e, nan),
+                      jnp.where(valid, E_t, nan),
+                      jnp.where(valid, E_e, nan),
+                      jnp.where(valid, Tf_e / Tf_t, one),
+                      jnp.where(valid, E_t / E_e, one),
+                      valid.astype(C.dtype)])
+
+
+def evaluate_grid(grid: ParamGrid, T_base: float = 1.0) -> GridResult:
+    """Periods + time/energy ratios for every grid point, in one jitted call."""
+    flat = grid.ravel()
+    P = np.stack([getattr(flat, f) for f in _FIELD_ORDER])
+    with enable_x64():
+        raw = np.asarray(_evaluate_core(
+            jnp.asarray(P, dtype=jnp.float64),
+            jnp.asarray(float(T_base), jnp.float64)))
+    out = {k: raw[i].reshape(grid.shape) for i, k in enumerate(_OUT_ORDER)}
+    out["valid"] = out["valid"] > 0.5
+    return GridResult(grid=grid, T_base=float(T_base), **out)
+
+
+# ---------------------------------------------------------------------------
+# Figure-level conveniences
+# ---------------------------------------------------------------------------
+
+def sweep_rho_grid(rhos: Sequence[float], mu_minutes: float,
+                   alpha: float = 1.0) -> GridResult:
+    """Figure 1: rho swept at one MTBF (grid shape ``(1, len(rhos))``)."""
+    return evaluate_grid(scenarios.mu_rho_grid([mu_minutes], rhos, alpha))
+
+
+def sweep_mu_rho_grid(mus: Sequence[float], rhos: Sequence[float],
+                      alpha: float = 1.0) -> GridResult:
+    """Figure 2: the (mu x rho) ratio surfaces in one call."""
+    return evaluate_grid(scenarios.mu_rho_grid(mus, rhos, alpha))
+
+
+def sweep_nodes_grid(n_nodes: Sequence[float],
+                     power: PowerParams) -> GridResult:
+    """Figure 3: scalability in N at one power scenario."""
+    return evaluate_grid(scenarios.nodes_grid(n_nodes, power))

@@ -1,0 +1,251 @@
+"""Parity tests: batched ``repro.sim`` vs the scalar reference oracles.
+
+- engine vs ``simulate_once`` trajectory-for-trajectory under a shared
+  failure schedule (ScheduledRNG replays the same exponential gaps),
+- engine means vs scalar ``simulate`` within 3 standard errors on registry
+  scenarios,
+- batched period solvers vs the scalar ``optimal`` solvers across a grid,
+- the t_opt_energy root-selection guard (regression for the silent
+  maximum-root pick).
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointParams, PowerParams, EXASCALE_POWER_RHO55,
+                        simulate, simulate_once, t_opt_time, t_opt_energy,
+                        t_opt_energy_numeric, t_young, t_daly, t_msk_energy,
+                        evaluate, fig12_checkpoint)
+from repro.core import model, optimal
+from repro.sim import (ParamGrid, ScheduledRNG, get_scenario, list_scenarios,
+                       grid_from_scenarios, mu_rho_grid, nodes_grid,
+                       simulate_grid, simulate_trajectories, evaluate_grid)
+
+
+CK = fig12_checkpoint(300.0)
+PW = EXASCALE_POWER_RHO55
+
+
+# ---------------------------------------------------------------------------
+# Engine vs scalar oracle
+# ---------------------------------------------------------------------------
+
+class TestTrajectoryParity:
+    """Shared failure schedule -> identical trajectories."""
+
+    @pytest.mark.parametrize("T", [40.0, 53.3, 90.0])
+    def test_single_scenario_matches_oracle(self, T):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        rng = np.random.default_rng(123)
+        gaps = rng.exponential(CK.mu, size=(1, 8, 64))
+        tb = simulate_trajectories(T, grid, T_base=4000.0, gaps=gaps)
+        assert not tb.truncated.any()
+        for k in range(gaps.shape[1]):
+            ref = simulate_once(T, CK, PW, 4000.0, ScheduledRNG(gaps[0, k]))
+            assert tb.wall_time[0, k] == pytest.approx(ref.wall_time,
+                                                       rel=1e-12)
+            assert tb.energy[0, k] == pytest.approx(ref.energy, rel=1e-12)
+            assert tb.io_time[0, k] == pytest.approx(ref.io_time, rel=1e-12)
+            assert tb.work_executed[0, k] == pytest.approx(ref.work_executed,
+                                                          rel=1e-12)
+            assert int(tb.n_failures[0, k]) == ref.n_failures
+            assert int(tb.n_checkpoints[0, k]) == ref.n_checkpoints
+
+    def test_parameter_batch_matches_oracle(self):
+        """Different (ckpt, power) points in one batch, same schedules."""
+        scens = [get_scenario("fig12", mu_min=120.0),
+                 get_scenario("exascale_rho7", mu_min=300.0),
+                 get_scenario("fig3", n_nodes=3e5, rho=7.0)]
+        grid = grid_from_scenarios(scens)
+        T = np.array([40.0, 60.0, 12.0])
+        rng = np.random.default_rng(5)
+        gaps = rng.exponential(1.0, size=(3, 4, 96)) * grid.mu[:, None, None]
+        tb = simulate_trajectories(T, grid, T_base=500.0, gaps=gaps)
+        assert not tb.truncated.any()
+        for i, sc in enumerate(scens):
+            for k in range(gaps.shape[1]):
+                ref = simulate_once(float(T[i]), sc.ckpt, sc.power, 500.0,
+                                    ScheduledRNG(gaps[i, k]))
+                assert tb.wall_time[i, k] == pytest.approx(ref.wall_time,
+                                                           rel=1e-12)
+                assert tb.energy[i, k] == pytest.approx(ref.energy,
+                                                        rel=1e-12)
+                assert int(tb.n_failures[i, k]) == ref.n_failures
+
+    def test_no_failure_limit_matches_model(self):
+        ck = CheckpointParams(C=10, R=10, D=1, mu=1e12, omega=0.5)
+        grid = ParamGrid.from_params(ck, PW).reshape((1,))
+        tb = simulate_trajectories(60.0, grid, T_base=1000.0, n_trials=2,
+                                   seed=0)
+        assert (tb.n_failures == 0).all()
+        want = float(model.time_fault_free(60.0, ck, 1000.0))
+        assert tb.wall_time == pytest.approx(want, rel=2e-3)
+
+
+class TestStatisticalParity:
+    """Independent seeds -> agreement within 3 standard errors, on at least
+    3 registry scenarios (acceptance criterion)."""
+
+    SCENARIOS = [("fig12", dict(mu_min=300.0)),
+                 ("exascale_rho7", dict(mu_min=200.0)),
+                 ("fig3", dict(n_nodes=5e5, rho=5.5))]
+
+    @pytest.mark.parametrize("name,kw", SCENARIOS)
+    def test_means_within_3se(self, name, kw):
+        sc = get_scenario(name, **kw)
+        T = 1.2 * t_opt_time(sc.ckpt)
+        T_base = 2000.0
+        grid = ParamGrid.from_params(sc.ckpt, sc.power).reshape((1,))
+        out = simulate_grid(T, grid, T_base, n_trials=400, seed=11)
+        ref = simulate(T, sc.ckpt, sc.power, T_base, n_trials=400, seed=97)
+        for key in ("T_final", "E_final"):
+            se = math.hypot(float(out[key + "_se"][0]), ref[key + "_se"])
+            assert abs(float(out[key][0]) - ref[key]) < 3.0 * se, (
+                f"{name}/{key}: batched {float(out[key][0])} vs scalar "
+                f"{ref[key]} (3se={3 * se})")
+
+
+# ---------------------------------------------------------------------------
+# Batched solvers vs scalar solvers
+# ---------------------------------------------------------------------------
+
+class TestSolverParity:
+    def test_periods_match_scalar_over_grid(self):
+        mus = [30.0, 60.0, 120.0, 300.0, 600.0]
+        rhos = [1.5, 3.0, 5.5, 7.0, 10.0]
+        res = evaluate_grid(mu_rho_grid(mus, rhos))
+        for i, mu in enumerate(mus):
+            ck = fig12_checkpoint(mu)
+            for j, rho in enumerate(rhos):
+                pw = PowerParams.from_rho(rho=rho)
+                assert res.T_time[i, j] == pytest.approx(t_opt_time(ck),
+                                                         rel=1e-9)
+                assert res.T_energy[i, j] == pytest.approx(
+                    t_opt_energy(ck, pw), rel=1e-7)
+                assert res.T_young[i, j] == pytest.approx(t_young(ck),
+                                                          rel=1e-12)
+                assert res.T_daly[i, j] == pytest.approx(t_daly(ck),
+                                                         rel=1e-12)
+                assert res.T_msk[i, j] == pytest.approx(
+                    t_msk_energy(ck, pw), rel=1e-4)
+                pt = evaluate(ck, pw)
+                assert res.time_ratio[i, j] == pytest.approx(pt.time_ratio,
+                                                             rel=1e-9)
+                assert res.energy_ratio[i, j] == pytest.approx(
+                    pt.energy_ratio, rel=1e-9)
+
+    def test_degenerate_points_collapse_to_one(self):
+        """Fig. 3 right edge: C ~ mu -> periods C, ratios exactly 1."""
+        res = evaluate_grid(nodes_grid([1e6, 1e8], EXASCALE_POWER_RHO55))
+        assert res.valid[0] and not res.valid[1]
+        assert res.time_ratio[1] == 1.0
+        assert res.energy_ratio[1] == 1.0
+        assert res.T_time[1] == res.grid.C[1]
+
+    def test_tradeoff_sweeps_match_scalar_engine(self):
+        from repro.core.tradeoff import sweep_mu_rho
+        mus, rhos = [60.0, 300.0], [2.0, 5.5]
+        fast = sweep_mu_rho(mus, rhos)
+        slow = sweep_mu_rho(mus, rhos, engine="scalar")
+        for rf, rs in zip(fast, slow):
+            for pf, ps in zip(rf, rs):
+                assert pf.energy_ratio == pytest.approx(ps.energy_ratio,
+                                                        rel=1e-9)
+                assert pf.time_ratio == pytest.approx(ps.time_ratio,
+                                                      rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry
+# ---------------------------------------------------------------------------
+
+class TestScenarios:
+    def test_registry_contains_paper_setups(self):
+        names = set(list_scenarios())
+        assert {"fig12", "fig3", "exascale_rho55", "exascale_rho7"} <= names
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError):
+            get_scenario("nope")
+
+    def test_grid_broadcast_and_views(self):
+        grid = mu_rho_grid([60.0, 300.0], [2.0, 5.5, 7.0])
+        assert grid.shape == (2, 3)
+        assert grid.rho[1, 1] == pytest.approx(5.5)
+        ck = grid.ckpt_at((1, 2))
+        assert ck.mu == 300.0 and ck.C == 10.0 and ck.omega == 0.5
+        pw = grid.power_at((0, 0))
+        assert pw.rho == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# t_opt_energy root-selection guard (regression)
+# ---------------------------------------------------------------------------
+
+class TestEnergyRootGuard:
+    def test_quadratic_root_is_a_minimum_across_stress_grid(self):
+        """Invariant: the returned period never loses to the bracket argmin,
+        and satisfies the minimum condition Q'(t) > 0."""
+        rng = np.random.default_rng(3)
+        for _ in range(60):
+            ck = CheckpointParams(C=rng.uniform(0.5, 30),
+                                  R=rng.uniform(0.1, 30),
+                                  D=rng.uniform(0, 5),
+                                  mu=rng.uniform(60, 2000),
+                                  omega=rng.uniform(0, 1))
+            lo0, hi0 = ck.valid_period_range()
+            if hi0 <= lo0 * (1 + 1e-6):
+                continue
+            pw = PowerParams.from_ratios(alpha=10**rng.uniform(-2, 1),
+                                         beta=10**rng.uniform(-2, 1.5),
+                                         gamma=rng.uniform(0, 2))
+            t = t_opt_energy(ck, pw)
+            e = float(model.energy_final(t, ck, pw))
+            e_num = float(model.energy_final(t_opt_energy_numeric(ck, pw),
+                                             ck, pw))
+            assert e <= e_num * (1 + 1e-9)
+            c2, c1, _ = optimal.energy_quadratic_coefficients(ck, pw)
+            lo, hi = optimal._bracket(ck)
+            if lo < t < hi and abs(model.K_dE_dT(t, ck, pw)) < 1e-6:
+                assert 2.0 * c2 * t + c1 > 0.0
+
+    def test_maximum_root_falls_back_to_numeric(self, monkeypatch):
+        """Regression: inject a quadratic whose only in-bracket root is a
+        MAXIMUM of the (fake) derivative — the old code returned it blindly;
+        the guard must reject it in favour of the numeric argmin."""
+        lo, hi = optimal._bracket(CK)
+        t_max = 0.5 * (lo + hi)
+        # Q(t) = -(t - t_max)^2 + small  has roots just around t_max with
+        # Q' < 0 at the larger root and Q' > 0 at the smaller... choose a
+        # downward parabola with exactly one in-bracket root, Q' < 0 there:
+        t_out = hi + (hi - lo)          # second root far outside the bracket
+        c2 = -1.0
+        c1 = (t_max + t_out)
+        c0 = -t_max * t_out
+        # sanity: root t_max is in-bracket and Q'(t_max) = -2 t_max + c1 > 0?
+        # Q'(t) = 2*c2*t + c1 = -2t + (t_max + t_out); at t_max this is
+        # t_out - t_max > 0 — that's a minimum-branch root.  Flip the sign
+        # of all coefficients to make t_max the maximum-branch root.
+        c2, c1, c0 = -c2, -c1, -c0
+        assert 2.0 * c2 * t_max + c1 <= 0.0
+        monkeypatch.setattr(optimal, "energy_quadratic_coefficients",
+                            lambda ck, pw: (c2, c1, c0))
+        t = optimal.t_opt_energy(CK, PW)
+        assert t == pytest.approx(t_opt_energy_numeric(CK, PW), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Engine misc
+# ---------------------------------------------------------------------------
+
+class TestEngineMisc:
+    def test_too_short_period_raises(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        with pytest.raises(ValueError):
+            simulate_trajectories(4.0, grid, T_base=100.0, n_trials=2)
+
+    def test_scheduled_rng_exhausts_to_inf(self):
+        r = ScheduledRNG([5.0])
+        assert r.exponential(300.0) == 5.0
+        assert math.isinf(r.exponential(300.0))
