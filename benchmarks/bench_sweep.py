@@ -1,19 +1,40 @@
-"""Scalar vs batched Figure-2 sweep timing -> BENCH_sweep.json.
+"""Scalar vs batched Figure-2 sweep timing -> BENCH_sweep.json (+ CI gate).
 
 Times the seed per-point loop (``tradeoff.sweep_mu_rho(engine="scalar")``)
 against the batched ``repro.sim`` grid evaluation on (a) the seed benchmark
-grid and (b) a dense production-resolution grid, and records the numbers in
-``BENCH_sweep.json`` at the repo root (plus a copy under
-``benchmarks/results/``).  Acceptance target: >= 10x on the Fig. 2 sweep.
+grid and (b) a dense production-resolution grid.
+
+The canonical artifact is ``BENCH_sweep.json`` at the repo root — the
+committed baseline the CI regression gate compares against.  There is
+deliberately no second copy under ``benchmarks/results/``.
+
+Modes:
+  python -m benchmarks.bench_sweep           # measure + rewrite the baseline
+  python -m benchmarks.bench_sweep --check   # measure, compare the warm
+                                             # scalar-vs-batched speedup
+                                             # against the committed baseline,
+                                             # exit non-zero on a >2x drop
+                                             # (machine-normalized; baseline
+                                             # file left untouched)
+
+Note: regenerate the committed baseline ONLY with a standalone bench_sweep
+run.  ``benchmarks.run`` invokes this module with ``--no-write`` — its jit
+cache is pre-warmed by the other figure benches, which would record a
+meaninglessly small ``batched_cold_s`` into the baseline.
 """
+import argparse
 import json
 import time
 from pathlib import Path
 
-from ._util import emit, RESULTS
+from ._util import emit
 
 SEED_MUS = [30, 60, 90, 120, 180, 240, 300, 420, 600]
 ROOT = Path(__file__).resolve().parents[1]
+#: the one canonical timing artifact (committed baseline for --check).
+CANONICAL = ROOT / "BENCH_sweep.json"
+#: >2x warm-timing slowdown vs the committed baseline fails the CI job.
+REGRESSION_FACTOR = 2.0
 
 
 def _best_of(fn, repeat):
@@ -26,7 +47,6 @@ def _best_of(fn, repeat):
 
 
 def _time_pair(mus, rhos, scalar_repeat, batched_repeat):
-    import numpy as np
     from repro.core.tradeoff import sweep_mu_rho
     from repro.sim import sweep_mu_rho_grid
 
@@ -50,7 +70,7 @@ def _time_pair(mus, rhos, scalar_repeat, batched_repeat):
             "speedup_warm": scalar_s / batched_s}
 
 
-def run():
+def run(write: bool = True):
     import numpy as np
 
     seed_grid = _time_pair(SEED_MUS, list(np.linspace(1.0, 10.0, 10)),
@@ -64,19 +84,61 @@ def run():
         "fig2_seed_grid": seed_grid,
         "dense_grid": dense_grid,
     }
-    for path in (ROOT / "BENCH_sweep.json", RESULTS / "BENCH_sweep.json"):
-        with open(path, "w") as f:
+    if write:
+        with open(CANONICAL, "w") as f:
             json.dump(payload, f, indent=2)
     return payload
 
 
-def main():
-    payload = run()
+def check_regression(baseline: dict, payload: dict,
+                     factor: float = REGRESSION_FACTOR) -> list:
+    """Warm-timing regressions of ``payload`` vs ``baseline`` (> factor x).
+
+    The compared quantity is ``speedup_warm`` — the batched path's warm
+    speedup over the scalar path *measured in the same run* — so the gate
+    is machine-normalized: a CI runner that is uniformly slower than the
+    machine that committed the baseline shifts both numerators and
+    denominators and passes, while a real batched-path regression drops
+    the speedup and fails.  Pure comparison (no timing) so the CI gate
+    logic is unit-testable.
+    """
+    regressions = []
+    for grid in ("fig2_seed_grid", "dense_grid"):
+        base = baseline[grid]["speedup_warm"]
+        now = payload[grid]["speedup_warm"]
+        if now * factor < base:
+            regressions.append(
+                f"{grid}: speedup_warm {now:.1f}x is {base / now:.1f}x "
+                f"below the baseline {base:.1f}x (limit {factor:g}x)")
+    return regressions
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="compare against the committed baseline instead of "
+                         "rewriting it; exit non-zero on regression")
+    ap.add_argument("--no-write", action="store_true",
+                    help="measure and report only; leave the committed "
+                         "baseline untouched (used by benchmarks.run)")
+    args = ap.parse_args(argv)
+
+    wrote = not (args.check or args.no_write)
+    payload = run(write=wrote)
     s, d = payload["fig2_seed_grid"], payload["dense_grid"]
     emit("bench_sweep", s["batched_warm_s"] * 1e6,
          f"fig2 {s['n_points']}pts speedup={s['speedup_warm']:.1f}x; "
          f"dense {d['n_points']}pts speedup={d['speedup_warm']:.1f}x "
-         f"-> BENCH_sweep.json")
+         + ("-> BENCH_sweep.json" if wrote else "(baseline untouched)"))
+
+    if args.check:
+        baseline = json.loads(CANONICAL.read_text())
+        regressions = check_regression(baseline, payload)
+        if regressions:
+            raise SystemExit("benchmark regression gate FAILED:\n  "
+                             + "\n  ".join(regressions))
+        print(f"bench_sweep --check OK: warm speedups within "
+              f"{REGRESSION_FACTOR:g}x of the committed baseline")
 
 
 if __name__ == "__main__":

@@ -10,16 +10,23 @@ import traceback
 
 def main() -> None:
     from . import (fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
-                   table_baselines, table_simulation, table_arch_periods,
-                   bench_kernels, bench_sweep, roofline)
+                   fig4_multilevel, table_baselines, table_simulation,
+                   table_arch_periods, bench_kernels, bench_sweep, roofline)
     modules = [fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
-               table_baselines, table_simulation, table_arch_periods,
-               bench_kernels, bench_sweep, roofline]
+               fig4_multilevel, table_baselines, table_simulation,
+               table_arch_periods, bench_kernels, bench_sweep, roofline]
     print("name,us_per_call,derived")
     failures = 0
     for m in modules:
         try:
-            m.main()
+            if m is bench_sweep:
+                # Never rewrite the committed CI-gate baseline from the
+                # smoke run: earlier benches pre-warm the jit cache (bogus
+                # cold timings) and a stray `git commit -a` would ship this
+                # machine's numbers.  Standalone bench_sweep regenerates it.
+                m.main(["--no-write"])
+            else:
+                m.main()
         except Exception as e:      # noqa: BLE001 — report all benches
             failures += 1
             print(f"{m.__name__},NaN,FAILED: {e!r}", file=sys.stderr)

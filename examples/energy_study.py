@@ -12,7 +12,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 from repro.core import EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7
-from repro.sim import (ParamGrid, get_scenario, list_scenarios, simulate_grid,
+from repro.core.model import ml_energy_final, ml_time_final
+from repro.sim import (MultilevelParamGrid, ParamGrid, buddy_ratio_grid,
+                       evaluate_multilevel_grid, get_scenario,
+                       list_scenarios, simulate_grid, simulate_grid_ml,
                        sweep_nodes_grid, sweep_rho_grid)
 from repro.sim.sweep import evaluate_grid
 
@@ -60,6 +63,35 @@ def main():
           f"{(res3.time_ratio[k]-1)*100:.0f}% overhead "
           f"(paper: 'up to 30% for ~12%'); ratios -> "
           f"{res3.energy_ratio[-1]:.3f}/{res3.time_ratio[-1]:.3f} at 1e8 nodes")
+
+    print("\n== Multilevel (buddy + PFS): joint (T, m) optimization ==")
+    ratios, qs = [0.05, 0.1, 0.25], [0.05, 0.2]
+    res4 = evaluate_multilevel_grid(buddy_ratio_grid(ratios, qs,
+                                                     mu_min=600.0),
+                                    m_values=tuple(range(1, 9)))
+    for i, r in enumerate(ratios):
+        for j, q in enumerate(qs):
+            print(f"  C1/C2={r:4.2f} q={q:4.2f}  "
+                  f"AlgoT (T={res4.T_time[i, j]:5.1f}, "
+                  f"m={int(res4.m_time[i, j])})  "
+                  f"AlgoE (T={res4.T_energy[i, j]:5.1f}, "
+                  f"m={int(res4.m_energy[i, j])})  "
+                  f"time vs PFS-only {res4.time_vs_single[i, j]:.3f}  "
+                  f"energy vs PFS-only {res4.energy_vs_single[i, j]:.3f}")
+
+    print("\n== Monte-Carlo validation of one two-level point ==")
+    sc = get_scenario("multilevel_exascale", mu_min=600.0, buddy_ratio=0.1,
+                      q=0.1)
+    grid = MultilevelParamGrid.from_params(sc.ckpt, sc.power).reshape((1,))
+    one = evaluate_multilevel_grid(grid, m_values=(1, 2, 3, 4))
+    T4, m4 = float(one.T_energy[0]), int(one.m_energy[0])
+    sim4 = simulate_grid_ml(T4, m4, grid, T_base, n_trials=300, seed=0)
+    print(f"  AlgoE (T={T4:.1f}, m={m4}): simulated T_final = "
+          f"{sim4['T_final'][0]:.0f} "
+          f"(model {float(ml_time_final(T4, m4, sc.ckpt, T_base)):.0f}), "
+          f"E = {sim4['E_final'][0]:.0f} "
+          f"(model "
+          f"{float(ml_energy_final(T4, m4, sc.ckpt, sc.power, T_base)):.0f})")
 
 
 if __name__ == "__main__":

@@ -5,6 +5,11 @@ periods for an Exascale-like platform, shows the predicted trade-off, and
 verifies both against the discrete-event Monte-Carlo simulator.
 
     PYTHONPATH=src python examples/quickstart.py
+
+This is the single-level model.  For the two-level (buddy + PFS) extension —
+per-level (C_k, R_k, D_k, P_io_k), joint (T, m) solvers, and the batched
+Monte-Carlo validation — see the "Multilevel checkpointing" section of
+docs/simulation.md and examples/energy_study.py.
 """
 import sys
 from pathlib import Path

@@ -60,25 +60,36 @@ class BuddyReplica:
 class ManagerConfig:
     async_write: bool = True
     use_buddy: bool = True
+    #: deep-storage cadence (the model's ``m``): every checkpoint pushes to
+    #: the buddy replica, every ``pfs_every``-th also writes the sharded
+    #: (PFS) store.  1 = every checkpoint goes deep (single-level behavior).
+    pfs_every: int = 1
 
 
 class CheckpointManager:
     def __init__(self, store: ShardedStore, policy: CheckpointPolicy,
                  config: ManagerConfig = ManagerConfig()):
+        if config.pfs_every < 1:
+            raise ValueError(f"pfs_every must be >= 1, got {config.pfs_every}")
+        if config.pfs_every > 1 and not config.use_buddy:
+            raise ValueError("pfs_every > 1 needs the buddy level enabled "
+                             "(buddy-only checkpoints would protect nothing)")
         self.store = store
         self.policy = policy
         self.cfg = config
         self.buddy = BuddyReplica() if config.use_buddy else None
         self._writer: Optional[threading.Thread] = None
         self._last_ckpt_step: Optional[int] = None
+        self._n_ckpts = 0                # schedule position (the model's k)
         self._pending_meta: dict = {}
         self._lock = threading.Lock()
         self.stats: list = []
 
     # ------------------------------------------------------------------ write
-    def _write(self, step: int, host_tree, t_snapshot: float):
+    def _write(self, step: int, host_tree, t_snapshot: float,
+               deep: bool = True):
         t0 = time.perf_counter()
-        meta = self.store.save(step, host_tree)
+        meta = self.store.save(step, host_tree) if deep else None
         if self.buddy is not None:
             self.buddy.push(step, host_tree)
         t_write = time.perf_counter() - t0
@@ -86,14 +97,28 @@ class CheckpointManager:
         with self._lock:
             self.stats.append({"step": step, "snapshot_s": t_snapshot,
                                "write_s": t_write, "C_s": C,
-                               "bytes": meta["bytes"]})
+                               "level": 2 if deep else 1,
+                               "bytes": meta["bytes"] if deep else 0})
         # omega: only the snapshot stalls compute; the write overlaps.
         omega = t_write / C if C > 0 else 0.0
         self.policy.observe_checkpoint(duration_s=C,
                                        slowdown_work_fraction=omega)
 
-    def checkpoint(self, step: int, state: Any, *, block: bool = False):
-        """Snapshot now; write in the background (non-blocking checkpoints)."""
+    def checkpoint(self, step: int, state: Any, *, block: bool = False,
+                   deep: Optional[bool] = None):
+        """Snapshot now; write in the background (non-blocking checkpoints).
+
+        ``deep`` forces/suppresses the deep (PFS) write; by default the
+        ``pfs_every`` schedule decides: checkpoints 0, m, 2m, ... go deep,
+        the rest are buddy-only (the model's every-m-th cadence).
+        """
+        if deep is None:
+            deep = self._n_ckpts % self.cfg.pfs_every == 0
+        if not deep and self.buddy is None:
+            raise ValueError("deep=False without a buddy level would "
+                             "persist nothing (same invariant as the "
+                             "pfs_every > 1 config guard)")
+        self._n_ckpts += 1
         self.wait()                      # one in-flight write at a time
         t0 = time.perf_counter()
         host = jax.tree.map(lambda x: np.asarray(x), state)   # device->host
@@ -101,14 +126,15 @@ class CheckpointManager:
         self._last_ckpt_step = step
         if self.cfg.async_write and not block:
             self._writer = threading.Thread(
-                target=self._write, args=(step, host, t_snapshot),
+                target=self._write, args=(step, host, t_snapshot, deep),
                 daemon=True)
             self._writer.start()
         else:
-            self._write(step, host, t_snapshot)
+            self._write(step, host, t_snapshot, deep)
 
     def maybe_checkpoint(self, step: int, state: Any) -> bool:
-        """Policy-driven: checkpoint when period_steps have elapsed."""
+        """Policy-driven: checkpoint when period_steps have elapsed (deep
+        vs buddy-only decided by the ``pfs_every`` schedule)."""
         period = self.policy.period_steps()
         last = self._last_ckpt_step
         if last is not None and step - last < period:
@@ -123,15 +149,18 @@ class CheckpointManager:
 
     # ---------------------------------------------------------------- restore
     def restore(self, like_tree: Any):
-        """Newest valid generation; falls back to the buddy replica."""
+        """Deepest *surviving* level wins by recency: the newest of (valid
+        store generation, buddy replica).  With ``pfs_every > 1`` the buddy
+        usually holds a fresher state than the last PFS write; ties prefer
+        the store (it survives process loss, the buddy does not)."""
         self.wait()
-        tree, step = self.store.restore(like_tree)
-        if tree is not None:
-            return tree, step, "store"
-        if self.buddy is not None:
-            tree, step = self.buddy.restore(like_tree)
-            if tree is not None:
-                return tree, step, "buddy"
+        s_tree, s_step = self.store.restore(like_tree)
+        b_tree, b_step = (self.buddy.restore(like_tree)
+                          if self.buddy is not None else (None, None))
+        if b_tree is not None and (s_tree is None or b_step > s_step):
+            return b_tree, b_step, "buddy"
+        if s_tree is not None:
+            return s_tree, s_step, "store"
         return None, None, "none"
 
     @property

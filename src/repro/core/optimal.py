@@ -15,12 +15,13 @@ MSK    — Meneses–Sarood–Kalé energy model, reconstructed exactly as the
 from __future__ import annotations
 
 import math
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
 from . import model
-from .params import CheckpointParams, PowerParams
+from .params import (CheckpointParams, MultilevelCheckpointParams,
+                     MultilevelPowerParams, PowerParams)
 
 _GOLDEN = (math.sqrt(5.0) - 1.0) / 2.0
 
@@ -168,8 +169,11 @@ def paper_printed_coefficients(
     return float(c2), float(c1), float(c0)
 
 
-def t_opt_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
-    """AlgoE: the positive root of the exact quadratic K(T) E'(T) = 0.
+def _pick_energy_root(c2: float, c1: float, c0: float, lo: float, hi: float,
+                      energy: Callable[[float], float],
+                      numeric: Callable[[], float]) -> float:
+    """Shared AlgoE root selection on a quadratic Q = K*E' (single- and
+    multilevel paths).
 
     Falls back to the numeric argmin when the quadratic has no root inside
     the valid range (e.g. the minimum sits on the bracket boundary), when
@@ -177,21 +181,15 @@ def t_opt_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
     K > 0, so sign(E'') at a root equals sign(Q')), or when the numeric
     argmin finds strictly lower energy than the chosen root.
     """
-    lo, hi = _bracket(ckpt)
-    try:
-        c2, c1, c0 = energy_quadratic_coefficients(ckpt, power)
-    except AssertionError:
-        return t_opt_energy_numeric(ckpt, power)
-
     roots = np.roots([c2, c1, c0]) if abs(c2) > 0 else np.array(
         [-c0 / c1] if abs(c1) > 0 else [])
     cands = [float(r.real) for r in np.atleast_1d(roots)
              if abs(r.imag) < 1e-9 * max(1.0, abs(r.real))
              and lo < r.real < hi]
     if not cands:
-        return t_opt_energy_numeric(ckpt, power)
+        return numeric()
     # Pick the root where E is smallest (E' sign change - to +).
-    es = [float(model.energy_final(t, ckpt, power)) for t in cands]
+    es = [energy(t) for t in cands]
     t_best = cands[int(np.argmin(es))]
     if len(cands) == 1 and 2.0 * c2 * t_best + c1 > 0.0:
         # Unique in-bracket root satisfying the minimum condition (E' = Q/K
@@ -201,11 +199,25 @@ def t_opt_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
     # Otherwise (maximum-branch root, or several roots where a boundary
     # minimum may win) cross-check against the numeric argmin and prefer it
     # on disagreement.
-    t_num = t_opt_energy_numeric(ckpt, power)
-    e_num = float(model.energy_final(t_num, ckpt, power))
+    t_num = numeric()
+    e_num = energy(t_num)
     if 2.0 * c2 * t_best + c1 <= 0.0 or e_num < min(es) * (1.0 - 1e-12):
         return t_num
     return t_best
+
+
+def t_opt_energy(ckpt: CheckpointParams, power: PowerParams) -> float:
+    """AlgoE: the positive root of the exact quadratic K(T) E'(T) = 0,
+    guarded by ``_pick_energy_root`` (numeric fallback semantics there)."""
+    lo, hi = _bracket(ckpt)
+    try:
+        c2, c1, c0 = energy_quadratic_coefficients(ckpt, power)
+    except AssertionError:
+        return t_opt_energy_numeric(ckpt, power)
+    return _pick_energy_root(
+        c2, c1, c0, lo, hi,
+        energy=lambda t: float(model.energy_final(t, ckpt, power)),
+        numeric=lambda: t_opt_energy_numeric(ckpt, power))
 
 
 def t_opt_energy_numeric(ckpt: CheckpointParams, power: PowerParams,
@@ -214,6 +226,117 @@ def t_opt_energy_numeric(ckpt: CheckpointParams, power: PowerParams,
     lo, hi = _bracket(ckpt)
     return golden_section(
         lambda t: float(model.energy_final(t, ckpt, power, T_base)), lo, hi)
+
+
+# --------------------------------------------------------------------------
+# Multilevel (buddy + PFS) joint (T, m) solvers
+# --------------------------------------------------------------------------
+
+DEFAULT_M_MAX = 12
+
+
+def _ml_bracket(ck: MultilevelCheckpointParams,
+                m: int) -> Optional[Tuple[float, float]]:
+    """Shrunk valid (lo, hi) for period T at a given m; None if degenerate."""
+    lo, hi = ck.valid_period_range(m)
+    if hi <= lo * (1.0 + 1e-9):
+        return None
+    span = hi - lo
+    return lo + 1e-9 * span + 1e-12, hi - 1e-9 * span
+
+
+def t_opt_time_multilevel(ck: MultilevelCheckpointParams,
+                          m_max: int = DEFAULT_M_MAX) -> Tuple[float, int]:
+    """Jointly time-optimal (T, m): per-m closed form, argmin over m.
+
+    T_final(T, m) keeps the paper's rational form with (a_m, b_m, mu_m), so
+    Eq. (1) survives per m: T*(m) = sqrt(2 a_m b_m mu_m).
+    """
+    best = None
+    for m in range(1, m_max + 1):
+        br = _ml_bracket(ck, m)
+        if br is None:
+            continue
+        lo, hi = br
+        val = 2.0 * ck.a(m) * ck.b(m) * ck.mu_eff(m)
+        if val > 0:
+            t = float(min(max(math.sqrt(val), lo), hi))
+        else:  # omega == 1 degenerates the closed form: numeric fallback
+            t = golden_section(
+                lambda x: float(model.ml_time_final(x, m, ck)), lo, hi)
+        tf = float(model.ml_time_final(t, m, ck))
+        if best is None or tf < best[0]:
+            best = (tf, t, m)
+    if best is None:
+        raise ValueError(
+            f"No valid (T, m): deep checkpoint C2={ck.C2} too large for "
+            f"platform MTBF mu={ck.mu} at every m <= {m_max}.")
+    return best[1], best[2]
+
+
+def ml_energy_quadratic_coefficients(
+        ck: MultilevelCheckpointParams, power: MultilevelPowerParams,
+        m: int) -> Tuple[float, float, float]:
+    """Coefficients of the exact quadratic Q_m(T) = K_m(T) * E'(T), recovered
+    by 3-point interpolation of the analytic product + 4th-point check
+    (mirrors ``energy_quadratic_coefficients``)."""
+    br = _ml_bracket(ck, m)
+    if br is None:
+        raise ValueError(f"no valid period at m={m}")
+    lo, hi = br
+    ts = np.array([lo + 0.2 * (hi - lo), lo + 0.45 * (hi - lo),
+                   lo + 0.7 * (hi - lo)])
+    qs = model.ml_K_dE_dT(ts, m, ck, power)
+    V = np.vander(ts, 3)
+    c2, c1, c0 = np.linalg.solve(V, qs)
+
+    t4 = lo + 0.9 * (hi - lo)
+    q4 = float(model.ml_K_dE_dT(t4, m, ck, power))
+    q4_poly = c2 * t4**2 + c1 * t4 + c0
+    scale = max(abs(q4), abs(q4_poly), abs(c0), 1e-300)
+    if not abs(q4 - q4_poly) <= 1e-6 * scale:
+        raise AssertionError(
+            f"K_m*E' deviates from a quadratic at m={m}: {q4} vs {q4_poly} "
+            f"(multilevel §3.2 cancellation violated — formula bug?)")
+    return float(c2), float(c1), float(c0)
+
+
+def _t_opt_energy_ml_at(ck: MultilevelCheckpointParams,
+                        power: MultilevelPowerParams, m: int) -> float:
+    """Energy-optimal T at fixed m (quadratic root + shared guard)."""
+    lo, hi = _ml_bracket(ck, m)
+
+    def numeric() -> float:
+        return golden_section(
+            lambda t: float(model.ml_energy_final(t, m, ck, power)), lo, hi)
+
+    try:
+        c2, c1, c0 = ml_energy_quadratic_coefficients(ck, power, m)
+    except AssertionError:
+        return numeric()
+    return _pick_energy_root(
+        c2, c1, c0, lo, hi,
+        energy=lambda t: float(model.ml_energy_final(t, m, ck, power)),
+        numeric=numeric)
+
+
+def t_opt_energy_multilevel(ck: MultilevelCheckpointParams,
+                            power: MultilevelPowerParams,
+                            m_max: int = DEFAULT_M_MAX) -> Tuple[float, int]:
+    """Jointly energy-optimal (T, m): per-m quadratic root, argmin over m."""
+    best = None
+    for m in range(1, m_max + 1):
+        if _ml_bracket(ck, m) is None:
+            continue
+        t = _t_opt_energy_ml_at(ck, power, m)
+        e = float(model.ml_energy_final(t, m, ck, power))
+        if best is None or e < best[0]:
+            best = (e, t, m)
+    if best is None:
+        raise ValueError(
+            f"No valid (T, m): deep checkpoint C2={ck.C2} too large for "
+            f"platform MTBF mu={ck.mu} at every m <= {m_max}.")
+    return best[1], best[2]
 
 
 # --------------------------------------------------------------------------

@@ -144,6 +144,170 @@ class PowerParams:
                                P_static=P_static)
 
 
+# --------------------------------------------------------------------------
+# Multilevel (buddy + PFS) extension
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelCheckpointParams:
+    """Two-level (buddy + PFS) resilience parameters.
+
+    The execution takes a checkpoint at the end of every period of length T.
+    Level 1 ("buddy": RAM-to-RAM replication, paper refs [12,14]) is cheap;
+    every ``m``-th checkpoint instead writes the deep level 2 ("PFS"), which
+    refreshes *both* recovery levels (VELOC semantics: the local/buddy copy
+    is always current, the PFS flush is the every-m-th deepening).
+
+    A failure destroys the buddy copy too with probability ``q`` (e.g. both
+    nodes of a buddy pair die, or a rack loss): recovery then reads the last
+    PFS checkpoint, losing up to ``m`` periods of work.  With probability
+    ``1-q`` the buddy survives and recovery is shallow.
+
+    C1, R1, D1 : level-1 checkpoint / recovery / downtime durations.
+    C2, R2, D2 : level-2 (deep) durations; typically C2 >> C1.
+    mu         : platform MTBF (all failures, both kinds).
+    q          : P[failure also loses the level-1 copy] in [0, 1].
+    omega      : shared checkpoint overlap factor (work rate during a write).
+
+    ``m`` is a *decision variable* (like T), not a parameter: the per-``m``
+    derived quantities below are methods.  With degenerate levels
+    (C1 == C2, R1 == R2, D1 == D2) and ``m = 1`` every formula reduces
+    bit-for-bit to the single-level :class:`CheckpointParams` model.
+    """
+
+    C1: float
+    R1: float
+    C2: float
+    R2: float
+    D1: float
+    D2: float
+    mu: float
+    q: float = 0.1
+    omega: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not (0.0 <= self.omega <= 1.0):
+            raise ValueError(f"omega must be in [0,1], got {self.omega}")
+        if not (0.0 <= self.q <= 1.0):
+            raise ValueError(f"q must be in [0,1], got {self.q}")
+        for name in ("C1", "R1", "C2", "R2", "D1", "D2"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        if self.mu <= 0:
+            raise ValueError("mu must be > 0")
+
+    # -- per-m derived quantities (multilevel analogue of §3.1) --------------
+    def C_mean(self, m: int) -> float:
+        """Mean checkpoint cost per period: ((m-1) C1 + C2) / m."""
+        return ((m - 1) * self.C1 + self.C2) / m
+
+    def a(self, m: int) -> float:
+        """a_m = (1-omega) * C_mean(m): work lost to checkpoint jitter."""
+        return (1.0 - self.omega) * self.C_mean(m)
+
+    def expected_fixed_loss(self, m: int) -> float:
+        """E[D + R + omega*C_lag per failure], mixing soft/hard with q.
+
+        Written as ``soft + q*(hard - soft)`` so degenerate levels reduce
+        exactly (the difference is exactly 0.0, no (1-q)x + qx rounding).
+        """
+        soft = self.D1 + self.R1 + self.omega * self.C_mean(m)
+        hard = self.D2 + self.R2 + self.omega * self.C2
+        return soft + self.q * (hard - soft)
+
+    def b(self, m: int) -> float:
+        """b_m = 1 - expected_fixed_loss(m) / mu."""
+        return 1.0 - self.expected_fixed_loss(m) / self.mu
+
+    def mu_eff(self, m: int) -> float:
+        """Effective MTBF for the T/2 re-execution term.
+
+        A hard failure loses ~m*T/2 instead of T/2, so the T-proportional
+        loss scales by 1 + q(m-1): mu_eff = mu / (1 + q(m-1)).
+        """
+        return self.mu / (1.0 + self.q * (m - 1))
+
+    def valid_period_range(self, m: int) -> tuple[float, float]:
+        """Open interval of T where the multilevel T_final is positive."""
+        lo = max(self.a(m), self.C1, self.C2)
+        hi = 2.0 * self.mu_eff(m) * self.b(m)
+        return lo, hi
+
+    # -- conversions ---------------------------------------------------------
+    def single_level(self) -> CheckpointParams:
+        """The PFS-only comparator: every checkpoint deep, no buddy."""
+        return CheckpointParams(C=self.C2, R=self.R2, D=self.D2, mu=self.mu,
+                                omega=self.omega)
+
+    @classmethod
+    def from_single(cls, ckpt: CheckpointParams, *,
+                    C1: Optional[float] = None, R1: Optional[float] = None,
+                    D1: Optional[float] = None,
+                    q: float = 0.0) -> "MultilevelCheckpointParams":
+        """Lift a single-level parameter set; levels default to degenerate
+        (C1=C2 etc.), the exact-reduction construction used by parity tests."""
+        return cls(C1=ckpt.C if C1 is None else C1,
+                   R1=ckpt.R if R1 is None else R1,
+                   C2=ckpt.C, R2=ckpt.R,
+                   D1=ckpt.D if D1 is None else D1, D2=ckpt.D,
+                   mu=ckpt.mu, q=q, omega=ckpt.omega)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelPowerParams:
+    """Power parameters with per-level I/O overheads.
+
+    P_io1 : overhead while writing/reading the buddy level (NIC + remote RAM
+            — materially lower than PFS draw, cf. Moran et al.'s per-level
+            energy characterization).
+    P_io2 : overhead while writing/reading the deep (PFS) level.
+    """
+
+    P_static: float
+    P_cal: float
+    P_io1: float
+    P_io2: float
+    P_down: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.P_static <= 0:
+            raise ValueError("P_static must be > 0")
+
+    @property
+    def alpha(self) -> float:
+        return self.P_cal / self.P_static
+
+    @property
+    def beta1(self) -> float:
+        return self.P_io1 / self.P_static
+
+    @property
+    def beta2(self) -> float:
+        return self.P_io2 / self.P_static
+
+    @property
+    def gamma(self) -> float:
+        return self.P_down / self.P_static
+
+    @property
+    def rho2(self) -> float:
+        """Deep-level rho = (P_static + P_io2) / (P_static + P_cal)."""
+        return (self.P_static + self.P_io2) / (self.P_static + self.P_cal)
+
+    def single_level(self) -> PowerParams:
+        """PFS-only comparator powers (P_io = P_io2)."""
+        return PowerParams(P_static=self.P_static, P_cal=self.P_cal,
+                           P_io=self.P_io2, P_down=self.P_down)
+
+    @classmethod
+    def from_power(cls, power: PowerParams,
+                   P_io1: Optional[float] = None) -> "MultilevelPowerParams":
+        """Lift single-level powers; P_io1 defaults to degenerate (= P_io)."""
+        return cls(P_static=power.P_static, P_cal=power.P_cal,
+                   P_io1=power.P_io if P_io1 is None else P_io1,
+                   P_io2=power.P_io, P_down=power.P_down)
+
+
 # --- Paper §4 reference scenarios -------------------------------------------
 
 #: Exascale power scenario #1: 20 MW / 1e6 nodes = 20 mW/node, half static.
@@ -154,6 +318,12 @@ EXASCALE_POWER_RHO55 = PowerParams(P_static=10.0, P_cal=10.0, P_io=100.0,
 #: Exascale power scenario #2: P_static = 5 mW, same overheads.  rho = 7.
 EXASCALE_POWER_RHO7 = PowerParams(P_static=5.0, P_cal=10.0, P_io=100.0,
                                   P_down=0.0)
+
+#: Exascale two-level power scenario: PFS I/O at the paper's 100 mW overhead,
+#: buddy (NIC + remote RAM) at 20 mW — the per-level split of scenario #1.
+EXASCALE_ML_POWER = MultilevelPowerParams(P_static=10.0, P_cal=10.0,
+                                          P_io1=20.0, P_io2=100.0,
+                                          P_down=0.0)
 
 #: Jaguar-derived per-processor MTBF: 45,208 procs, ~1 fault/day ->
 #: mu_ind = 45208/365 years ~ 125 years (paper §4), in minutes.

@@ -19,7 +19,8 @@ from typing import Iterable, Sequence
 import numpy as np
 
 from . import model, optimal
-from .params import (CheckpointParams, PowerParams, fig12_checkpoint,
+from .params import (CheckpointParams, MultilevelCheckpointParams,
+                     MultilevelPowerParams, PowerParams, fig12_checkpoint,
                      fig3_checkpoint)
 
 
@@ -72,6 +73,94 @@ def _points_from_grid(res) -> np.ndarray:
             time_ratio=float(res.time_ratio[idx]),
             energy_ratio=float(res.energy_ratio[idx]))
     return out
+
+
+# ----------------------------------------------------------------------
+# Multilevel (buddy + PFS) trade-off
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelTradeoffPoint:
+    """Jointly optimal (T, m) for AlgoT and AlgoE on a two-level platform,
+    plus the same ratio conventions as :class:`TradeoffPoint` and the
+    overhead comparison against the PFS-only single-level scheme."""
+
+    ckpt: MultilevelCheckpointParams
+    power: MultilevelPowerParams
+    T_time: float              # AlgoT period
+    m_time: int                # AlgoT PFS cadence (deep ckpt every m-th)
+    T_energy: float            # AlgoE period
+    m_energy: int
+    time_ratio: float          # T_final(AlgoE)/T_final(AlgoT)
+    energy_ratio: float        # E_final(AlgoT)/E_final(AlgoE)
+    time_vs_single: float      # T_final(AlgoT, 2-level)/T_final(AlgoT, PFS-only)
+    energy_vs_single: float    # E_final(AlgoE, 2-level)/E_final(AlgoE, PFS-only)
+
+    @property
+    def energy_saving(self) -> float:
+        return 1.0 - 1.0 / self.energy_ratio
+
+    @property
+    def time_overhead(self) -> float:
+        return self.time_ratio - 1.0
+
+
+def evaluate_multilevel(ck: MultilevelCheckpointParams,
+                        power: MultilevelPowerParams,
+                        m_max: int = optimal.DEFAULT_M_MAX,
+                        ) -> MultilevelTradeoffPoint:
+    """Scalar reference evaluation of one two-level operating point."""
+    Tt, mt = optimal.t_opt_time_multilevel(ck, m_max)
+    Te, me = optimal.t_opt_energy_multilevel(ck, power, m_max)
+    tf_t = float(model.ml_time_final(Tt, mt, ck))
+    tf_e = float(model.ml_time_final(Te, me, ck))
+    e_t = float(model.ml_energy_final(Tt, mt, ck, power))
+    e_e = float(model.ml_energy_final(Te, me, ck, power))
+
+    # PFS-only comparator (the seed single-level model on C2/R2/D2).  When
+    # the comparator has no valid period at all — the buddy level rescuing
+    # an otherwise infeasible platform — the vs-single ratios are NaN.
+    sl_ck, sl_pw = ck.single_level(), power.single_level()
+    lo, hi = sl_ck.valid_period_range()
+    if hi <= lo * (1.0 + 1e-9):
+        tvs = evs = float("nan")
+    else:
+        single = evaluate(sl_ck, sl_pw)
+        tvs = tf_t / float(model.time_final(single.T_time, sl_ck))
+        evs = e_e / float(model.energy_final(single.T_energy, sl_ck, sl_pw))
+    return MultilevelTradeoffPoint(
+        ckpt=ck, power=power, T_time=Tt, m_time=mt, T_energy=Te, m_energy=me,
+        time_ratio=tf_e / tf_t, energy_ratio=e_t / e_e,
+        time_vs_single=tvs, energy_vs_single=evs)
+
+
+def sweep_buddy_ratio(ratios: Sequence[float], qs: Sequence[float],
+                      mu_minutes: float = 300.0,
+                      m_max: int = optimal.DEFAULT_M_MAX,
+                      engine: str = "batched"):
+    """Exascale two-level sweep: buddy cost ratio x buddy-loss probability.
+
+    Returns a (len(ratios), len(qs)) nested list of
+    :class:`MultilevelTradeoffPoint`.  The batched path solves the whole
+    grid in one jitted call (``sim.evaluate_multilevel_grid``).
+    """
+    if engine == "scalar":
+        from ..sim.scenarios import get_scenario
+        out = []
+        for r in ratios:
+            row = []
+            for q in qs:
+                sc = get_scenario("multilevel_exascale", mu_min=mu_minutes,
+                                  buddy_ratio=float(r), q=float(q))
+                row.append(evaluate_multilevel(sc.ckpt, sc.power, m_max))
+            out.append(row)
+        return out
+    from .. import sim
+    res = sim.evaluate_multilevel_grid(
+        sim.buddy_ratio_grid(ratios, qs, mu_min=mu_minutes),
+        m_values=tuple(range(1, m_max + 1)))
+    return [[res.point_at((i, j)) for j in range(len(qs))]
+            for i in range(len(ratios))]
 
 
 # ----------------------------------------------------------------------

@@ -12,13 +12,20 @@ The scalar ``repro.core.simulator.simulate_once`` remains the reference
 oracle; ``tests/test_sim_engine.py`` pins the batched engine to it
 trajectory-for-trajectory under a shared failure schedule.
 """
-from .scenarios import (ParamGrid, Scenario, get_scenario, list_scenarios,
+from .scenarios import (ParamGrid, Scenario, MultilevelParamGrid,
+                        MultilevelScenario, get_scenario, list_scenarios,
                         register_scenario, mu_rho_grid, nodes_grid,
-                        product_grid, arch_grid, grid_from_scenarios)
-from .engine import (TrajectoryBatch, ScheduledRNG, simulate_trajectories,
-                     simulate_grid, presample_gaps)
-from .sweep import (GridResult, evaluate_grid, golden_section_batched,
+                        product_grid, arch_grid, grid_from_scenarios,
+                        multilevel_grid_from_scenarios, buddy_ratio_grid,
+                        multilevel_arch_grid)
+from .engine import (TrajectoryBatch, MultilevelTrajectoryBatch,
+                     ScheduledRNG, simulate_trajectories, simulate_grid,
+                     simulate_trajectories_ml, simulate_grid_ml,
+                     presample_gaps, presample_failures)
+from .sweep import (GridResult, MultilevelGridResult, evaluate_grid,
+                    evaluate_multilevel_grid, golden_section_batched,
                     t_opt_time_batched, t_opt_energy_batched,
                     t_young_batched, t_daly_batched, t_msk_energy_batched,
                     time_final_batched, energy_final_batched,
+                    ml_time_final_batched, ml_energy_final_batched,
                     sweep_rho_grid, sweep_mu_rho_grid, sweep_nodes_grid)

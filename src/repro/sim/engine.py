@@ -50,7 +50,7 @@ try:  # newer jax re-exports the x64 context at top level
 except ImportError:
     from jax.experimental import enable_x64
 
-from .scenarios import ParamGrid
+from .scenarios import MultilevelParamGrid, ParamGrid
 
 COMPUTE, CHECKPOINT = 0, 1
 
@@ -317,6 +317,348 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
         n_checkpoints=out["n_checkpoints"].reshape(shp),
         truncated=out["truncated"].reshape(shp),
         gaps_exhausted=out["gaps_exhausted"].reshape(shp))
+
+
+# ---------------------------------------------------------------------------
+# Multilevel (buddy + PFS) phase machine
+# ---------------------------------------------------------------------------
+#
+# The superperiod structure: periods 0..m-2 end with a buddy checkpoint
+# (cost C1, commits level 1), period m-1 with a deep checkpoint (cost C2,
+# commits BOTH levels).  Each pre-sampled failure carries a boolean "hard"
+# flag (buddy copy lost, probability q): a soft failure rolls back to the
+# last committed level-1 state and resumes the period schedule where that
+# commit left it; a hard failure rolls back to the last deep commit and
+# restarts the superperiod at period 0 (re-executing the intermediate buddy
+# checkpoints on the way — their I/O is naturally re-counted).
+#
+# With m = 1 and degenerate levels (C1=C2, R1=R2, D1=D2) every arithmetic
+# expression below matches the single-level ``_run_one`` operation-for-
+# operation, so the scalar ``simulate_once`` oracle is reproduced
+# bit-for-bit — the parity tests rely on this.
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelTrajectoryBatch:
+    """Per-trajectory outputs, shape ``grid.shape + (n_trials,)``."""
+
+    wall_time: np.ndarray
+    energy: np.ndarray
+    work_executed: np.ndarray
+    io1_time: np.ndarray         # buddy-level I/O (writes + soft recoveries)
+    io2_time: np.ndarray         # deep-level I/O (writes + hard recoveries)
+    down_time: np.ndarray
+    n_failures: np.ndarray
+    n_hard_failures: np.ndarray
+    n_ckpt1: np.ndarray          # committed buddy checkpoints
+    n_ckpt2: np.ndarray          # committed deep checkpoints
+    truncated: np.ndarray
+    gaps_exhausted: np.ndarray
+
+
+def _run_one_ml(T, m, C1, C2, R1, R2, D1, D2, omega, T_base,
+                gaps, hard, n_steps):
+    """One two-level trajectory; ``hard[i]`` is the level-loss flag of the
+    i-th failure.  Mirrors ``_run_one`` branch-for-branch."""
+    f64 = gaps.dtype
+    n_gaps = gaps.shape[0]
+    C_first = jnp.where(m > 1, C1, C2)      # period 0 is deep only when m=1
+
+    init = (jnp.zeros((), f64),            # wall
+            jnp.zeros((), f64),            # committed1
+            jnp.zeros((), f64),            # committed2
+            jnp.zeros((), f64),            # live
+            jnp.zeros((), f64),            # work_exec
+            jnp.zeros((), f64),            # io1_time
+            jnp.zeros((), f64),            # io2_time
+            jnp.zeros((), f64),            # down_time
+            gaps[0],                       # next_fail
+            T - C_first,                   # phase_left
+            jnp.zeros((), f64),            # snapshot
+            jnp.zeros((), jnp.int32),      # phase = COMPUTE
+            jnp.zeros((), jnp.int32),      # k: period index in superperiod
+            jnp.zeros((), jnp.int32),      # resume_k: soft-rollback restart
+            jnp.zeros((), jnp.int32),      # n_fail
+            jnp.zeros((), jnp.int32),      # n_hard
+            jnp.zeros((), jnp.int32),      # n_ckpt1
+            jnp.zeros((), jnp.int32),      # n_ckpt2
+            jnp.ones((), jnp.int32),       # fail_idx (gaps[0] consumed)
+            jnp.zeros((), jnp.bool_))      # done
+
+    def step(carry, _):
+        (wall, committed1, committed2, live, work_exec, io1_time, io2_time,
+         down_time, next_fail, phase_left, snapshot, phase, k, resume_k,
+         n_fail, n_hard, n_ckpt1, n_ckpt2, fail_idx, done) = carry
+
+        is_deep = k == m - 1
+        Ck = jnp.where(is_deep, C2, C1)
+        in_ckpt = phase == CHECKPOINT
+        rate = jnp.where(in_ckpt, omega, 1.0)
+        t_done = jnp.where(rate > 0.0,
+                           (T_base - live) / jnp.where(rate > 0.0, rate, 1.0),
+                           jnp.inf)
+        t_next = jnp.minimum(phase_left, t_done)
+        no_fail = wall + t_next < next_fail
+
+        # ---- branch A: the phase segment completes without failure ----
+        wall_a = wall + t_next
+        live_a = live + rate * t_next
+        work_a = work_exec + rate * t_next
+        io1_a = io1_time + jnp.where(in_ckpt & ~is_deep, t_next, 0.0)
+        io2_a = io2_time + jnp.where(in_ckpt & is_deep, t_next, 0.0)
+        left_a = phase_left - t_next
+        finished = live_a >= T_base - _EPS
+        boundary = jnp.logical_and(~finished, left_a <= _EPS)
+        start_ckpt = jnp.logical_and(boundary, ~in_ckpt)
+        end_ckpt = jnp.logical_and(boundary, in_ckpt)
+        phase_a = jnp.where(start_ckpt, CHECKPOINT,
+                            jnp.where(end_ckpt, COMPUTE, phase))
+        k_next = jnp.where(k + 1 >= m, 0, k + 1)
+        C_next = jnp.where(k_next == m - 1, C2, C1)
+        left_a = jnp.where(start_ckpt, Ck,
+                           jnp.where(end_ckpt, T - C_next, left_a))
+        snapshot_a = jnp.where(start_ckpt, live_a, snapshot)
+        committed1_a = jnp.where(end_ckpt, snapshot, committed1)
+        committed2_a = jnp.where(jnp.logical_and(end_ckpt, is_deep),
+                                 snapshot, committed2)
+        k_a = jnp.where(end_ckpt, k_next, k)
+        resume_k_a = jnp.where(end_ckpt, k_next, resume_k)
+        n_ckpt1_a = n_ckpt1 + jnp.logical_and(end_ckpt,
+                                              ~is_deep).astype(jnp.int32)
+        n_ckpt2_a = n_ckpt2 + jnp.logical_and(end_ckpt,
+                                              is_deep).astype(jnp.int32)
+
+        # ---- branch B: a failure strikes mid-segment ----
+        hard_f = hard[jnp.minimum(n_fail, n_gaps - 1)]
+        dt = next_fail - wall
+        work_b = work_exec + rate * dt
+        io1_b = io1_time + jnp.where(in_ckpt & ~is_deep, dt, 0.0) \
+            + jnp.where(hard_f, 0.0, R1)
+        io2_b = io2_time + jnp.where(in_ckpt & is_deep, dt, 0.0) \
+            + jnp.where(hard_f, R2, 0.0)
+        D_sel = jnp.where(hard_f, D2, D1)
+        R_sel = jnp.where(hard_f, R2, R1)
+        wall_b = next_fail + D_sel + R_sel
+        down_b = down_time + D_sel
+        gap = jnp.where(fail_idx < n_gaps,
+                        gaps[jnp.minimum(fail_idx, n_gaps - 1)], jnp.inf)
+        next_fail_b = wall_b + gap
+        committed1_b = jnp.where(hard_f, committed2, committed1)
+        k_b = jnp.where(hard_f, 0, resume_k)
+        left_b = T - jnp.where(k_b == m - 1, C2, C1)
+
+        def sel(a_val, b_val):
+            return jnp.where(no_fail, a_val, b_val)
+
+        new = (sel(wall_a, wall_b),
+               sel(committed1_a, committed1_b),
+               sel(committed2_a, committed2),
+               sel(live_a, committed1_b),      # rollback to surviving level
+               sel(work_a, work_b),
+               sel(io1_a, io1_b),
+               sel(io2_a, io2_b),
+               sel(down_time, down_b),
+               sel(next_fail, next_fail_b),
+               sel(left_a, left_b),
+               sel(snapshot_a, snapshot),
+               sel(phase_a, COMPUTE).astype(jnp.int32),
+               sel(k_a, k_b).astype(jnp.int32),
+               sel(resume_k_a, k_b).astype(jnp.int32),
+               sel(n_fail, n_fail + 1).astype(jnp.int32),
+               sel(n_hard, n_hard + hard_f.astype(jnp.int32)
+                   ).astype(jnp.int32),
+               sel(n_ckpt1_a, n_ckpt1).astype(jnp.int32),
+               sel(n_ckpt2_a, n_ckpt2).astype(jnp.int32),
+               sel(fail_idx, fail_idx + 1).astype(jnp.int32),
+               jnp.logical_or(done, jnp.logical_and(no_fail, finished)))
+
+        keep = lambda old, upd: jnp.where(done, old, upd)
+        return tuple(keep(o, u) for o, u in zip(carry, new)), None
+
+    final, _ = lax.scan(step, init, None, length=n_steps)
+    (wall, _c1, _c2, _live, work_exec, io1_time, io2_time, down_time,
+     _nf, _pl, _snap, _phase, _k, _rk, n_fail, n_hard, n_ckpt1, n_ckpt2,
+     fail_idx, done) = final
+    return {"wall_time": wall, "work_executed": work_exec,
+            "io1_time": io1_time, "io2_time": io2_time,
+            "down_time": down_time, "n_failures": n_fail,
+            "n_hard_failures": n_hard, "n_ckpt1": n_ckpt1,
+            "n_ckpt2": n_ckpt2, "truncated": ~done,
+            "gaps_exhausted": fail_idx > n_gaps}
+
+
+def _make_runner_ml(n_steps: int):
+    def run_grid(T, m, C1, C2, R1, R2, D1, D2, omega, T_base, gaps, hard):
+        def one(t, mm, c1, c2, r1, r2, d1, d2, o, tb, g, h):
+            return _run_one_ml(t, mm, c1, c2, r1, r2, d1, d2, o, tb, g, h,
+                               n_steps)
+        over_trials = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
+        over_grid = jax.vmap(over_trials, in_axes=(0,) * 10 + (0, 0))
+        return over_grid(T, m, C1, C2, R1, R2, D1, D2, omega, T_base,
+                         gaps, hard)
+    return jax.jit(run_grid)
+
+
+_ML_RUNNERS: dict = {}
+
+
+def _runner_ml(n_steps: int):
+    if n_steps not in _ML_RUNNERS:
+        _ML_RUNNERS[n_steps] = _make_runner_ml(n_steps)
+    return _ML_RUNNERS[n_steps]
+
+
+def _expected_failures_ml(T, m, grid: MultilevelParamGrid,
+                          T_base) -> np.ndarray:
+    """E[#failures] from the two-level closed form, clipped like the
+    single-level estimator."""
+    a, b, mu_m = grid.a(m), grid.b(m), grid.mu_eff(m)
+    denom = (T - a) * (b - T / (2.0 * mu_m))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        tf = np.where(denom > 1e-12, T_base * T / denom, np.inf)
+    tf = np.where(np.isfinite(tf) & (tf > 0), tf, 50.0 * T_base)
+    return tf / grid.mu
+
+
+def default_fail_capacity_ml(T, m, grid: MultilevelParamGrid, T_base) -> int:
+    """Pre-sampled failures per trajectory: mean + 10 sigma margin."""
+    nf = _expected_failures_ml(T, m, grid, T_base)
+    return int(np.max(np.ceil(nf + 10.0 * np.sqrt(nf + 1.0) + 10.0)))
+
+
+def default_step_budget_ml(T, m, grid: MultilevelParamGrid, T_base) -> int:
+    """Scan length: a hard failure re-executes up to a whole superperiod
+    (m periods, 2 events each), so the per-failure margin scales with m."""
+    work_per_period = np.maximum(T - grid.a(m), 1e-9)
+    periods = T_base / work_per_period
+    nf = _expected_failures_ml(T, m, grid, T_base)
+    per_fail = 2.0 * np.maximum(m * T / work_per_period, 1.0) + 4.0
+    events = 2.0 * periods + 2.0 + nf * per_fail
+    margin = 10.0 * np.sqrt(nf + 1.0) * per_fail
+    return int(np.max(np.ceil(2.0 * events + margin + 64.0)))
+
+
+def presample_failures(grid: MultilevelParamGrid, n_trials: int,
+                       capacity: int, seed: int = 0):
+    """(gaps, hard): exponential(mu) inter-failure gaps and Bernoulli(q)
+    level-loss flags, each of shape ``(B, n_trials, capacity)``."""
+    rng = np.random.default_rng(seed)
+    flat = grid.ravel()
+    mu = flat.mu[:, None, None]
+    gaps = rng.exponential(scale=mu, size=(grid.size, n_trials, capacity))
+    hard = rng.random(size=(grid.size, n_trials, capacity)) \
+        < flat.q[:, None, None]
+    return gaps, hard
+
+
+def _broadcast_schedule(arr, size, dtype):
+    arr = np.asarray(arr, dtype=dtype)
+    if arr.ndim == 1:
+        arr = arr[None, None, :]
+    if arr.ndim == 2:
+        arr = arr[None, :, :]
+    return np.broadcast_to(arr, (size, arr.shape[-2], arr.shape[-1]))
+
+
+def simulate_trajectories_ml(T, m, grid: MultilevelParamGrid,
+                             T_base: float = 1.0, n_trials: int = 200,
+                             seed: int = 0,
+                             gaps: Optional[np.ndarray] = None,
+                             hard: Optional[np.ndarray] = None,
+                             n_steps: Optional[int] = None,
+                             ) -> MultilevelTrajectoryBatch:
+    """Simulate every two-level (grid point x trial) trajectory in one
+    jitted call.  ``T`` and ``m`` broadcast against ``grid.shape``; ``gaps``
+    and ``hard`` override the pre-sampled failure schedule (pass the same
+    gaps to the scalar oracle via :class:`ScheduledRNG` for parity checks).
+    """
+    flat = grid.ravel()
+    T_arr = np.broadcast_to(np.asarray(T, dtype=np.float64),
+                            grid.shape).ravel()
+    m_arr = np.broadcast_to(np.asarray(m, dtype=np.int32),
+                            grid.shape).ravel()
+    Tb_arr = np.broadcast_to(np.asarray(T_base, dtype=np.float64),
+                             grid.shape).ravel()
+    if np.any(m_arr < 1):
+        raise ValueError("deep-checkpoint cadence m must be >= 1")
+    if np.any(T_arr < np.maximum(flat.C1, flat.C2)):
+        raise ValueError("period too short: T must cover the checkpoint")
+    if np.any(T_arr <= (1.0 - flat.omega) * flat.C_mean(m_arr)):
+        raise ValueError("period too short: no work progress per period")
+
+    if gaps is None or hard is None:
+        cap = default_fail_capacity_ml(T_arr, m_arr, flat, Tb_arr)
+        g, h = presample_failures(flat, n_trials, cap, seed=seed)
+        gaps = g if gaps is None else gaps
+        hard = h if hard is None else hard
+    gaps = _broadcast_schedule(gaps, flat.size, np.float64)
+    hard = _broadcast_schedule(hard, flat.size, np.bool_)
+    if gaps.shape != hard.shape:
+        raise ValueError(f"gaps {gaps.shape} and hard flags {hard.shape} "
+                         f"schedules disagree")
+    n_trials = gaps.shape[-2]
+    if n_steps is None:
+        n_steps = default_step_budget_ml(T_arr, m_arr, flat, Tb_arr)
+    n_steps = 1 << (max(int(n_steps), 1) - 1).bit_length()
+
+    with enable_x64():
+        out = _runner_ml(int(n_steps))(
+            jnp.asarray(T_arr), jnp.asarray(m_arr), jnp.asarray(flat.C1),
+            jnp.asarray(flat.C2), jnp.asarray(flat.R1),
+            jnp.asarray(flat.R2), jnp.asarray(flat.D1),
+            jnp.asarray(flat.D2), jnp.asarray(flat.omega),
+            jnp.asarray(Tb_arr), jnp.asarray(gaps), jnp.asarray(hard))
+        out = {k: np.asarray(v) for k, v in out.items()}
+
+    shp = grid.shape + (n_trials,)
+    bc = lambda x: x.reshape(grid.shape + (1,))
+    wall = out["wall_time"].reshape(shp)
+    work = out["work_executed"].reshape(shp)
+    io1 = out["io1_time"].reshape(shp)
+    io2 = out["io2_time"].reshape(shp)
+    down = out["down_time"].reshape(shp)
+    energy = (bc(grid.P_static) * wall + bc(grid.P_cal) * work
+              + bc(grid.P_io1) * io1 + bc(grid.P_io2) * io2
+              + bc(grid.P_down) * down)
+    return MultilevelTrajectoryBatch(
+        wall_time=wall, energy=energy, work_executed=work,
+        io1_time=io1, io2_time=io2, down_time=down,
+        n_failures=out["n_failures"].reshape(shp),
+        n_hard_failures=out["n_hard_failures"].reshape(shp),
+        n_ckpt1=out["n_ckpt1"].reshape(shp),
+        n_ckpt2=out["n_ckpt2"].reshape(shp),
+        truncated=out["truncated"].reshape(shp),
+        gaps_exhausted=out["gaps_exhausted"].reshape(shp))
+
+
+def simulate_grid_ml(T, m, grid: MultilevelParamGrid, T_base: float = 1.0,
+                     n_trials: int = 200, seed: int = 0,
+                     gaps: Optional[np.ndarray] = None,
+                     hard: Optional[np.ndarray] = None,
+                     n_steps: Optional[int] = None) -> dict:
+    """Mean/SE summaries of the two-level Monte-Carlo (validates the
+    multilevel closed forms; raises on truncation/schedule exhaustion)."""
+    tb = simulate_trajectories_ml(T, m, grid, T_base, n_trials=n_trials,
+                                  seed=seed, gaps=gaps, hard=hard,
+                                  n_steps=n_steps)
+    if np.any(tb.truncated):
+        raise RuntimeError(
+            f"{int(tb.truncated.sum())} trajectories exceeded the scan "
+            f"budget; pass a larger n_steps (check params)")
+    if np.any(tb.gaps_exhausted):
+        raise RuntimeError(
+            f"{int(tb.gaps_exhausted.sum())} trajectories exhausted their "
+            f"failure schedule (tail simulated failure-free); pass gaps/"
+            f"hard arrays with larger capacity")
+    out = {}
+    n = tb.wall_time.shape[-1]
+    for key, arr in (("T_final", tb.wall_time), ("E_final", tb.energy),
+                     ("T_cal", tb.work_executed), ("T_io1", tb.io1_time),
+                     ("T_io2", tb.io2_time), ("T_down", tb.down_time),
+                     ("n_failures", tb.n_failures.astype(np.float64)),
+                     ("n_hard", tb.n_hard_failures.astype(np.float64))):
+        out[key] = arr.mean(axis=-1)
+        out[key + "_se"] = arr.std(axis=-1, ddof=1) / math.sqrt(n)
+    return out
 
 
 def simulate_grid(T, grid: ParamGrid, T_base: float = 1.0,

@@ -27,9 +27,10 @@ from typing import Callable, Dict, Iterable, Sequence
 
 import numpy as np
 
-from ..core.params import (CheckpointParams, PowerParams,
+from ..core.params import (CheckpointParams, MultilevelCheckpointParams,
+                           MultilevelPowerParams, PowerParams,
                            EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7,
-                           MU_IND_JAGUAR_MIN)
+                           EXASCALE_ML_POWER, MU_IND_JAGUAR_MIN)
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +154,75 @@ def arch(arch: str = "dbrx-132b", hosts: int = 64, bw: float = 8e9,
     return Scenario(name=f"arch({arch})", ckpt=ck, power=pw,
                     description=f"{arch} on the production mesh "
                                 f"({hosts} hosts @ {bw:g} B/s)")
+
+
+# -- multilevel (buddy + PFS) scenario family --------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelScenario:
+    """One named two-level operating point (buddy + PFS)."""
+
+    name: str
+    ckpt: MultilevelCheckpointParams
+    power: MultilevelPowerParams
+    T_base: float = 1.0
+    description: str = ""
+
+
+@register_scenario("multilevel_exascale")
+def multilevel_exascale(mu_min: float = 300.0, buddy_ratio: float = 0.1,
+                        q: float = 0.1, C_pfs: float = 10.0,
+                        P_io1: float = 20.0) -> MultilevelScenario:
+    """Exascale two-level: buddy RAM checkpoints at ``buddy_ratio * C_PFS``."""
+    C1 = buddy_ratio * C_pfs
+    ck = MultilevelCheckpointParams(C1=C1, R1=C1, C2=C_pfs, R2=C_pfs,
+                                    D1=0.5, D2=1.0, mu=mu_min, q=q,
+                                    omega=0.5)
+    pw = MultilevelPowerParams(P_static=10.0, P_cal=10.0, P_io1=P_io1,
+                               P_io2=100.0)
+    return MultilevelScenario(
+        name=f"multilevel_exascale(mu={mu_min:g},ratio={buddy_ratio:g},"
+             f"q={q:g})",
+        ckpt=ck, power=pw,
+        description="Exascale buddy+PFS hierarchy (VELOC-style)")
+
+
+@register_scenario("multilevel_fig12")
+def multilevel_fig12(mu_min: float = 300.0, buddy_ratio: float = 0.1,
+                     q: float = 0.1) -> MultilevelScenario:
+    """Figures 1-2 resilience setup lifted to two levels (C2=R2=10, D2=1)."""
+    ck = MultilevelCheckpointParams(
+        C1=10.0 * buddy_ratio, R1=10.0 * buddy_ratio, C2=10.0, R2=10.0,
+        D1=1.0, D2=1.0, mu=mu_min, q=q, omega=0.5)
+    return MultilevelScenario(
+        name=f"multilevel_fig12(mu={mu_min:g})", ckpt=ck,
+        power=EXASCALE_ML_POWER,
+        description="paper Fig. 1-2 setup with a buddy fast level")
+
+
+@register_scenario("multilevel_arch")
+def multilevel_arch(arch: str = "dbrx-132b", hosts: int = 64,
+                    pfs_bw: float = 8e9, buddy_bw: float = 80e9,
+                    n_nodes: int = 256, D_s: float = 60.0,
+                    omega: float = 0.5, q: float = 0.05,
+                    ) -> MultilevelScenario:
+    """One production architecture, two-level: C1 from NIC RAM-to-RAM buddy
+    bandwidth, C2 from PFS bandwidth; hard failures need a node swap-in."""
+    mu_ind_s = 125.0 * 365 * 24 * 3600
+    C2 = _arch_checkpoint_seconds(arch, hosts, pfs_bw)
+    C1 = _arch_checkpoint_seconds(arch, hosts, buddy_bw)
+    ck = MultilevelCheckpointParams(C1=C1, R1=C1, C2=C2, R2=C2,
+                                    D1=D_s / 10.0, D2=D_s,
+                                    mu=mu_ind_s / n_nodes, q=q, omega=omega)
+    from ..energy import PAPER_EXASCALE_PROFILE
+    base = PAPER_EXASCALE_PROFILE.power_params()
+    pw = MultilevelPowerParams(P_static=base.P_static, P_cal=base.P_cal,
+                               P_io1=0.2 * base.P_io, P_io2=base.P_io,
+                               P_down=base.P_down)
+    return MultilevelScenario(
+        name=f"multilevel_arch({arch})", ckpt=ck, power=pw,
+        description=f"{arch} with buddy NIC level ({buddy_bw:g} B/s) over "
+                    f"PFS ({pfs_bw:g} B/s)")
 
 
 # ---------------------------------------------------------------------------
@@ -300,3 +370,162 @@ def arch_grid(archs: Sequence[str] | None = None, **kwargs) -> ParamGrid:
         archs = [c.name for c in ALL_ARCHS]
     return grid_from_scenarios(get_scenario("arch", arch=a, **kwargs)
                                for a in archs)
+
+
+# ---------------------------------------------------------------------------
+# MultilevelParamGrid: struct-of-arrays two-level parameter batches
+# ---------------------------------------------------------------------------
+
+_ML_FIELDS = ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "omega", "q",
+              "P_static", "P_cal", "P_io1", "P_io2", "P_down")
+
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelParamGrid:
+    """Broadcast float64 arrays of two-level checkpoint + power parameters.
+
+    Same plumbing as :class:`ParamGrid`, with per-level (C_k, R_k, D_k,
+    P_io_k) fields plus the buddy-loss probability ``q``.  ``m`` stays a
+    decision variable handled by the solvers/engine, not a grid field.
+    """
+
+    C1: np.ndarray
+    R1: np.ndarray
+    D1: np.ndarray
+    C2: np.ndarray
+    R2: np.ndarray
+    D2: np.ndarray
+    mu: np.ndarray
+    omega: np.ndarray
+    q: np.ndarray
+    P_static: np.ndarray
+    P_cal: np.ndarray
+    P_io1: np.ndarray
+    P_io2: np.ndarray
+    P_down: np.ndarray
+
+    def __post_init__(self):
+        arrs = np.broadcast_arrays(*(np.asarray(getattr(self, f),
+                                                dtype=np.float64)
+                                     for f in _ML_FIELDS))
+        for f, a in zip(_ML_FIELDS, arrs):
+            object.__setattr__(self, f, np.ascontiguousarray(a))
+
+    # -- shape plumbing ------------------------------------------------------
+    @property
+    def shape(self) -> tuple:
+        return self.C1.shape
+
+    @property
+    def size(self) -> int:
+        return self.C1.size
+
+    def ravel(self) -> "MultilevelParamGrid":
+        return MultilevelParamGrid(**{f: getattr(self, f).ravel()
+                                      for f in _ML_FIELDS})
+
+    def reshape(self, shape) -> "MultilevelParamGrid":
+        return MultilevelParamGrid(**{f: getattr(self, f).reshape(shape)
+                                      for f in _ML_FIELDS})
+
+    def fields(self) -> dict:
+        return {f: getattr(self, f) for f in _ML_FIELDS}
+
+    # -- per-m derived (multilevel §3.1 analogue) ---------------------------
+    def C_mean(self, m) -> np.ndarray:
+        return ((m - 1) * self.C1 + self.C2) / m
+
+    def a(self, m) -> np.ndarray:
+        return (1.0 - self.omega) * self.C_mean(m)
+
+    def b(self, m) -> np.ndarray:
+        soft = self.D1 + self.R1 + self.omega * self.C_mean(m)
+        hard = self.D2 + self.R2 + self.omega * self.C2
+        return 1.0 - (soft + self.q * (hard - soft)) / self.mu
+
+    def mu_eff(self, m) -> np.ndarray:
+        return self.mu / (1.0 + self.q * (m - 1))
+
+    def period_bounds(self, m) -> tuple:
+        lo = np.maximum(np.maximum(self.a(m), self.C1), self.C2)
+        return lo, 2.0 * self.mu_eff(m) * self.b(m)
+
+    def valid(self, m) -> np.ndarray:
+        lo, hi = self.period_bounds(m)
+        return hi > lo * (1.0 + 1e-9)
+
+    # -- object views --------------------------------------------------------
+    def ckpt_at(self, idx) -> MultilevelCheckpointParams:
+        return MultilevelCheckpointParams(
+            C1=float(self.C1[idx]), R1=float(self.R1[idx]),
+            C2=float(self.C2[idx]), R2=float(self.R2[idx]),
+            D1=float(self.D1[idx]), D2=float(self.D2[idx]),
+            mu=float(self.mu[idx]), q=float(self.q[idx]),
+            omega=float(self.omega[idx]))
+
+    def power_at(self, idx) -> MultilevelPowerParams:
+        return MultilevelPowerParams(
+            P_static=float(self.P_static[idx]),
+            P_cal=float(self.P_cal[idx]), P_io1=float(self.P_io1[idx]),
+            P_io2=float(self.P_io2[idx]), P_down=float(self.P_down[idx]))
+
+    # -- constructors / conversions -----------------------------------------
+    @classmethod
+    def from_params(cls, ckpt: MultilevelCheckpointParams,
+                    power: MultilevelPowerParams) -> "MultilevelParamGrid":
+        return cls(C1=ckpt.C1, R1=ckpt.R1, D1=ckpt.D1, C2=ckpt.C2,
+                   R2=ckpt.R2, D2=ckpt.D2, mu=ckpt.mu, omega=ckpt.omega,
+                   q=ckpt.q, P_static=power.P_static, P_cal=power.P_cal,
+                   P_io1=power.P_io1, P_io2=power.P_io2,
+                   P_down=power.P_down)
+
+    @classmethod
+    def from_single_level(cls, grid: ParamGrid,
+                          q=0.0) -> "MultilevelParamGrid":
+        """Degenerate lift of a single-level grid (C1=C2 etc.) — the exact
+        m=1 reduction construction used by the parity tests."""
+        return cls(C1=grid.C, R1=grid.R, D1=grid.D, C2=grid.C, R2=grid.R,
+                   D2=grid.D, mu=grid.mu, omega=grid.omega, q=q,
+                   P_static=grid.P_static, P_cal=grid.P_cal,
+                   P_io1=grid.P_io, P_io2=grid.P_io, P_down=grid.P_down)
+
+    def single_level(self) -> ParamGrid:
+        """The PFS-only comparator grid (C=C2, R=R2, D=D2, P_io=P_io2)."""
+        return ParamGrid(C=self.C2, R=self.R2, D=self.D2, mu=self.mu,
+                         omega=self.omega, P_static=self.P_static,
+                         P_cal=self.P_cal, P_io=self.P_io2,
+                         P_down=self.P_down)
+
+
+def multilevel_grid_from_scenarios(
+        scens: Iterable[MultilevelScenario]) -> MultilevelParamGrid:
+    """Stack two-level scenarios along one leading axis."""
+    scens = list(scens)
+    return MultilevelParamGrid(
+        **{f: [getattr(s.ckpt, f) for s in scens]
+           for f in ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "omega", "q")},
+        **{f: [getattr(s.power, f) for s in scens]
+           for f in ("P_static", "P_cal", "P_io1", "P_io2", "P_down")})
+
+
+def buddy_ratio_grid(ratios: Sequence[float], qs: Sequence[float],
+                     mu_min: float = 300.0, **kwargs) -> MultilevelParamGrid:
+    """Figure 4 grid: Exascale buddy-cost ratio x buddy-loss probability."""
+    rows = []
+    for r in ratios:
+        rows.append(multilevel_grid_from_scenarios(
+            get_scenario("multilevel_exascale", mu_min=mu_min,
+                         buddy_ratio=float(r), q=float(q), **kwargs)
+            for q in qs))
+    return MultilevelParamGrid(
+        **{f: np.stack([getattr(g, f) for g in rows]) for f in _ML_FIELDS})
+
+
+def multilevel_arch_grid(archs: Sequence[str] | None = None,
+                         **kwargs) -> MultilevelParamGrid:
+    """All (or the named) production architectures, two-level, 1-D."""
+    if archs is None:
+        from ..configs import ALL_ARCHS
+        archs = [c.name for c in ALL_ARCHS]
+    return multilevel_grid_from_scenarios(
+        get_scenario("multilevel_arch", arch=a, **kwargs) for a in archs)

@@ -15,6 +15,7 @@ argmin — falls back to the numeric result elementwise.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Sequence
 
@@ -31,7 +32,7 @@ except ImportError:
 
 from ..core.params import PowerParams
 from . import scenarios
-from .scenarios import ParamGrid
+from .scenarios import MultilevelParamGrid, ParamGrid
 
 _GOLDEN = (math.sqrt(5.0) - 1.0) / 2.0
 
@@ -338,6 +339,339 @@ def evaluate_grid(grid: ParamGrid, T_base: float = 1.0) -> GridResult:
     out = {k: raw[i].reshape(grid.shape) for i, k in enumerate(_OUT_ORDER)}
     out["valid"] = out["valid"] > 0.5
     return GridResult(grid=grid, T_base=float(T_base), **out)
+
+
+# ---------------------------------------------------------------------------
+# Multilevel (buddy + PFS) batched model + joint (T, m) solvers
+# ---------------------------------------------------------------------------
+#
+# p: dict of broadcastable jnp float64 arrays with MultilevelParamGrid field
+# names; m: a float array broadcasting against them (the solvers put the
+# candidate cadences on a leading axis and argmin over it).
+
+def _ml_derived(p, m):
+    """(C_mean, a_m, b_m, mu_m) of the multilevel §3.1 analogue."""
+    Cb = ((m - 1.0) * p["C1"] + p["C2"]) / m
+    a = (1.0 - p["omega"]) * Cb
+    soft = p["D1"] + p["R1"] + p["omega"] * Cb
+    hard = p["D2"] + p["R2"] + p["omega"] * p["C2"]
+    b = 1.0 - (soft + p["q"] * (hard - soft)) / p["mu"]
+    mu_m = p["mu"] / (1.0 + p["q"] * (m - 1.0))
+    return Cb, a, b, mu_m
+
+
+def ml_time_final_batched(T, m, p, T_base=1.0):
+    """Two-level expected makespan, elementwise (period T, deep every m)."""
+    _, a, b, mu_m = _ml_derived(p, m)
+    return T_base * T / ((T - a) * (b - T / (2.0 * mu_m)))
+
+
+def ml_energy_final_batched(T, m, p, T_base=1.0):
+    """Two-level E_final with per-level I/O powers, elementwise."""
+    C1, R1, D1 = p["C1"], p["R1"], p["D1"]
+    C2, R2, D2 = p["C2"], p["R2"], p["D2"]
+    q, omega = p["q"], p["omega"]
+    Cb, a, b, mu_m = _ml_derived(p, m)
+
+    Tf = T_base * T / ((T - a) * (b - T / (2.0 * mu_m)))
+    nf = Tf / p["mu"]
+    S2 = ((m - 1.0) * C1**2 + C2**2) / m
+    Ew = (T**2 - S2) / (2.0 * T) + omega * S2 / (2.0 * T)
+    w_soft = omega * Cb + Ew
+    w_hard = omega * C2 + (m - 1.0) * (T - (1.0 - omega) * C1) / 2.0 + Ew
+    T_cal = T_base + nf * (w_soft + q * (w_hard - w_soft))
+
+    ck_io1 = T_base * ((m - 1.0) * C1 / m) / (T - a)
+    ck_io2 = T_base * (C2 / m) / (T - a)
+    io1_pf = ((m - 1.0) / m) * C1**2 / (2.0 * T) + (1.0 - q) * R1 \
+        + q * (m - 1.0) * C1 / 2.0
+    io2_pf = C2**2 / (2.0 * m * T) + q * R2
+    T_down = nf * (D1 + q * (D2 - D1))
+    return (T_cal * p["P_cal"]
+            + (ck_io1 + nf * io1_pf) * p["P_io1"]
+            + (ck_io2 + nf * io2_pf) * p["P_io2"]
+            + T_down * p["P_down"] + Tf * p["P_static"])
+
+
+def _ml_bracket(p, m):
+    """Shrunk (lo, hi, valid) per (m, grid point)."""
+    _, a, b, mu_m = _ml_derived(p, m)
+    lo0 = jnp.maximum(jnp.maximum(a, p["C1"]), p["C2"])
+    hi0 = 2.0 * mu_m * b
+    valid = hi0 > lo0 * (1.0 + 1e-9)
+    hi0 = jnp.where(valid, hi0, 2.0 * lo0 + 1.0)
+    span = hi0 - lo0
+    return lo0 + 1e-9 * span + 1e-12, hi0 - 1e-9 * span, valid
+
+
+def _ml_energy_prime_batched(T, m, p, T_base=1.0):
+    """Analytic two-level dE/dT (W normal form, mirrors core.model)."""
+    C1, C2 = p["C1"], p["C2"]
+    q, omega = p["q"], p["omega"]
+    Pc, P1, P2, Pd = p["P_cal"], p["P_io1"], p["P_io2"], p["P_down"]
+    Cb, a, b, mu_m = _ml_derived(p, m)
+    S2 = ((m - 1.0) * C1**2 + C2**2) / m
+
+    W0 = (Pc * (omega * Cb + q * (omega * C2 - omega * Cb
+                                  - (m - 1.0) * (1.0 - omega) * C1 / 2.0))
+          + P1 * ((1.0 - q) * p["R1"] + q * (m - 1.0) * C1 / 2.0)
+          + P2 * q * p["R2"]
+          + Pd * (p["D1"] + q * (p["D2"] - p["D1"])))
+    W1 = Pc * (1.0 + q * (m - 1.0)) / 2.0
+    Wm = (Pc * (omega - 1.0) * S2 / 2.0
+          + P1 * (m - 1.0) * C1**2 / (2.0 * m)
+          + P2 * C2**2 / (2.0 * m))
+    J = P1 * (m - 1.0) * C1 / m + P2 * C2 / m
+
+    Tf = T_base * T / ((T - a) * (b - T / (2.0 * mu_m)))
+    Tfp = T_base * (-a * b + T**2 / (2.0 * mu_m)) \
+        / ((T - a) ** 2 * (b - T / (2.0 * mu_m)) ** 2)
+    W = W0 + W1 * T + Wm / T
+    Wp = W1 - Wm / T**2
+    return (p["P_static"] * Tfp + Tfp / p["mu"] * W + Tf / p["mu"] * Wp
+            - J * T_base / (T - a) ** 2)
+
+
+def _ml_quadratic(p, m, lo, hi, T_base):
+    """(c2, c1, c0, quad_ok) of Q_m = K_m * E' by 3-point Newton
+    interpolation of the analytic product + vectorized 4th-point check."""
+    _, a, b, mu_m = _ml_derived(p, m)
+
+    def Q(t):
+        K = (t - a) ** 2 * (b - t / (2.0 * mu_m)) ** 2 \
+            / (p["P_static"] * T_base)
+        return K * _ml_energy_prime_batched(t, m, p, T_base)
+
+    span = hi - lo
+    t1, t2, t3 = lo + 0.2 * span, lo + 0.45 * span, lo + 0.7 * span
+    q1, q2, q3 = Q(t1), Q(t2), Q(t3)
+    d1 = (q2 - q1) / (t2 - t1)
+    d2 = (q3 - q2) / (t3 - t2)
+    c2 = (d2 - d1) / (t3 - t1)
+    c1 = d1 - c2 * (t1 + t2)
+    c0 = q1 - t1 * (d1 - c2 * t2)
+
+    t4 = lo + 0.9 * span
+    q4 = Q(t4)
+    q4_poly = c2 * t4**2 + c1 * t4 + c0
+    scale = jnp.maximum(jnp.maximum(jnp.abs(q4), jnp.abs(q4_poly)),
+                        jnp.maximum(jnp.abs(c0), 1e-300))
+    quad_ok = jnp.abs(q4 - q4_poly) <= 1e-6 * scale
+    return c2, c1, c0, quad_ok
+
+
+def _t_opt_time_ml_from(p, m, t_num):
+    """Per-m AlgoT closed form, numeric fallback where it degenerates."""
+    _, a, b, mu_m = _ml_derived(p, m)
+    lo, hi, _ = _ml_bracket(p, m)
+    val = 2.0 * a * b * mu_m
+    t_closed = jnp.clip(jnp.sqrt(jnp.maximum(val, 0.0)), lo, hi)
+    return jnp.where(val > 0.0, t_closed, t_num)
+
+
+def _t_opt_energy_ml_from(p, m, T_base, t_num):
+    """Per-m AlgoE quadratic root with the scalar solver's guard semantics."""
+    lo, hi, _ = _ml_bracket(p, m)
+    c2, c1, c0, quad_ok = _ml_quadratic(p, m, lo, hi, T_base)
+
+    disc = c1**2 - 4.0 * c2 * c0
+    sq = jnp.sqrt(jnp.maximum(disc, 0.0))
+    safe_c2 = jnp.where(jnp.abs(c2) > 1e-300, c2, 1.0)
+    r1 = (-c1 - sq) / (2.0 * safe_c2)
+    r2 = (-c1 + sq) / (2.0 * safe_c2)
+    safe_c1 = jnp.where(jnp.abs(c1) > 1e-300, c1, 1.0)
+    rlin = -c0 / safe_c1
+
+    def is_min_root(r):
+        return (quad_ok & (disc >= 0.0) & (jnp.abs(c2) > 1e-300)
+                & (r > lo) & (r < hi) & (2.0 * c2 * r + c1 > 0.0))
+
+    lin_ok = quad_ok & (jnp.abs(c2) <= 1e-300) & (jnp.abs(c1) > 1e-300) \
+        & (rlin > lo) & (rlin < hi) & (c1 > 0.0)
+
+    t_root = jnp.where(is_min_root(r1), r1,
+                       jnp.where(is_min_root(r2), r2,
+                                 jnp.where(lin_ok, rlin, t_num)))
+    e_root = ml_energy_final_batched(t_root, m, p, T_base)
+    e_num = ml_energy_final_batched(t_num, m, p, T_base)
+    return jnp.where(e_root <= e_num * (1.0 + 1e-9), t_root, t_num)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelGridResult:
+    """Jointly optimal (T, m) per grid point, plus per-m curves.
+
+    Scalar-per-point arrays have ``grid.shape``; the ``*_by_m`` arrays carry
+    a leading axis over ``m_values``.  Degenerate points (no valid period at
+    any m) follow the ``GridResult`` convention: periods C2, m 1, ratios
+    exactly 1.0, Tf/E NaN.
+    """
+
+    grid: MultilevelParamGrid
+    m_values: tuple
+    T_base: float
+    T_time: np.ndarray           # AlgoT period
+    m_time: np.ndarray           # AlgoT deep-checkpoint cadence (int)
+    T_energy: np.ndarray         # AlgoE period
+    m_energy: np.ndarray         # (int)
+    Tf_time: np.ndarray
+    Tf_energy: np.ndarray
+    E_time: np.ndarray
+    E_energy: np.ndarray
+    time_ratio: np.ndarray       # Tf_energy / Tf_time  (>= 1, "loss")
+    energy_ratio: np.ndarray     # E_time / E_energy    (>= 1, "gain")
+    time_vs_single: np.ndarray   # Tf(AlgoT, 2-level) / Tf(AlgoT, PFS-only)
+    energy_vs_single: np.ndarray  # E(AlgoE, 2-level) / E(AlgoE, PFS-only)
+    T_time_by_m: np.ndarray      # (M,) + grid.shape
+    Tf_by_m: np.ndarray
+    T_energy_by_m: np.ndarray
+    E_by_m: np.ndarray
+    valid_by_m: np.ndarray
+    valid: np.ndarray
+
+    @property
+    def energy_saving(self) -> np.ndarray:
+        return 1.0 - 1.0 / self.energy_ratio
+
+    @property
+    def time_overhead(self) -> np.ndarray:
+        return self.time_ratio - 1.0
+
+    def point_at(self, idx):
+        """Scalar :class:`core.tradeoff.MultilevelTradeoffPoint` view."""
+        from ..core.tradeoff import MultilevelTradeoffPoint
+        return MultilevelTradeoffPoint(
+            ckpt=self.grid.ckpt_at(idx), power=self.grid.power_at(idx),
+            T_time=float(self.T_time[idx]), m_time=int(self.m_time[idx]),
+            T_energy=float(self.T_energy[idx]),
+            m_energy=int(self.m_energy[idx]),
+            time_ratio=float(self.time_ratio[idx]),
+            energy_ratio=float(self.energy_ratio[idx]),
+            time_vs_single=float(self.time_vs_single[idx]),
+            energy_vs_single=float(self.energy_vs_single[idx]))
+
+
+_ML_FIELD_ORDER = ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "omega", "q",
+                   "P_static", "P_cal", "P_io1", "P_io2", "P_down")
+_ML_OUT_ORDER = ("T_time", "m_time", "T_energy", "m_energy",
+                 "Tf_time", "Tf_energy", "E_time", "E_energy",
+                 "time_ratio", "energy_ratio",
+                 "time_vs_single", "energy_vs_single", "valid")
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _evaluate_ml_core(P, T_base, m_values):
+    # P: one stacked (14, N) array; m_values: static tuple of cadences.
+    p = dict(zip(_ML_FIELD_ORDER, P))
+    mv = jnp.asarray(m_values, P.dtype).reshape((-1, 1))     # (M, 1)
+    lo, hi, valid_m = _ml_bracket(p, mv)                     # (M, N)
+
+    # The per-m time and energy numeric argmins share ONE golden-section
+    # loop over a stacked leading axis (same dispatch-bound rationale as
+    # the single-level _evaluate_core).
+    sel = jnp.arange(2).reshape((2, 1, 1))
+
+    def objective(t):
+        return jnp.where(sel == 0, ml_time_final_batched(t, mv, p, T_base),
+                         ml_energy_final_batched(t, mv, p, T_base))
+
+    t_num = golden_section_batched(objective,
+                                   jnp.broadcast_to(lo, (2,) + lo.shape),
+                                   jnp.broadcast_to(hi, (2,) + hi.shape))
+    Tt_m = _t_opt_time_ml_from(p, mv, t_num[0])              # (M, N)
+    Te_m = _t_opt_energy_ml_from(p, mv, T_base, t_num[1])
+    Tf_m = ml_time_final_batched(Tt_m, mv, p, T_base)
+    E_m = ml_energy_final_batched(Te_m, mv, p, T_base)
+
+    inf = jnp.inf
+    i_t = jnp.argmin(jnp.where(valid_m, Tf_m, inf), axis=0)  # (N,)
+    i_e = jnp.argmin(jnp.where(valid_m, E_m, inf), axis=0)
+    take = lambda arr, i: jnp.take_along_axis(arr, i[None, :], axis=0)[0]
+    m_arr = jnp.asarray(m_values, P.dtype)
+    T_time, m_time = take(Tt_m, i_t), m_arr[i_t]
+    T_energy, m_energy = take(Te_m, i_e), m_arr[i_e]
+    Tf_time, E_energy = take(Tf_m, i_t), take(E_m, i_e)
+    # Cross metrics at the jointly-optimal operating points.
+    Tf_energy = ml_time_final_batched(T_energy, m_energy, p, T_base)
+    E_time = ml_energy_final_batched(T_time, m_time, p, T_base)
+
+    # PFS-only single-level comparator on the same grid (C2/R2/D2/P_io2).
+    p_sl = {"C": p["C2"], "R": p["R2"], "D": p["D2"], "mu": p["mu"],
+            "omega": p["omega"], "P_static": p["P_static"],
+            "P_cal": p["P_cal"], "P_io": p["P_io2"], "P_down": p["P_down"]}
+    lo_s, hi_s, valid_s = _bracket(p_sl)
+    sel_s = jnp.arange(2).reshape((2, 1))
+
+    def objective_s(t):
+        return jnp.where(sel_s == 0, time_final_batched(t, p_sl, T_base),
+                         energy_final_batched(t, p_sl, T_base))
+
+    t_num_s = golden_section_batched(objective_s,
+                                     jnp.stack([lo_s, lo_s]),
+                                     jnp.stack([hi_s, hi_s]))
+    Tt_s = _t_opt_time_from(p_sl, t_num_s[0])
+    Te_s = _t_opt_energy_from(p_sl, T_base, t_num_s[1])
+    Tf_s = time_final_batched(Tt_s, p_sl, T_base)
+    E_s = energy_final_batched(Te_s, p_sl, T_base)
+
+    valid = jnp.any(valid_m, axis=0)
+    nan = jnp.full_like(T_time, jnp.nan)
+    one = jnp.ones_like(T_time)
+    C2 = p["C2"]
+    scalars = jnp.stack([
+        jnp.where(valid, T_time, C2),
+        jnp.where(valid, m_time, 1.0),
+        jnp.where(valid, T_energy, C2),
+        jnp.where(valid, m_energy, 1.0),
+        jnp.where(valid, Tf_time, nan),
+        jnp.where(valid, Tf_energy, nan),
+        jnp.where(valid, E_time, nan),
+        jnp.where(valid, E_energy, nan),
+        jnp.where(valid, Tf_energy / Tf_time, one),
+        jnp.where(valid, E_time / E_energy, one),
+        # vs-single ratios are meaningless when the PFS-only comparator has
+        # no valid period at all (exactly the regime where the buddy level
+        # rescues an otherwise infeasible platform): report NaN there.
+        jnp.where(valid, jnp.where(valid_s, Tf_time / Tf_s, nan), one),
+        jnp.where(valid, jnp.where(valid_s, E_energy / E_s, nan), one),
+        valid.astype(C2.dtype)])
+    by_m = jnp.stack([Tt_m, jnp.where(valid_m, Tf_m, jnp.nan),
+                      Te_m, jnp.where(valid_m, E_m, jnp.nan),
+                      valid_m.astype(C2.dtype)])
+    return scalars, by_m
+
+
+def evaluate_multilevel_grid(grid: MultilevelParamGrid,
+                             m_values: Sequence[int] = tuple(range(1, 13)),
+                             T_base: float = 1.0) -> MultilevelGridResult:
+    """Jointly optimal (T, m) + ratios for every grid point, one jitted call.
+
+    ``m_values`` is the candidate set of deep-checkpoint cadences (static:
+    one compiled program per distinct tuple).
+    """
+    m_values = tuple(int(m) for m in m_values)
+    if not m_values or min(m_values) < 1:
+        raise ValueError(f"m_values must be positive ints, got {m_values}")
+    flat = grid.ravel()
+    P = np.stack([getattr(flat, f) for f in _ML_FIELD_ORDER])
+    with enable_x64():
+        scalars, by_m = _evaluate_ml_core(
+            jnp.asarray(P, dtype=jnp.float64),
+            jnp.asarray(float(T_base), jnp.float64), m_values)
+        scalars, by_m = np.asarray(scalars), np.asarray(by_m)
+    out = {k: scalars[i].reshape(grid.shape)
+           for i, k in enumerate(_ML_OUT_ORDER)}
+    out["valid"] = out["valid"] > 0.5
+    out["m_time"] = np.where(out["valid"], out["m_time"], 1).astype(np.int64)
+    out["m_energy"] = np.where(out["valid"], out["m_energy"],
+                               1).astype(np.int64)
+    M = len(m_values)
+    shp = (M,) + grid.shape
+    return MultilevelGridResult(
+        grid=grid, m_values=m_values, T_base=float(T_base),
+        T_time_by_m=by_m[0].reshape(shp), Tf_by_m=by_m[1].reshape(shp),
+        T_energy_by_m=by_m[2].reshape(shp), E_by_m=by_m[3].reshape(shp),
+        valid_by_m=by_m[4].reshape(shp) > 0.5, **out)
 
 
 # ---------------------------------------------------------------------------
