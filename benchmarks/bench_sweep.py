@@ -70,6 +70,58 @@ def _time_pair(mus, rhos, scalar_repeat, batched_repeat):
             "speedup_warm": scalar_s / batched_s}
 
 
+def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
+    """Batched NON-exponential engine path vs the batched exponential path.
+
+    Runs ``sim.simulate_trajectories`` on the same grid/trials twice — once
+    with auto-sampled exponential schedules, once with Weibull ones (the new
+    sampling path, including its cv-scaled capacity/step budgets) — and
+    reports the within-run ratio.  The ratio is what the CI gate watches
+    (via the shared ``speedup_warm`` key): it is machine-normalized, and it
+    regresses exactly when the non-exponential sampling/budget path bloats
+    relative to the engine's baseline cost.
+    """
+    import numpy as np
+
+    from repro.core import fig12_checkpoint, EXASCALE_POWER_RHO55
+    from repro.core.failures import Weibull
+    from repro.sim import ParamGrid
+    from repro.sim.engine import simulate_trajectories
+
+    mus = np.linspace(120.0, 600.0, n_points)
+    base = ParamGrid.from_params(fig12_checkpoint(300.0),
+                                 EXASCALE_POWER_RHO55)
+    grid = ParamGrid(**{f: (mus if f == "mu"
+                            else np.broadcast_to(v, (n_points,)))
+                        for f, v in base.fields().items()})
+    T, T_base = 60.0, 1500.0
+    proc = Weibull(shape=shape)
+
+    def run_exp():
+        return simulate_trajectories(T, grid, T_base, n_trials=n_trials,
+                                     seed=0)
+
+    def run_weibull():
+        return simulate_trajectories(T, grid, T_base, n_trials=n_trials,
+                                     seed=0, process=proc)
+
+    t0 = time.perf_counter()
+    run_weibull()
+    weibull_cold_s = time.perf_counter() - t0
+    run_exp()                              # warm the exponential program too
+    weibull_warm_s = _best_of(run_weibull, repeat)
+    exp_warm_s = _best_of(run_exp, repeat)
+    return {"n_points": n_points, "n_trials": n_trials,
+            "weibull_shape": shape,
+            "exp_warm_s": exp_warm_s,
+            "batched_cold_s": weibull_cold_s,
+            "batched_warm_s": weibull_warm_s,
+            # exponential-vs-weibull within-run ratio; gated like the other
+            # grids' speedups (a >2x drop = the new path got >2x slower
+            # relative to the exponential engine baseline).
+            "speedup_warm": exp_warm_s / weibull_warm_s}
+
+
 def run(write: bool = True):
     import numpy as np
 
@@ -78,11 +130,13 @@ def run(write: bool = True):
     dense_grid = _time_pair(list(np.linspace(30.0, 600.0, 96)),
                             list(np.linspace(1.0, 10.0, 100)),
                             scalar_repeat=1, batched_repeat=3)
+    weibull_engine = _time_weibull_engine()
     payload = {
         "benchmark": "fig2_mu_rho_sweep",
         "unit": "seconds",
         "fig2_seed_grid": seed_grid,
         "dense_grid": dense_grid,
+        "weibull_engine": weibull_engine,
     }
     if write:
         with open(CANONICAL, "w") as f:
@@ -102,8 +156,23 @@ def check_regression(baseline: dict, payload: dict,
     the speedup and fails.  Pure comparison (no timing) so the CI gate
     logic is unit-testable.
     """
+    def gated(entry) -> bool:
+        return isinstance(entry, dict) and "speedup_warm" in entry
+
     regressions = []
-    for grid in ("fig2_seed_grid", "dense_grid"):
+    # Every grid the committed baseline gates must be present in the
+    # payload — a renamed/dropped bench disables its gate and must fail
+    # loudly, not pass silently.  Payload-only grids are skipped: that is
+    # the transition state of a NEW bench whose baseline lands with it.
+    for grid in sorted(baseline):
+        if not gated(baseline[grid]):
+            continue
+        if not gated(payload.get(grid)):
+            regressions.append(
+                f"{grid}: present in the committed baseline but missing "
+                f"from this run's payload — bench renamed/dropped without "
+                f"regenerating BENCH_sweep.json?")
+            continue
         base = baseline[grid]["speedup_warm"]
         now = payload[grid]["speedup_warm"]
         if now * factor < base:
@@ -125,10 +194,13 @@ def main(argv=None):
 
     wrote = not (args.check or args.no_write)
     payload = run(write=wrote)
-    s, d = payload["fig2_seed_grid"], payload["dense_grid"]
+    s, d, w = (payload["fig2_seed_grid"], payload["dense_grid"],
+               payload["weibull_engine"])
     emit("bench_sweep", s["batched_warm_s"] * 1e6,
          f"fig2 {s['n_points']}pts speedup={s['speedup_warm']:.1f}x; "
-         f"dense {d['n_points']}pts speedup={d['speedup_warm']:.1f}x "
+         f"dense {d['n_points']}pts speedup={d['speedup_warm']:.1f}x; "
+         f"weibull engine {w['n_points']}x{w['n_trials']} "
+         f"exp/weibull={w['speedup_warm']:.2f}x "
          + ("-> BENCH_sweep.json" if wrote else "(baseline untouched)"))
 
     if args.check:

@@ -1,0 +1,106 @@
+"""Figure 5 (this reproduction): robustness of the paper's periods to
+non-exponential failures.
+
+Sweeps Weibull shape x platform MTBF over the Exascale scenario family and
+records, per point, the wall-time / energy penalty of running at the
+exponential-assumption periods (the paper's AlgoT / AlgoE closed forms, and
+the Young / Daly baselines) instead of the process-optimal period found by
+the CRN Monte-Carlo surrogate solver.  Shape 1.0 *is* the exponential
+process — the control row that pins the closed forms.
+
+Every reported optimum is MC-validated: all reported periods are re-scored
+on an independent seed (CRN within that run), and each reported optimum
+must stay within ``VALIDATE_RTOL`` (2%) of the best candidate's objective
+there, else the bench fails.  Cross-seed penalty drift is reported
+alongside.
+
+Writes ``benchmarks/results/fig5_robustness.csv``.
+"""
+import csv
+import time
+
+import numpy as np
+
+from ._util import emit, RESULTS
+
+SHAPES = [0.5, 0.7, 1.0]
+MU_MINS = [120.0, 300.0, 600.0]
+#: sized so independent-seed validation noise sits well inside the 2% gate
+#: (wall/energy SE ~ 0.3% of the mean at this trial count).
+N_TRIALS = 192
+#: acceptance gate: independent-seed re-simulation at the reported optima.
+VALIDATE_RTOL = 0.02
+
+
+def run():
+    from repro.sim import evaluate_periods_grid, sweep_weibull_shapes
+
+    t0 = time.perf_counter()
+    res = sweep_weibull_shapes(SHAPES, MU_MINS, n_trials=N_TRIALS, seed=0)
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+
+    # MC validation of the reported optima: re-score all six reported
+    # periods on an INDEPENDENT seed; the reported T_mc optima must stay
+    # within 2% of the best candidate's objective on that run.  Within one
+    # run the candidates share schedules (CRN), so this comparison is tight
+    # — unlike cross-seed absolute objectives, which carry ~1% SE each at
+    # this trial count and would make a 2% gate a noise gamble.
+    chk = evaluate_periods_grid(res.grid, res.process, res.eval_periods,
+                                T_base=res.T_base, n_trials=N_TRIALS,
+                                seed=1)
+    w, e = chk["wall"], chk["energy"]
+    worst = max(float(np.max(w[0] / w.min(axis=0))),
+                float(np.max(e[1] / e.min(axis=0)))) - 1.0
+    if worst > VALIDATE_RTOL:
+        raise RuntimeError(
+            f"fig5 MC validation FAILED: a reported optimum is "
+            f"{worst * 100:.2f}% worse than the best candidate period on an "
+            f"independent seed (gate {VALIDATE_RTOL * 100:g}%)")
+    # Penalty reproducibility across seeds (reported, not gated: each side
+    # carries its own MC noise).
+    pen_drift = max(
+        float(np.max(np.abs(w[2] / w[0] - res.time_penalty_exp))),
+        float(np.max(np.abs(e[3] / e[1] - res.energy_penalty_exp))),
+        float(np.max(np.abs(w[4] / w[0] - res.time_penalty_young))),
+        float(np.max(np.abs(w[5] / w[0] - res.time_penalty_daly))))
+
+    rows = []
+    for i, k in enumerate(SHAPES):
+        for j, mu in enumerate(MU_MINS):
+            rows.append({
+                "weibull_shape": k, "mu_min": mu,
+                "T_exp_time": float(res.T_exp_time[i, j]),
+                "T_exp_energy": float(res.T_exp_energy[i, j]),
+                "T_young": float(res.T_young[i, j]),
+                "T_daly": float(res.T_daly[i, j]),
+                "T_mc_time": float(res.T_mc_time[i, j]),
+                "T_mc_energy": float(res.T_mc_energy[i, j]),
+                "time_penalty_exp": float(res.time_penalty_exp[i, j]),
+                "energy_penalty_exp": float(res.energy_penalty_exp[i, j]),
+                "time_penalty_young": float(res.time_penalty_young[i, j]),
+                "time_penalty_daly": float(res.time_penalty_daly[i, j]),
+                "energy_penalty_young": float(
+                    res.energy_penalty_young[i, j]),
+                "energy_penalty_daly": float(res.energy_penalty_daly[i, j]),
+            })
+    with open(RESULTS / "fig5_robustness.csv", "w", newline="") as f:
+        wcsv = csv.DictWriter(f, fieldnames=list(rows[0]))
+        wcsv.writeheader()
+        wcsv.writerows(rows)
+    return res, elapsed_us, worst, pen_drift
+
+
+def main():
+    res, us, worst, pen_drift = run()
+    ep = np.asarray(res.energy_penalty_exp)
+    i, j = np.unravel_index(np.argmax(ep), ep.shape)
+    emit("fig5_robustness", us,
+         f"worst exp-assumption energy penalty "
+         f"{(ep[i, j] - 1) * 100:.1f}% at k={SHAPES[i]:g} "
+         f"mu={MU_MINS[j]:g}min; optima MC-validated within "
+         f"{worst * 100:.2f}% (penalty drift {pen_drift * 100:.2f}%) "
+         f"-> fig5_robustness.csv")
+
+
+if __name__ == "__main__":
+    main()

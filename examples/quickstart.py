@@ -6,10 +6,14 @@ verifies both against the discrete-event Monte-Carlo simulator.
 
     PYTHONPATH=src python examples/quickstart.py
 
-This is the single-level model.  For the two-level (buddy + PFS) extension —
-per-level (C_k, R_k, D_k, P_io_k), joint (T, m) solvers, and the batched
-Monte-Carlo validation — see the "Multilevel checkpointing" section of
-docs/simulation.md and examples/energy_study.py.
+This is the single-level model under the paper's exponential failures.  For
+the two-level (buddy + PFS) extension — per-level (C_k, R_k, D_k, P_io_k),
+joint (T, m) solvers, and the batched Monte-Carlo validation — see the
+"Multilevel checkpointing" section of docs/simulation.md and
+examples/energy_study.py.  For non-exponential failures (Weibull /
+log-normal / trace replay, `repro.core.failures`) and what the closed
+forms cost there, see the "Failure processes" section of
+docs/simulation.md.
 """
 import sys
 from pathlib import Path

@@ -1,0 +1,344 @@
+"""Failure-process abstraction: renewal processes of i.i.d. inter-failure gaps.
+
+The paper (and the seed code) hardwires exponential (memoryless) failures,
+but field studies of HPC failure logs consistently fit Weibull with shape
+< 1 (infant-mortality clustering) and sometimes log-normal.  This module
+makes the inter-failure distribution a first-class object that every
+simulation layer consumes:
+
+  * :class:`Exponential` — the paper's Poisson process (the default
+    everywhere; reproduces the legacy sampling stream *bit-for-bit*).
+  * :class:`Weibull` — shape ``k`` (k < 1: decreasing hazard, clustered
+    failures; k = 1 is exponential; k > 1: wear-out).
+  * :class:`LogNormal` — multiplicative-error gap model (non-monotone
+    hazard).
+  * :class:`TraceReplay` — replay of an empirical gap log (cyclically, from
+    a random per-trajectory phase), preserving the trace's autocorrelation.
+
+Semantics shared with both simulators (the *renewal convention*): gap ``i``
+is the time from the end of recovery ``i-1`` (or from t = 0) to failure
+``i`` — the machine's clock of the failure process restarts when it comes
+back up.  A pre-sampled gap array therefore defines an absolute-time
+failure schedule once the recovery ends are known, and the same array fed
+to the scalar oracle (:func:`repro.core.simulator.simulate_once` with
+``gaps=...``) and the batched engine produces bit-identical trajectories
+for *every* distribution.
+
+Parameterization: every process targets a mean gap ``mu`` (the platform
+MTBF).  Constructors accept ``mu=None``, in which case the caller (the
+engine / the scalar simulator) supplies the mean at sampling time — this is
+how one process instance serves a whole :class:`~repro.sim.scenarios.ParamGrid`
+of MTBFs.  Shape parameters may be *arrays* broadcasting against the grid's
+leading axes (batched sampling over distribution-parameter grids); use
+:meth:`FailureProcess.ravel` next to ``ParamGrid.ravel``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Union
+
+import numpy as np
+
+ArrayLike = Union[float, np.ndarray]
+
+
+def _lead(x: ArrayLike, size: tuple) -> np.ndarray:
+    """Align an array-valued parameter with the *leading* axes of ``size``.
+
+    A ``(B,)`` parameter sampled at ``size=(B, n_trials, capacity)`` becomes
+    ``(B, 1, 1)`` so numpy broadcasting pairs grid points with their own
+    parameter instead of the trailing-axis default.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    if x.ndim == 0 or size is None:
+        return x
+    extra = len(size) - x.ndim
+    if extra < 0:
+        raise ValueError(f"parameter of shape {x.shape} cannot broadcast "
+                         f"against sample size {size}")
+    return x.reshape(x.shape + (1,) * extra)
+
+
+class FailureProcess:
+    """A renewal process of i.i.d. inter-failure gaps (see module docstring).
+
+    Subclasses implement :meth:`sample` (and usually :meth:`hazard`); the
+    base class provides mean resolution and the variance scaling the engine
+    uses to size pre-sampled schedules.
+    """
+
+    name: str = "process"
+    #: declared mean gap, or None when the caller supplies it per sample.
+    mu: Optional[ArrayLike] = None
+
+    # -- mean plumbing -------------------------------------------------------
+    def resolve_mean(self, mean: Optional[ArrayLike] = None) -> np.ndarray:
+        """The mean gap to sample at: the caller's ``mean`` unless the
+        process pins its own ``mu``."""
+        m = self.mu if self.mu is not None else mean
+        if m is None:
+            raise ValueError(f"{self.name}: no mean gap — construct with "
+                             f"mu=... or pass mean= when sampling")
+        return np.asarray(m, dtype=np.float64)
+
+    def gap_cv(self) -> ArrayLike:
+        """Coefficient of variation (std/mean) of one gap — sizes the
+        pre-sampled schedule capacity; 1.0 for exponential."""
+        return 1.0
+
+    # -- sampling / hazard ---------------------------------------------------
+    def sample(self, rng: np.random.Generator, size=None,
+               mean: Optional[ArrayLike] = None):
+        """Draw inter-failure gaps of the given shape (mean ``mean``)."""
+        raise NotImplementedError
+
+    def hazard(self, t: ArrayLike, mean: Optional[ArrayLike] = None):
+        """Instantaneous failure rate h(t) at gap-age ``t``."""
+        raise NotImplementedError(f"{self.name}: no analytic hazard")
+
+    def ravel(self) -> "FailureProcess":
+        """Flatten array-valued shape parameters (``ParamGrid.ravel``'s
+        counterpart); the default has none."""
+        return self
+
+    def iter_gaps(self, rng: np.random.Generator,
+                  mean: Optional[ArrayLike] = None):
+        """Infinite iterator of gaps for ONE trajectory (the scalar
+        simulator's lazy draw path).
+
+        The default yields i.i.d. draws — correct for every i.i.d.-renewal
+        process; :class:`TraceReplay` overrides it to keep its cyclic
+        ordering.  For the exponential default each ``next()`` performs
+        exactly one ``rng.exponential(scale=mean)`` call, preserving the
+        legacy stream bit-for-bit.
+        """
+        while True:
+            yield float(self.sample(rng, mean=mean))
+
+    @property
+    def is_exponential(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Exponential(FailureProcess):
+    """The paper's Poisson process: constant hazard 1/mu.
+
+    ``sample`` forwards to ``rng.exponential(scale=mean, size=size)`` —
+    the *exact* call the legacy code made — so an ``Exponential()`` instance
+    reproduces today's sampling streams bit-for-bit (parity-tested).
+    """
+
+    mu: Optional[ArrayLike] = None
+    name: str = "exponential"
+
+    def sample(self, rng, size=None, mean=None):
+        return rng.exponential(scale=_lead(self.resolve_mean(mean), size),
+                               size=size)
+
+    def hazard(self, t, mean=None):
+        return np.broadcast_to(1.0 / self.resolve_mean(mean),
+                               np.shape(t)).astype(np.float64)
+
+    @property
+    def is_exponential(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Weibull(FailureProcess):
+    """Weibull(shape k, scale lam) gaps with mean ``lam * Gamma(1 + 1/k)``.
+
+    ``shape`` may be an array (one k per grid point).  The scale is derived
+    from the target mean, so a Weibull process at a platform's MTBF is
+    directly comparable to the exponential model at the same mu.
+    """
+
+    shape: ArrayLike = 0.7
+    mu: Optional[ArrayLike] = None
+    name: str = "weibull"
+
+    def __post_init__(self):
+        if np.any(np.asarray(self.shape) <= 0):
+            raise ValueError(f"Weibull shape must be > 0, got {self.shape}")
+
+    def _scale(self, mean, size=None):
+        k = _lead(self.shape, size)
+        return _lead(self.resolve_mean(mean), size) / _gamma1p(1.0 / k), k
+
+    def sample(self, rng, size=None, mean=None):
+        lam, k = self._scale(mean, size)
+        return lam * rng.weibull(k, size=size)
+
+    def gap_cv(self):
+        k = np.asarray(self.shape, dtype=np.float64)
+        g1 = _gamma1p(1.0 / k)
+        g2 = _gamma1p(2.0 / k)
+        return np.sqrt(np.maximum(g2 / g1**2 - 1.0, 0.0))
+
+    def hazard(self, t, mean=None):
+        lam, k = self._scale(mean)
+        t = np.asarray(t, dtype=np.float64)
+        return (k / lam) * (t / lam) ** (k - 1.0)
+
+    def ravel(self) -> "Weibull":
+        return dataclasses.replace(
+            self, shape=np.ravel(self.shape),
+            mu=None if self.mu is None else np.ravel(self.mu))
+
+
+@dataclasses.dataclass(frozen=True)
+class LogNormal(FailureProcess):
+    """Log-normal gaps: exp(N(m, sigma^2)) with m chosen so the mean is mu.
+
+    ``sigma`` is the shape parameter (log-space std); the hazard rises then
+    falls — a common fit for repair-induced failure clustering.
+    """
+
+    sigma: ArrayLike = 1.0
+    mu: Optional[ArrayLike] = None
+    name: str = "lognormal"
+
+    def __post_init__(self):
+        if np.any(np.asarray(self.sigma) <= 0):
+            raise ValueError(f"LogNormal sigma must be > 0, got {self.sigma}")
+
+    def sample(self, rng, size=None, mean=None):
+        s = _lead(self.sigma, size)
+        m = np.log(_lead(self.resolve_mean(mean), size)) - 0.5 * s * s
+        return rng.lognormal(mean=m, sigma=s, size=size)
+
+    def gap_cv(self):
+        s = np.asarray(self.sigma, dtype=np.float64)
+        return np.sqrt(np.expm1(s * s))
+
+    def hazard(self, t, mean=None):
+        s = np.asarray(self.sigma, dtype=np.float64)
+        m = np.log(self.resolve_mean(mean)) - 0.5 * s * s
+        t = np.asarray(t, dtype=np.float64)
+        z = (np.log(t) - m) / s
+        pdf = np.exp(-0.5 * z * z) / (t * s * math.sqrt(2.0 * math.pi))
+        sf = 0.5 * _erfc(z / math.sqrt(2.0))
+        return pdf / sf
+
+    def ravel(self) -> "LogNormal":
+        return dataclasses.replace(
+            self, sigma=np.ravel(self.sigma),
+            mu=None if self.mu is None else np.ravel(self.mu))
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReplay(FailureProcess):
+    """Replay an empirical inter-failure gap log.
+
+    Each trajectory replays the trace *cyclically from a uniformly random
+    starting offset*, so trajectories differ in phase but preserve the
+    trace's gap ordering (and hence its clustering / autocorrelation —
+    exactly what i.i.d. resampling would destroy).  When the caller
+    supplies a target mean (a grid's mu), gaps are rescaled by
+    ``mean / trace_mean``; construct with ``rescale=False`` to forbid that
+    and always replay the raw trace.
+    """
+
+    gaps: tuple = ()
+    rescale: bool = True
+    name: str = "trace"
+
+    def __post_init__(self):
+        g = np.asarray(self.gaps, dtype=np.float64).ravel()
+        if g.size == 0:
+            raise ValueError("TraceReplay needs at least one gap")
+        if np.any(g <= 0) or not np.all(np.isfinite(g)):
+            raise ValueError("trace gaps must be finite and > 0")
+        object.__setattr__(self, "gaps", tuple(float(x) for x in g))
+
+    @property
+    def mu(self):  # type: ignore[override]
+        return float(np.mean(self.gaps))
+
+    def resolve_mean(self, mean=None):
+        if mean is None or not self.rescale:
+            return np.asarray(self.mu, dtype=np.float64)
+        return np.asarray(mean, dtype=np.float64)
+
+    def gap_cv(self):
+        g = np.asarray(self.gaps)
+        return float(g.std() / g.mean()) if g.size > 1 else 1.0
+
+    def sample(self, rng, size=None, mean=None):
+        trace = np.asarray(self.gaps, dtype=np.float64)
+        n = trace.size
+        if size is None:
+            # A single draw cannot carry the trace's ordering — use
+            # iter_gaps for sequential scalar draws (the simulator does).
+            return float(trace[int(rng.integers(n))]) \
+                * float(self.resolve_mean(mean) / self.mu)
+        size = tuple(size)
+        start = rng.integers(n, size=size[:-1] + (1,))
+        idx = (start + np.arange(size[-1])) % n
+        out = trace[idx] * (_lead(self.resolve_mean(mean), size) / self.mu)
+        return np.broadcast_to(out, size).copy()
+
+    def iter_gaps(self, rng, mean=None):
+        """Cyclic replay from one uniformly random starting offset — the
+        scalar counterpart of the per-trajectory ``sample`` rows, keeping
+        the trace's ordering/autocorrelation (i.i.d. draws would not)."""
+        trace = np.asarray(self.gaps, dtype=np.float64)
+        scale = float(self.resolve_mean(mean) / self.mu)
+        i = int(rng.integers(trace.size))
+        while True:
+            yield float(trace[i]) * scale
+            i = (i + 1) % trace.size
+
+
+# ---------------------------------------------------------------------------
+# Registry / coercion
+# ---------------------------------------------------------------------------
+
+PROCESSES = {
+    "exponential": Exponential,
+    "weibull": Weibull,
+    "lognormal": LogNormal,
+    "trace": TraceReplay,
+}
+
+
+def get_process(name: str, **kwargs) -> FailureProcess:
+    """Build a process by name (``weibull``, ``lognormal``, ...)."""
+    try:
+        cls = PROCESSES[name]
+    except KeyError:
+        raise KeyError(f"unknown failure process {name!r}; "
+                       f"one of {sorted(PROCESSES)}") from None
+    return cls(**kwargs)
+
+
+def as_process(p) -> FailureProcess:
+    """Coerce None (-> Exponential), a name, or a process instance."""
+    if p is None:
+        return Exponential()
+    if isinstance(p, str):
+        return get_process(p)
+    if isinstance(p, FailureProcess):
+        return p
+    raise TypeError(f"not a failure process: {p!r}")
+
+
+# ---------------------------------------------------------------------------
+# Scalar helpers (math.gamma / erfc vectorized over small parameter arrays)
+# ---------------------------------------------------------------------------
+
+_vgamma = np.vectorize(math.gamma, otypes=[np.float64])
+_verfc = np.vectorize(math.erfc, otypes=[np.float64])
+
+
+def _gamma1p(x):
+    """Gamma(1 + x), elementwise (scipy-free)."""
+    out = _vgamma(1.0 + np.asarray(x, dtype=np.float64))
+    return out if out.ndim else float(out)
+
+
+def _erfc(x):
+    out = _verfc(np.asarray(x, dtype=np.float64))
+    return out if out.ndim else float(out)

@@ -14,16 +14,21 @@ MSK    — Meneses–Sarood–Kalé energy model, reconstructed exactly as the
 """
 from __future__ import annotations
 
+import dataclasses
+import logging
 import math
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import model
+from .failures import FailureProcess, as_process
 from .params import (CheckpointParams, MultilevelCheckpointParams,
                      MultilevelPowerParams, PowerParams)
 
 _GOLDEN = (math.sqrt(5.0) - 1.0) / 2.0
+
+logger = logging.getLogger(__name__)
 
 
 # --------------------------------------------------------------------------
@@ -55,9 +60,12 @@ def _bracket(ckpt: CheckpointParams) -> Tuple[float, float]:
     """Valid open interval for T, slightly shrunk for numerical safety."""
     lo, hi = ckpt.valid_period_range()
     if hi <= lo:
+        # The actual lower bound is lo = max(a, C) with a = (1-omega)*C,
+        # not bare C — report what was really compared.
         raise ValueError(
-            f"No valid period: need C={ckpt.C} < 2*mu*b={hi}; platform MTBF "
-            f"mu={ckpt.mu} too small for these checkpoint costs.")
+            f"No valid period: need lower bound max(a={ckpt.a}, C={ckpt.C})"
+            f"={lo} < 2*mu*b={hi}; platform MTBF mu={ckpt.mu} too small for "
+            f"these checkpoint costs.")
     span = hi - lo
     return lo + 1e-9 * span + 1e-12, hi - 1e-9 * span
 
@@ -66,16 +74,44 @@ def _bracket(ckpt: CheckpointParams) -> Tuple[float, float]:
 # AlgoT — time-optimal period
 # --------------------------------------------------------------------------
 
-def t_opt_time(ckpt: CheckpointParams) -> float:
-    """Paper Eq. (1): T_opt = sqrt(2 (1-omega) C (mu - (D + R + omega C)))."""
+@dataclasses.dataclass(frozen=True)
+class PeriodResult:
+    """A solved period plus provenance: whether the closed form was clamped
+    into the valid bracket (a boundary answer, not a stationary point) and
+    which method produced it."""
+
+    T: float
+    clamped: bool = False
+    method: str = "closed_form"      # "closed_form" | "numeric"
+
+
+def t_opt_time_ex(ckpt: CheckpointParams) -> PeriodResult:
+    """AlgoT with provenance (see :class:`PeriodResult`)."""
     val = 2.0 * ckpt.a * ckpt.b * ckpt.mu
     if val <= 0:
         # omega == 1 (a == 0) or mu too small: the closed form degenerates.
         # Fall back to numeric optimization on the exact objective.
-        return t_opt_time_numeric(ckpt)
+        return PeriodResult(T=t_opt_time_numeric(ckpt), method="numeric")
     t = math.sqrt(val)
     lo, hi = _bracket(ckpt)
-    return float(min(max(t, lo), hi))
+    t_clamped = float(min(max(t, lo), hi))
+    return PeriodResult(T=t_clamped, clamped=t_clamped != t)
+
+
+def t_opt_time(ckpt: CheckpointParams) -> float:
+    """Paper Eq. (1): T_opt = sqrt(2 (1-omega) C (mu - (D + R + omega C))).
+
+    Logs a warning when the closed form lands outside the valid bracket and
+    is clamped to its edge (the answer is then a boundary optimum, not the
+    closed form); use :func:`t_opt_time_ex` to get that flag programmatically.
+    """
+    res = t_opt_time_ex(ckpt)
+    if res.clamped:
+        logger.warning(
+            "t_opt_time: closed form sqrt(2*a*b*mu) fell outside the valid "
+            "period bracket and was clamped to %g (ckpt=%r); treat as a "
+            "boundary answer", res.T, ckpt)
+    return res.T
 
 
 def t_opt_time_numeric(ckpt: CheckpointParams, T_base: float = 1.0) -> float:
@@ -337,6 +373,145 @@ def t_opt_energy_multilevel(ck: MultilevelCheckpointParams,
             f"No valid (T, m): deep checkpoint C2={ck.C2} too large for "
             f"platform MTBF mu={ck.mu} at every m <= {m_max}.")
     return best[1], best[2]
+
+
+# --------------------------------------------------------------------------
+# MC-surrogate solvers for non-exponential failure processes
+# --------------------------------------------------------------------------
+#
+# For Weibull / log-normal / trace failures no closed form exists, so the
+# optimal period is found numerically on a Monte-Carlo *surrogate*: one set
+# of pre-sampled failure schedules (common random numbers) is reused for
+# every candidate T, which makes the objective a deterministic, nearly
+# smooth function of T — differences between candidate periods are then
+# estimated on identical failure realizations, cancelling most of the MC
+# variance.  A coarse grid scan localizes the argmin basin; golden-section
+# on the surrogate polishes it.
+
+
+class MCSurrogate:
+    """CRN Monte-Carlo objective E[T_final] / E[E_final] as a function of T.
+
+    Built once per (ckpt, power, process); every evaluation replays the
+    same pre-sampled failure schedules through the batched engine
+    (``repro.sim.engine.simulate_trajectories``), so calls are deterministic
+    and comparable across T (common random numbers).
+    """
+
+    def __init__(self, ckpt: CheckpointParams, power: PowerParams,
+                 process: Optional[FailureProcess] = None,
+                 T_base: Optional[float] = None, n_trials: int = 160,
+                 seed: int = 0):
+        from ..sim import engine as _engine
+        from ..sim.scenarios import ParamGrid
+        self.ckpt, self.power = ckpt, power
+        self.process = as_process(process)
+        lo, hi = _bracket(ckpt)
+        t_ref = t_opt_time_ex(ckpt).T
+        # Search range: generous decades around the exponential optimum, but
+        # clear of the bracket edges where E[T_final] diverges and the event
+        # budget with it.
+        self.lo = max(lo * 1.02, t_ref / 10.0)
+        self.hi = min(hi * 0.9, t_ref * 10.0)
+        if T_base is None:
+            # Long enough to amortize many periods and failures per
+            # trajectory; short enough to keep the scan budget sane.
+            T_base = max(30.0 * t_ref, 10.0 * ckpt.mu)
+        self.T_base = float(T_base)
+        self.n_trials = int(n_trials)
+
+        self._grid1 = ParamGrid.from_params(ckpt, power)
+        flat1 = self._grid1.reshape((1,))
+        probes = np.linspace(self.lo, self.hi, 9)
+        cap = _engine.default_fail_capacity(probes, flat1.ravel(),
+                                           self.T_base, process=self.process)
+        self._n_steps = _engine.default_step_budget(
+            probes, flat1.ravel(), self.T_base, process=self.process)
+        self._gaps = _engine.presample_gaps(flat1, self.n_trials, cap,
+                                            seed=seed, process=self.process)
+        self._engine = _engine
+        self._ParamGrid = ParamGrid
+        self._first_evals: dict = {}   # initial argmin grid, shared by keys
+
+    def __call__(self, Ts) -> dict:
+        """Mean wall time / energy (+ standard errors) at each candidate T.
+
+        All candidates share the pre-sampled schedules (CRN), evaluated in
+        one jitted batched call.
+        """
+        Ts = np.atleast_1d(np.asarray(Ts, dtype=np.float64))
+        M = Ts.size
+        rep = self._ParamGrid(**{f: np.broadcast_to(v, (M,))
+                                 for f, v in self._grid1.fields().items()})
+        gaps = np.broadcast_to(self._gaps, (M,) + self._gaps.shape[1:])
+        tb = self._engine.simulate_trajectories(
+            Ts, rep, self.T_base, gaps=gaps, n_steps=self._n_steps)
+        if tb.truncated.any():
+            raise RuntimeError("MC surrogate: scan budget exceeded — "
+                               "candidate period too close to the bracket "
+                               "edge for this failure process")
+        if tb.gaps_exhausted.any():
+            raise RuntimeError("MC surrogate: failure schedule exhausted — "
+                               "increase the pre-sample capacity")
+        n = tb.wall_time.shape[-1]
+        se = lambda a: a.std(axis=-1, ddof=1) / math.sqrt(n)
+        return {"time": tb.wall_time.mean(axis=-1),
+                "energy": tb.energy.mean(axis=-1),
+                "time_se": se(tb.wall_time), "energy_se": se(tb.energy)}
+
+    def argmin(self, key: str, rounds: int = 3, pts: int = 17) -> float:
+        """Coarse-to-fine grid localization + golden-section polish of the
+        surrogate argmin for ``key`` in {"time", "energy"}."""
+        lo, hi = self.lo, self.hi
+        xs = np.geomspace(lo, hi, pts)
+        for rnd in range(rounds):
+            if rnd == 0:
+                # The first (geomspace) grid is identical for the "time"
+                # and "energy" argmins — evaluate it once per surrogate.
+                if pts not in self._first_evals:
+                    self._first_evals[pts] = self(xs)
+                ys = self._first_evals[pts][key]
+            else:
+                ys = self(xs)[key]
+            i = int(np.argmin(ys))
+            lo, hi = xs[max(i - 1, 0)], xs[min(i + 1, pts - 1)]
+            xs = np.linspace(lo, hi, pts)
+        return golden_section(lambda t: float(self([t])[key][0]), lo, hi,
+                              tol=1e-6, max_iter=40)
+
+
+def t_opt_time_mc(ckpt: CheckpointParams,
+                  process: Optional[FailureProcess] = None,
+                  power: Optional[PowerParams] = None,
+                  T_base: Optional[float] = None, n_trials: int = 160,
+                  seed: int = 0) -> float:
+    """Time-optimal period under an arbitrary failure process (MC surrogate).
+
+    With the default exponential process this converges to AlgoT's closed
+    form (within MC resolution) — the cross-check the tests pin.
+    """
+    power = power or PowerParams(P_static=1.0, P_cal=0.0, P_io=0.0)
+    return MCSurrogate(ckpt, power, process, T_base, n_trials,
+                       seed).argmin("time")
+
+
+def t_opt_energy_mc(ckpt: CheckpointParams, power: PowerParams,
+                    process: Optional[FailureProcess] = None,
+                    T_base: Optional[float] = None, n_trials: int = 160,
+                    seed: int = 0) -> float:
+    """Energy-optimal period under an arbitrary failure process."""
+    return MCSurrogate(ckpt, power, process, T_base, n_trials,
+                       seed).argmin("energy")
+
+
+def mc_evaluate_periods(Ts: Sequence[float], ckpt: CheckpointParams,
+                        power: PowerParams,
+                        process: Optional[FailureProcess] = None,
+                        T_base: Optional[float] = None, n_trials: int = 160,
+                        seed: int = 0) -> dict:
+    """Mean wall time / energy at each candidate period under ``process``
+    (one CRN schedule set shared by all candidates — fair comparisons)."""
+    return MCSurrogate(ckpt, power, process, T_base, n_trials, seed)(Ts)
 
 
 # --------------------------------------------------------------------------

@@ -1,25 +1,45 @@
 """Discrete-event Monte-Carlo simulator of periodic non-blocking checkpointing.
 
 Validates the paper's closed-form expectations (``model.time_final`` /
-``model.energy_final``) by direct simulation: failures are a Poisson process
-with rate 1/mu over wall-clock time; execution alternates compute phases
-(length T - C, work rate 1) and checkpoint phases (length C, work rate omega,
-I/O active).  A checkpoint *commits* the state as of the beginning of its
-phase — the paper's semantics: the omega*C work done concurrently with a
+``model.energy_final``) by direct simulation: execution alternates compute
+phases (length T - C, work rate 1) and checkpoint phases (length C, work rate
+omega, I/O active).  A checkpoint *commits* the state as of the beginning of
+its phase — the paper's semantics: the omega*C work done concurrently with a
 checkpoint is only protected by the NEXT completed checkpoint.
 
 Failure handling: downtime D (no progress), recovery R (I/O active), rollback
-to the last committed state.  Failures can also strike during D and R
-(second-order effect the first-order model ignores — tests use D + R << mu).
+to the last committed state.
+
+Failure schedule: the simulator maintains ``next_fail`` as an *absolute*
+wall-clock time, fed from a schedule of inter-failure gaps under the renewal
+convention shared with the batched engine (``repro.core.failures``): gap i
+runs from the end of recovery i-1 (or t = 0) to failure i.  The schedule
+comes from one of
+
+  * ``gaps=...`` — a pre-sampled gap array (the batched engine's format;
+    bit-identical trajectories for *every* distribution when both consume
+    the same array),
+  * ``process=...`` — any :class:`repro.core.failures.FailureProcess`,
+    sampled lazily from ``rng`` (the default ``Exponential`` reproduces the
+    legacy ``rng.exponential(mu)`` stream bit-for-bit),
+  * a replaying ``rng`` such as :class:`repro.sim.engine.ScheduledRNG`
+    (kept for backward compatibility).
+
+A schedule that runs dry before the trajectory completes would silently
+simulate the tail failure-free (biased); the simulator raises instead,
+mirroring the batched engine's ``gaps_exhausted`` error.  Likewise the event
+budget: exceeding ``max_events`` raises rather than returning a partial
+trajectory.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
+from .failures import FailureProcess, as_process
 from .params import CheckpointParams, PowerParams
 
 
@@ -34,9 +54,65 @@ class SimResult:
     n_checkpoints: int
 
 
+class _GapSource:
+    """Uniform draw interface over the three schedule flavours above."""
+
+    def __init__(self, rng, mu: float, process: Optional[FailureProcess],
+                 gaps: Optional[Sequence] = None):
+        self.exhausted = False
+        if gaps is not None:
+            self._gaps = np.asarray(gaps, dtype=np.float64).ravel()
+            self._i = 0
+            self._draw = self._from_array
+        elif getattr(rng, "replays_schedule", False):
+            # ScheduledRNG and friends: the schedule is already materialized
+            # in the rng; `scale` is ignored by contract (gaps replay
+            # verbatim), and exhaustion is reported via rng.exhausted.
+            self._rng = rng
+            self._mu = mu
+            self._draw = self._from_replaying_rng
+        else:
+            # iter_gaps keeps sequential semantics per process (cyclic for
+            # TraceReplay, lazy i.i.d. draws otherwise — one legacy-
+            # identical rng call per gap for the exponential default).
+            self._iter = as_process(process).iter_gaps(rng, mean=mu)
+            self._draw = self._from_process
+
+    def _from_array(self) -> float:
+        if self._i >= self._gaps.size:
+            self.exhausted = True
+            return math.inf
+        g = float(self._gaps[self._i])
+        self._i += 1
+        return g
+
+    def _from_replaying_rng(self) -> float:
+        g = float(self._rng.exponential(self._mu))
+        if getattr(self._rng, "exhausted", False):
+            self.exhausted = True
+        return g
+
+    def _from_process(self) -> float:
+        return next(self._iter)
+
+    def __call__(self) -> float:
+        return self._draw()
+
+
 def simulate_once(T: float, ckpt: CheckpointParams, power: PowerParams,
-                  T_base: float, rng: np.random.Generator) -> SimResult:
-    """One trajectory of the checkpointed execution."""
+                  T_base: float, rng: np.random.Generator,
+                  process: Optional[FailureProcess] = None,
+                  gaps: Optional[Sequence] = None,
+                  max_events: Optional[int] = None) -> SimResult:
+    """One trajectory of the checkpointed execution.
+
+    ``process`` selects the inter-failure distribution (None = the paper's
+    exponential, sampled from ``rng`` exactly as the legacy code did);
+    ``gaps`` overrides it with a pre-sampled schedule (the parity path).
+    Raises ``RuntimeError`` when the event budget or a finite failure
+    schedule is exhausted before ``T_base`` work completes — a partial or
+    failure-free-tail trajectory is never silently returned as complete.
+    """
     C, R, D, mu, omega = ckpt.C, ckpt.R, ckpt.D, ckpt.mu, ckpt.omega
     if T <= (1.0 - omega) * C:
         raise ValueError("period too short: no work progress per period")
@@ -50,15 +126,17 @@ def simulate_once(T: float, ckpt: CheckpointParams, power: PowerParams,
     n_fail = 0
     n_ckpt = 0
 
-    next_fail = rng.exponential(mu)
+    draw_gap = _GapSource(rng, mu, process, gaps)
+    next_fail = draw_gap()          # absolute: first renewal starts at t=0
 
     # Phase machine: 'compute' (duration T - C) or 'checkpoint' (duration C).
     phase = "compute"
     phase_left = T - C
     ckpt_snapshot = 0.0    # work value being written by the in-flight ckpt
 
-    max_events = int(50 * (T_base / max(T - (1 - omega) * C, 1e-9)
-                           + T_base / mu + 100))
+    if max_events is None:
+        max_events = int(50 * (T_base / max(T - (1 - omega) * C, 1e-9)
+                               + T_base / mu + 100))
     for _ in range(max_events):
         if live >= T_base - 1e-12:
             break
@@ -96,8 +174,10 @@ def simulate_once(T: float, ckpt: CheckpointParams, power: PowerParams,
             if phase == "checkpoint":
                 io_time += dt            # partially-written ckpt I/O is wasted
             n_fail += 1
-            # Downtime (failures during D/R just restart the D+R sequence —
-            # approximated by re-sampling; keeps the process memoryless).
+            # Downtime + recovery; the failure clock renews at recovery end
+            # (no failures strike during D/R — the convention both engines
+            # share, exact for memoryless processes and the documented
+            # schedule semantics for all others).
             wall += D
             down_time += D
             wall += R
@@ -105,9 +185,18 @@ def simulate_once(T: float, ckpt: CheckpointParams, power: PowerParams,
             live = committed
             phase = "compute"
             phase_left = T - C
-            next_fail = wall + rng.exponential(mu)
+            next_fail = wall + draw_gap()
     else:
-        raise RuntimeError("simulator exceeded event budget (check params)")
+        raise RuntimeError(
+            f"simulator exceeded its event budget ({max_events} events) "
+            f"before completing T_base={T_base} work — partial trajectories "
+            f"are not returned (check params, or raise max_events)")
+
+    if draw_gap.exhausted:
+        raise RuntimeError(
+            "failure schedule exhausted before the trajectory completed "
+            "(tail would be simulated failure-free); provide a longer gaps "
+            "schedule — mirrors the batched engine's gaps_exhausted error")
 
     energy = (power.P_static * wall + power.P_cal * work_exec
               + power.P_io * io_time + power.P_down * down_time)
@@ -118,13 +207,14 @@ def simulate_once(T: float, ckpt: CheckpointParams, power: PowerParams,
 
 def simulate(T: float, ckpt: CheckpointParams, power: PowerParams,
              T_base: float, n_trials: int = 200,
-             seed: int = 0) -> dict:
+             seed: int = 0,
+             process: Optional[FailureProcess] = None) -> dict:
     """Monte-Carlo estimate (mean over trials) with standard errors."""
     rng = np.random.default_rng(seed)
     walls, energies, fails = [], [], []
     cals, ios, downs = [], [], []
     for _ in range(n_trials):
-        r = simulate_once(T, ckpt, power, T_base, rng)
+        r = simulate_once(T, ckpt, power, T_base, rng, process=process)
         walls.append(r.wall_time)
         energies.append(r.energy)
         fails.append(r.n_failures)

@@ -164,6 +164,86 @@ def sweep_buddy_ratio(ratios: Sequence[float], qs: Sequence[float],
 
 
 # ----------------------------------------------------------------------
+# Robustness: what does assuming exponential failures cost?
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RobustnessPoint:
+    """Time/energy penalty of exponential-assumption periods under a
+    non-exponential failure process.
+
+    The ``T_exp_*`` periods come from the paper's closed forms (which assume
+    memoryless failures); ``T_mc_*`` are the true optima under ``process``
+    (MC surrogate).  Penalties are ratios >= ~1: the factor by which wall
+    time / energy exceeds the process-optimal value when the wrong period
+    is used — all evaluated under common random numbers, so small
+    differences are meaningful.
+    """
+
+    ckpt: CheckpointParams
+    power: PowerParams
+    process: object                  # FailureProcess
+    T_exp_time: float                # AlgoT closed form (exponential model)
+    T_exp_energy: float              # AlgoE quadratic root
+    T_young: float
+    T_daly: float
+    T_mc_time: float                 # process-optimal (MC surrogate)
+    T_mc_energy: float
+    time_penalty_exp: float          # wall(T_exp_time) / wall(T_mc_time)
+    energy_penalty_exp: float        # E(T_exp_energy) / E(T_mc_energy)
+    time_penalty_young: float
+    time_penalty_daly: float
+    energy_penalty_young: float
+    energy_penalty_daly: float
+
+    @property
+    def time_left_on_table(self) -> float:
+        """Fractional extra wall time from trusting the exponential T*."""
+        return self.time_penalty_exp - 1.0
+
+    @property
+    def energy_left_on_table(self) -> float:
+        return self.energy_penalty_exp - 1.0
+
+
+def evaluate_robustness(ckpt: CheckpointParams, power: PowerParams,
+                        process=None, T_base: float | None = None,
+                        n_trials: int = 160, seed: int = 0,
+                        ) -> RobustnessPoint:
+    """Scalar reference evaluation of one (platform, process) point.
+
+    Builds one CRN MC surrogate (``optimal.MCSurrogate``), solves the
+    process-optimal periods on it, and evaluates every candidate period on
+    the *same* pre-sampled failure schedules.
+    """
+    from .failures import as_process
+    process = as_process(process)
+    sur = optimal.MCSurrogate(ckpt, power, process, T_base=T_base,
+                              n_trials=n_trials, seed=seed)
+    T_mc_t = sur.argmin("time")
+    T_mc_e = sur.argmin("energy")
+    Tt = optimal.t_opt_time(ckpt)
+    Te = optimal.t_opt_energy(ckpt, power)
+    Ty = optimal.t_young(ckpt)
+    Td = optimal.t_daly(ckpt)
+    # Baselines may leave the surrogate's safe search range on extreme
+    # platforms; clip so the evaluation stays within the sampled budget.
+    cands = np.clip([T_mc_t, T_mc_e, Tt, Te, Ty, Td], sur.lo, sur.hi)
+    vals = sur(cands)
+    wall, energy = vals["time"], vals["energy"]
+    return RobustnessPoint(
+        ckpt=ckpt, power=power, process=process,
+        T_exp_time=Tt, T_exp_energy=Te, T_young=Ty, T_daly=Td,
+        T_mc_time=T_mc_t, T_mc_energy=T_mc_e,
+        time_penalty_exp=float(wall[2] / wall[0]),
+        energy_penalty_exp=float(energy[3] / energy[1]),
+        time_penalty_young=float(wall[4] / wall[0]),
+        time_penalty_daly=float(wall[5] / wall[0]),
+        energy_penalty_young=float(energy[4] / energy[1]),
+        energy_penalty_daly=float(energy[5] / energy[1]))
+
+
+# ----------------------------------------------------------------------
 # Figure 1: ratios as a function of rho, for several mu
 # ----------------------------------------------------------------------
 

@@ -1,11 +1,19 @@
-"""Failure injection: a Poisson process over wall-clock time with platform
-MTBF mu = mu_ind / N (paper §2.1), plus downtime/recovery duration models."""
+"""Failure injection for the fault-tolerant trainer: schedules failures over
+wall-clock time with platform MTBF mu = mu_ind / N (paper §2.1), plus
+downtime/recovery duration models.
+
+The inter-failure distribution is pluggable (``FailureModel.process``, any
+:class:`repro.core.failures.FailureProcess`); the default remains the
+paper's exponential and reproduces the legacy sampling stream bit-for-bit.
+"""
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
 import numpy as np
+
+from ..core.failures import FailureProcess, as_process
 
 
 @dataclasses.dataclass
@@ -14,6 +22,8 @@ class FailureModel:
     downtime_s: float = 2.0     # D: reboot / spare swap-in
     recovery_extra_s: float = 0.0  # added to the measured restore time (R)
     seed: int = 0
+    #: inter-failure distribution; None = exponential (legacy behavior).
+    process: Optional[FailureProcess] = None
 
     @classmethod
     def from_platform(cls, *, n_nodes: int, mu_ind_s: float, **kw):
@@ -21,16 +31,33 @@ class FailureModel:
 
 
 class FailureInjector:
-    """Schedules exponential failure times; the trainer polls ``check``."""
+    """Schedules failure times from the model's process; the trainer polls
+    ``check``.
+
+    Scheduling semantics: with the default exponential process the next
+    failure is drawn from the *poll* time (`now`), as the legacy code did —
+    distributionally exact for a memoryless process.  For any other process
+    the renewal clock must not drift with polling latency, so the next
+    failure is scheduled from the previous failure's actual time instead
+    (an absolute-time schedule).
+    """
 
     def __init__(self, model: FailureModel, start_time: float = 0.0):
         self.model = model
         self.rng = np.random.default_rng(model.seed)
         self.enabled = model.mu_s > 0 and np.isfinite(model.mu_s)
-        self._next = (start_time + self.rng.exponential(model.mu_s)
-                      if self.enabled else np.inf)
+        self._exponential = model.process is None
+        self._gap_iter = None if self._exponential else \
+            as_process(model.process).iter_gaps(self.rng,
+                                                mean=model.mu_s)
+        self._next = (start_time + self._draw() if self.enabled else np.inf)
         self.n_failures = 0
         self.failure_times: list = []
+
+    def _draw(self) -> float:
+        if self._exponential:
+            return self.rng.exponential(self.model.mu_s)
+        return next(self._gap_iter)
 
     @property
     def next_failure_time(self) -> float:
@@ -42,7 +69,8 @@ class FailureInjector:
             return False
         self.n_failures += 1
         self.failure_times.append(self._next)
-        self._next = now + self.rng.exponential(self.model.mu_s)
+        origin = now if self._exponential else self._next
+        self._next = origin + self._draw()
         return True
 
     def mtbf_estimate(self) -> Optional[float]:

@@ -17,13 +17,16 @@ from .scenarios import (ParamGrid, Scenario, MultilevelParamGrid,
                         register_scenario, mu_rho_grid, nodes_grid,
                         product_grid, arch_grid, grid_from_scenarios,
                         multilevel_grid_from_scenarios, buddy_ratio_grid,
-                        multilevel_arch_grid)
+                        multilevel_arch_grid, robustness_grid)
 from .engine import (TrajectoryBatch, MultilevelTrajectoryBatch,
                      ScheduledRNG, simulate_trajectories, simulate_grid,
                      simulate_trajectories_ml, simulate_grid_ml,
                      presample_gaps, presample_failures)
-from .sweep import (GridResult, MultilevelGridResult, evaluate_grid,
-                    evaluate_multilevel_grid, golden_section_batched,
+from .sweep import (GridResult, MultilevelGridResult, RobustnessResult,
+                    evaluate_grid, evaluate_multilevel_grid,
+                    evaluate_robustness_grid, evaluate_periods_grid,
+                    sweep_weibull_shapes,
+                    golden_section_batched,
                     t_opt_time_batched, t_opt_energy_batched,
                     t_young_batched, t_daly_batched, t_msk_energy_batched,
                     time_final_batched, energy_final_batched,

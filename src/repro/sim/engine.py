@@ -63,15 +63,28 @@ class ScheduledRNG:
 
     ``simulate_once(..., rng=ScheduledRNG(gaps))`` consumes exactly the
     pre-sampled inter-failure gaps the batched engine was given, enabling
-    trajectory-for-trajectory parity checks.
+    trajectory-for-trajectory parity checks — for *any* distribution the
+    gaps were drawn from, since the schedule replays verbatim.
+
+    Contract: the ``scale`` argument of :meth:`exponential` is deliberately
+    **ignored** — the replayed gaps are already in wall-clock units (they
+    were pre-scaled when sampled), and re-scaling them here would silently
+    double-apply mu.  On exhaustion the draw is ``inf`` ("no more
+    failures") and :attr:`exhausted` is set; the scalar simulator raises on
+    that flag, mirroring the batched engine's ``gaps_exhausted`` error.
     """
+
+    #: marks this rng as a schedule replay for ``core.simulator`` dispatch.
+    replays_schedule = True
 
     def __init__(self, gaps):
         self._gaps = [float(g) for g in np.asarray(gaps).ravel()]
         self._i = 0
+        self.exhausted = False
 
     def exponential(self, scale: float = 1.0) -> float:
         if self._i >= len(self._gaps):
+            self.exhausted = True
             return math.inf          # schedule exhausted: no more failures
         g = self._gaps[self._i]
         self._i += 1
@@ -226,32 +239,58 @@ def _expected_failures(T, grid: ParamGrid, T_base) -> np.ndarray:
     return tf / grid.mu
 
 
-def default_fail_capacity(T, grid: ParamGrid, T_base) -> int:
-    """Pre-sampled gaps per trajectory: mean + 10 sigma (Poisson) margin."""
-    nf = _expected_failures(T, grid, T_base)
-    return int(np.max(np.ceil(nf + 10.0 * np.sqrt(nf + 1.0) + 10.0)))
+def _process_cv(process) -> float:
+    """Worst-case gap coefficient of variation of a failure process (1.0
+    for exponential / None) — scales the schedule-size safety margins."""
+    if process is None:
+        return 1.0
+    return float(np.max(np.asarray(process.gap_cv(), dtype=np.float64)))
 
 
-def default_step_budget(T, grid: ParamGrid, T_base) -> int:
+def default_fail_capacity(T, grid: ParamGrid, T_base,
+                          process=None) -> int:
+    """Pre-sampled gaps per trajectory: mean + 10 sigma margin.
+
+    For non-exponential processes both the expected count (clustered short
+    gaps inflate rollbacks, hence wall time) and the count fluctuation
+    (renewal CLT: var ~ nf * cv^2) scale with the gap CV.
+    """
+    cv = max(1.0, _process_cv(process))
+    nf = _expected_failures(T, grid, T_base) * cv * cv
+    return int(np.max(np.ceil(nf + 10.0 * cv * np.sqrt(nf + 1.0) + 10.0)))
+
+
+def default_step_budget(T, grid: ParamGrid, T_base, process=None) -> int:
     """Scan length: expected events with a 2x + fluctuation margin."""
+    cv = max(1.0, _process_cv(process))
     work_per_period = np.maximum(T - grid.a, 1e-9)
     periods = T_base / work_per_period
-    nf = _expected_failures(T, grid, T_base)
+    nf = _expected_failures(T, grid, T_base) * cv * cv
     # Each failure costs one event plus re-execution of at most one period
     # of work (2 phase events per period, +2 for the partial segments).
     per_fail = 2.0 * np.maximum(T / work_per_period, 1.0) + 4.0
     events = 2.0 * periods + 2.0 + nf * per_fail
-    margin = 10.0 * np.sqrt(nf + 1.0) * per_fail
+    margin = 10.0 * cv * np.sqrt(nf + 1.0) * per_fail
     return int(np.max(np.ceil(2.0 * events + margin + 64.0)))
 
 
 def presample_gaps(grid: ParamGrid, n_trials: int, capacity: int,
-                   seed: int = 0) -> np.ndarray:
-    """Exponential(mu) inter-failure gaps, shape ``(B, n_trials, capacity)``."""
+                   seed: int = 0, process=None) -> np.ndarray:
+    """Inter-failure gaps, shape ``(B, n_trials, capacity)``.
+
+    ``process`` selects the distribution (None = exponential; an
+    ``Exponential()`` instance reproduces the None path bit-for-bit).  The
+    process's own mean, if unset, is the grid's per-point mu; array-valued
+    shape parameters broadcast over the raveled grid (``process.ravel()``
+    is applied to match ``grid.ravel()``).
+    """
     rng = np.random.default_rng(seed)
     mu = grid.ravel().mu[:, None, None]
-    return rng.exponential(scale=mu,
-                           size=(grid.size, n_trials, capacity))
+    size = (grid.size, n_trials, capacity)
+    if process is None:
+        return rng.exponential(scale=mu, size=size)
+    return np.asarray(process.ravel().sample(rng, size=size, mean=mu),
+                      dtype=np.float64)
 
 
 # ---------------------------------------------------------------------------
@@ -261,12 +300,16 @@ def presample_gaps(grid: ParamGrid, n_trials: int, capacity: int,
 def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
                           n_trials: int = 200, seed: int = 0,
                           gaps: Optional[np.ndarray] = None,
-                          n_steps: Optional[int] = None) -> TrajectoryBatch:
+                          n_steps: Optional[int] = None,
+                          process=None) -> TrajectoryBatch:
     """Simulate every (grid point x trial) trajectory in one jitted call.
 
     ``T`` broadcasts against ``grid.shape``.  ``gaps`` (grid.size, n_trials,
     F) overrides the pre-sampled failure schedule — pass the same schedule to
     the scalar oracle via :class:`ScheduledRNG` for parity checks.
+    ``process`` (a :class:`repro.core.failures.FailureProcess`) selects the
+    inter-failure distribution when the schedule is auto-sampled; the scan
+    itself is distribution-agnostic (it only consumes gaps).
     """
     flat = grid.ravel()
     T_arr = np.broadcast_to(np.asarray(T, dtype=np.float64),
@@ -277,8 +320,9 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
         raise ValueError("period too short: no work progress per period")
 
     if gaps is None:
-        cap = default_fail_capacity(T_arr, flat, Tb_arr)
-        gaps = presample_gaps(flat, n_trials, cap, seed=seed)
+        cap = default_fail_capacity(T_arr, flat, Tb_arr, process=process)
+        gaps = presample_gaps(flat, n_trials, cap, seed=seed,
+                              process=process)
     else:
         gaps = np.asarray(gaps, dtype=np.float64)
         if gaps.ndim == 1:
@@ -289,7 +333,7 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
         gaps = np.broadcast_to(gaps, want)
         n_trials = gaps.shape[-2]
     if n_steps is None:
-        n_steps = default_step_budget(T_arr, flat, Tb_arr)
+        n_steps = default_step_budget(T_arr, flat, Tb_arr, process=process)
     # Round the (static) scan length up to a power of two: extra steps are
     # no-ops, and bucketing keeps the jit cache at O(log) distinct programs
     # instead of one recompile per distinct parameter set.
@@ -664,14 +708,15 @@ def simulate_grid_ml(T, m, grid: MultilevelParamGrid, T_base: float = 1.0,
 def simulate_grid(T, grid: ParamGrid, T_base: float = 1.0,
                   n_trials: int = 200, seed: int = 0,
                   gaps: Optional[np.ndarray] = None,
-                  n_steps: Optional[int] = None) -> dict:
+                  n_steps: Optional[int] = None,
+                  process=None) -> dict:
     """Batched analogue of ``core.simulator.simulate``: mean/SE summaries.
 
     Returns a dict of arrays of ``grid.shape`` with the same keys as the
     scalar ``simulate`` ("T_final", "T_final_se", "E_final", ...).
     """
     tb = simulate_trajectories(T, grid, T_base, n_trials=n_trials, seed=seed,
-                               gaps=gaps, n_steps=n_steps)
+                               gaps=gaps, n_steps=n_steps, process=process)
     if np.any(tb.truncated):
         raise RuntimeError(
             f"{int(tb.truncated.sum())} trajectories exceeded the scan "

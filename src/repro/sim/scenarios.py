@@ -23,10 +23,12 @@ Registering a new scenario::
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Iterable, Sequence
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.failures import (FailureProcess, Weibull, as_process,
+                             get_process)
 from ..core.params import (CheckpointParams, MultilevelCheckpointParams,
                            MultilevelPowerParams, PowerParams,
                            EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7,
@@ -44,6 +46,8 @@ class Scenario:
     power: PowerParams
     T_base: float = 1.0
     description: str = ""
+    #: inter-failure distribution; None = the paper's exponential process.
+    process: Optional[FailureProcess] = None
 
 
 _REGISTRY: Dict[str, Callable[..., Scenario]] = {}
@@ -125,6 +129,60 @@ def jaguar(n_nodes: int = 45208, C: float = 10.0, R: float = 10.0,
     return Scenario(name=f"jaguar(N={n_nodes})", ckpt=ck,
                     power=EXASCALE_POWER_RHO55,
                     description="Jaguar per-proc MTBF scaled to N units")
+
+
+# -- robustness family: realistic (non-exponential) failure processes --------
+
+@register_scenario("robustness")
+def robustness(base: str = "exascale_rho55", process: str = "weibull",
+               shape: float = 0.7, sigma: float = 1.0,
+               trace=None, **base_kwargs) -> Scenario:
+    """Any registered scenario under a non-exponential failure process.
+
+    ``process`` is one of ``repro.core.failures.PROCESSES``
+    (weibull/lognormal/trace/exponential); the process targets the base
+    scenario's platform MTBF, so results isolate the *shape* of the
+    inter-failure distribution from its mean.
+    """
+    sc = get_scenario(base, **base_kwargs)
+    if process == "weibull":
+        proc: FailureProcess = get_process("weibull", shape=shape)
+        tag = f"weibull(k={shape:g})"
+    elif process == "lognormal":
+        proc = get_process("lognormal", sigma=sigma)
+        tag = f"lognormal(sigma={sigma:g})"
+    elif process == "trace":
+        if trace is None:
+            raise ValueError("process='trace' needs trace=[gaps...]")
+        proc = get_process("trace", gaps=tuple(trace))
+        tag = f"trace(n={len(proc.gaps)})"
+    else:
+        proc = as_process(process)
+        tag = proc.name
+    return Scenario(name=f"robustness[{sc.name}, {tag}]", ckpt=sc.ckpt,
+                    power=sc.power, T_base=sc.T_base, process=proc,
+                    description=f"{sc.description or sc.name} under "
+                                f"{tag} failures")
+
+
+def robustness_grid(shapes: Sequence[float], mu_mins: Sequence[float],
+                    base: str = "exascale_rho55",
+                    ) -> Tuple[ParamGrid, Weibull]:
+    """Weibull-shape x platform-MTBF grid over an exascale scenario family.
+
+    Returns the ``(len(shapes), len(mu_mins))`` :class:`ParamGrid` plus the
+    matching :class:`~repro.core.failures.Weibull` process whose ``shape``
+    array broadcasts over the grid (one k per row) — the pair
+    ``sim.evaluate_robustness_grid`` consumes.
+    """
+    scens = [get_scenario(base, mu_min=float(m)) for m in mu_mins]
+    row = grid_from_scenarios(scens)
+    grid = ParamGrid(**{f: np.broadcast_to(getattr(row, f),
+                                           (len(shapes), len(mu_mins)))
+                        for f in _FIELDS})
+    shape_arr = np.broadcast_to(
+        np.asarray(shapes, dtype=np.float64)[:, None], grid.shape)
+    return grid, Weibull(shape=shape_arr)
 
 
 # -- per-architecture instantiation (production mesh) ------------------------

@@ -1,0 +1,350 @@
+"""Failure-process subsystem: distribution statistics, exponential
+bit-for-bit parity with the legacy paths, cross-distribution scalar/batched
+parity, exhaustion/raise alignment, and the MC-surrogate solvers."""
+import logging
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointParams, PowerParams, EXASCALE_POWER_RHO55,
+                        Exponential, LogNormal, TraceReplay, Weibull,
+                        as_process, get_process, fig12_checkpoint,
+                        simulate_once, t_opt_time)
+from repro.core import optimal
+from repro.core.simulator import simulate
+from repro.sim import (ParamGrid, ScheduledRNG, get_scenario,
+                       simulate_trajectories)
+from repro.sim.engine import (default_fail_capacity, default_step_budget,
+                              presample_gaps)
+
+CK = fig12_checkpoint(300.0)
+PW = EXASCALE_POWER_RHO55
+
+
+# ---------------------------------------------------------------------------
+# Process statistics
+# ---------------------------------------------------------------------------
+
+class TestProcessStatistics:
+    @pytest.mark.parametrize("proc", [
+        Exponential(), Weibull(shape=0.5), Weibull(shape=0.7),
+        Weibull(shape=1.3), LogNormal(sigma=0.8), LogNormal(sigma=1.5),
+    ])
+    def test_sampled_mean_matches_target(self, proc):
+        rng = np.random.default_rng(0)
+        g = proc.sample(rng, size=(100_000,), mean=250.0)
+        # CLT tolerance: 5 sigma of the sample mean.
+        cv = float(np.max(np.asarray(proc.gap_cv())))
+        assert abs(g.mean() - 250.0) < 5.0 * cv * 250.0 / math.sqrt(g.size)
+        assert (g > 0).all()
+
+    @pytest.mark.parametrize("proc", [
+        Weibull(shape=0.5), LogNormal(sigma=1.2), Exponential(),
+    ])
+    def test_empirical_cv_matches_declared(self, proc):
+        rng = np.random.default_rng(1)
+        g = proc.sample(rng, size=(400_000,), mean=1.0)
+        assert g.std() / g.mean() == pytest.approx(
+            float(np.asarray(proc.gap_cv())), rel=0.05)
+
+    def test_weibull_shape_one_is_exponential_distribution(self):
+        """k = 1 Weibull == exponential distributionally (KS-lite check on
+        quantiles), though not stream-for-stream."""
+        rng = np.random.default_rng(2)
+        g = Weibull(shape=1.0).sample(rng, size=(200_000,), mean=100.0)
+        e = Exponential().sample(np.random.default_rng(3), size=(200_000,),
+                                 mean=100.0)
+        for q in (0.1, 0.5, 0.9, 0.99):
+            assert np.quantile(g, q) == pytest.approx(np.quantile(e, q),
+                                                      rel=0.05)
+
+    def test_batched_parameter_grid_sampling(self):
+        """Array-valued shape: one k per grid row, one mu per grid row."""
+        proc = Weibull(shape=np.array([0.5, 1.0, 2.0]))
+        mu = np.array([50.0, 200.0, 800.0])[:, None, None]
+        g = proc.sample(np.random.default_rng(4), size=(3, 2000, 50),
+                        mean=mu)
+        means = g.mean(axis=(1, 2))
+        cvs = g.std(axis=(1, 2)) / means
+        want_cv = proc.gap_cv()
+        for i, m in enumerate([50.0, 200.0, 800.0]):
+            assert means[i] == pytest.approx(m, rel=0.05)
+            assert cvs[i] == pytest.approx(float(want_cv[i]), rel=0.1)
+
+    def test_hazard_shapes(self):
+        t = np.array([10.0, 50.0, 200.0])
+        h_exp = Exponential().hazard(t, mean=100.0)
+        np.testing.assert_allclose(h_exp, 1.0 / 100.0)
+        h_w = Weibull(shape=0.5).hazard(t, mean=100.0)
+        assert (np.diff(h_w) < 0).all()          # infant mortality
+        h_w2 = Weibull(shape=2.0).hazard(t, mean=100.0)
+        assert (np.diff(h_w2) > 0).all()         # wear-out
+        # Weibull k=1 hazard is the exponential constant.
+        np.testing.assert_allclose(Weibull(shape=1.0).hazard(t, mean=100.0),
+                                   1.0 / 100.0, rtol=1e-12)
+
+    def test_trace_replay_cycles_and_rescales(self):
+        tr = TraceReplay(gaps=[1.0, 2.0, 3.0, 6.0])
+        assert tr.mu == pytest.approx(3.0)
+        g = tr.sample(np.random.default_rng(5), size=(4, 9))
+        # every row is a cyclic rotation of the trace
+        base = np.array([1.0, 2.0, 3.0, 6.0])
+        for row in g:
+            starts = [np.allclose(row, np.resize(np.roll(base, -s), 9))
+                      for s in range(4)]
+            assert any(starts)
+        g2 = tr.sample(np.random.default_rng(5), size=(64, 8), mean=30.0)
+        assert g2.mean() == pytest.approx(30.0, rel=0.2)   # rescaled 10x
+        assert TraceReplay(gaps=[5.0, 7.0], rescale=False).sample(
+            np.random.default_rng(0), size=(2, 4), mean=999.0).max() <= 7.0
+
+    def test_trace_replay_scalar_draws_stay_cyclic(self):
+        """Regression: the scalar lazy-draw path must keep the trace's
+        ordering (i.i.d. picks would destroy its autocorrelation)."""
+        tr = TraceReplay(gaps=[1.0, 2.0, 3.0, 6.0])
+        it = tr.iter_gaps(np.random.default_rng(3))
+        seq = [next(it) for _ in range(9)]
+        base = np.array([1.0, 2.0, 3.0, 6.0])
+        assert any(np.allclose(seq, np.resize(np.roll(base, -s), 9))
+                   for s in range(4))
+
+    def test_exponential_iter_gaps_matches_legacy_stream(self):
+        it = Exponential().iter_gaps(np.random.default_rng(21), mean=300.0)
+        legacy = np.random.default_rng(21)
+        for _ in range(6):
+            assert next(it) == legacy.exponential(300.0)
+
+    def test_registry_and_coercion(self):
+        assert isinstance(get_process("weibull", shape=0.6), Weibull)
+        assert isinstance(as_process(None), Exponential)
+        assert isinstance(as_process("lognormal"), LogNormal)
+        with pytest.raises(KeyError):
+            get_process("zipf")
+        with pytest.raises(ValueError):
+            Weibull(shape=0.0)
+        with pytest.raises(ValueError):
+            TraceReplay(gaps=[])
+
+
+# ---------------------------------------------------------------------------
+# Exponential bit-for-bit parity with the legacy paths
+# ---------------------------------------------------------------------------
+
+class TestExponentialBitParity:
+    def test_presample_gaps_identical(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        legacy = presample_gaps(grid, 8, 32, seed=7)
+        via_process = presample_gaps(grid, 8, 32, seed=7,
+                                     process=Exponential())
+        np.testing.assert_array_equal(legacy, via_process)
+
+    def test_simulate_once_identical(self):
+        r1 = simulate_once(60.0, CK, PW, 2000.0, np.random.default_rng(11))
+        r2 = simulate_once(60.0, CK, PW, 2000.0, np.random.default_rng(11),
+                           process=Exponential())
+        assert r1 == r2
+
+    def test_simulate_trajectories_identical(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        a = simulate_trajectories(60.0, grid, T_base=1000.0, n_trials=4,
+                                  seed=3)
+        b = simulate_trajectories(60.0, grid, T_base=1000.0, n_trials=4,
+                                  seed=3, process=Exponential())
+        np.testing.assert_array_equal(a.wall_time, b.wall_time)
+        np.testing.assert_array_equal(a.energy, b.energy)
+        np.testing.assert_array_equal(a.n_failures, b.n_failures)
+
+    def test_budgets_identical_for_exponential(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        T = np.array([60.0])
+        assert default_fail_capacity(T, grid, 2000.0) == \
+            default_fail_capacity(T, grid, 2000.0, process=Exponential())
+        assert default_step_budget(T, grid, 2000.0) == \
+            default_step_budget(T, grid, 2000.0, process=Exponential())
+
+
+# ---------------------------------------------------------------------------
+# Cross-distribution scalar/batched parity (shared schedules)
+# ---------------------------------------------------------------------------
+
+class TestCrossDistributionParity:
+    @pytest.mark.parametrize("proc", [
+        Weibull(shape=0.6), LogNormal(sigma=1.0),
+        TraceReplay(gaps=[40.0, 500.0, 120.0, 90.0, 800.0, 33.0]),
+    ])
+    def test_engine_matches_oracle_under_shared_schedule(self, proc):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        gaps = presample_gaps(grid, 6, 128, seed=9, process=proc)
+        tb = simulate_trajectories(60.0, grid, T_base=3000.0, gaps=gaps)
+        assert not tb.truncated.any()
+        for k in range(gaps.shape[1]):
+            ref = simulate_once(60.0, CK, PW, 3000.0,
+                                np.random.default_rng(0),
+                                gaps=gaps[0, k])
+            assert tb.wall_time[0, k] == pytest.approx(ref.wall_time,
+                                                       rel=1e-12)
+            assert tb.energy[0, k] == pytest.approx(ref.energy, rel=1e-12)
+            assert int(tb.n_failures[0, k]) == ref.n_failures
+            # the legacy ScheduledRNG replay path agrees too
+            ref2 = simulate_once(60.0, CK, PW, 3000.0,
+                                 ScheduledRNG(gaps[0, k]))
+            assert ref2 == ref
+
+    def test_weibull_means_converge_to_renewal_rate(self):
+        """Sanity: realized failure count ~ wall / mu for any renewal
+        process with mean mu (renewal theorem)."""
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        tb = simulate_trajectories(60.0, grid, T_base=4000.0, n_trials=200,
+                                   seed=0, process=Weibull(shape=0.7))
+        assert not tb.truncated.any() and not tb.gaps_exhausted.any()
+        rate = tb.n_failures.mean() / tb.wall_time.mean()
+        assert rate == pytest.approx(1.0 / CK.mu, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# Exhaustion / truncation alignment (bugfix regressions)
+# ---------------------------------------------------------------------------
+
+class TestExhaustionAlignment:
+    def test_simulate_once_raises_on_exhausted_schedule(self):
+        """Regression: a dry schedule used to silently simulate the tail
+        failure-free; now mirrors the batched engine's error."""
+        with pytest.raises(RuntimeError, match="schedule exhausted"):
+            simulate_once(60.0, CK, PW, 4000.0, ScheduledRNG([50.0]))
+
+    def test_simulate_once_raises_on_exhausted_gaps_array(self):
+        with pytest.raises(RuntimeError, match="schedule exhausted"):
+            simulate_once(60.0, CK, PW, 4000.0, np.random.default_rng(0),
+                          gaps=[50.0, 70.0])
+
+    def test_simulate_once_raises_on_event_budget(self):
+        """Regression: exceeding max_events must raise, never return a
+        partial trajectory as if complete."""
+        with pytest.raises(RuntimeError, match="event budget"):
+            simulate_once(60.0, CK, PW, 4000.0, np.random.default_rng(0),
+                          max_events=10)
+
+    def test_ample_schedule_completes(self):
+        r = simulate_once(60.0, CK, PW, 500.0, ScheduledRNG([1e9]))
+        assert r.n_failures == 0
+
+    def test_scheduled_rng_contract(self):
+        """scale is ignored by contract (gaps replay verbatim); exhaustion
+        returns inf once and sets the flag."""
+        r = ScheduledRNG([5.0, 7.0])
+        assert r.exponential(300.0) == 5.0
+        assert r.exponential(1e-9) == 7.0        # scale has no effect
+        assert not r.exhausted
+        assert math.isinf(r.exponential(300.0))
+        assert r.exhausted
+
+
+# ---------------------------------------------------------------------------
+# optimal.py satellites: bracket message + clamp provenance
+# ---------------------------------------------------------------------------
+
+class TestOptimalDiagnostics:
+    def test_bracket_error_reports_actual_lower_bound(self):
+        ck = CheckpointParams(C=10.0, R=10.0, D=1.0, mu=10.0, omega=0.5)
+        with pytest.raises(ValueError, match=r"max\(a="):
+            optimal._bracket(ck)
+
+    def test_t_opt_time_clamp_flagged_and_logged(self, caplog):
+        # omega ~ 1 shrinks a = (1-omega)C, pushing the closed form below
+        # the lower bracket edge lo = C: the result is clamped.
+        ck = CheckpointParams(C=10.0, R=10.0, D=1.0, mu=300.0, omega=0.99)
+        res = optimal.t_opt_time_ex(ck)
+        assert res.clamped and res.method == "closed_form"
+        assert res.T == pytest.approx(optimal._bracket(ck)[0])
+        with caplog.at_level(logging.WARNING, logger="repro.core.optimal"):
+            t = t_opt_time(ck)
+        assert t == res.T
+        assert any("clamped" in r.message for r in caplog.records)
+
+    def test_unclamped_path_has_no_flag(self, caplog):
+        res = optimal.t_opt_time_ex(CK)
+        assert not res.clamped
+        with caplog.at_level(logging.WARNING, logger="repro.core.optimal"):
+            t_opt_time(CK)
+        assert not caplog.records
+
+
+# ---------------------------------------------------------------------------
+# MC-surrogate solvers
+# ---------------------------------------------------------------------------
+
+class TestMCSolvers:
+    def test_exponential_surrogate_recovers_closed_form_objective(self):
+        """Under the exponential process the MC optimum's simulated wall
+        time must match the closed form's within tight MC resolution (the
+        objective is flat near T*, so compare values, not argmins)."""
+        sur = optimal.MCSurrogate(CK, PW, Exponential(), T_base=3000.0,
+                                  n_trials=96, seed=0)
+        t_mc = sur.argmin("time")
+        t_cf = t_opt_time(CK)
+        v = sur([t_mc, t_cf])["time"]
+        assert v[0] <= v[1] * (1.0 + 1e-9)       # surrogate argmin wins CRN
+        assert v[1] / v[0] < 1.02                # ...by far less than 2%
+
+    def test_weibull_optimum_beats_perturbations_crn(self):
+        sur = optimal.MCSurrogate(CK, PW, Weibull(shape=0.7), T_base=3000.0,
+                                  n_trials=96, seed=1)
+        t_mc = sur.argmin("energy")
+        cands = np.clip([t_mc, 0.6 * t_mc, 1.6 * t_mc], sur.lo, sur.hi)
+        e = sur(cands)["energy"]
+        assert e[0] <= e[1] and e[0] <= e[2]
+
+    def test_evaluate_robustness_point(self):
+        from repro.core import evaluate_robustness
+        pt = evaluate_robustness(CK, PW, Weibull(shape=0.7), T_base=2500.0,
+                                 n_trials=64, seed=0)
+        assert pt.T_mc_time > 0 and np.isfinite(pt.time_penalty_exp)
+        # CRN pairing guarantees the process optimum is never beaten on the
+        # surrogate itself.
+        assert pt.time_penalty_exp >= 1.0 - 1e-9
+        assert pt.energy_penalty_exp >= 1.0 - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Robustness scenario family + grid sweep
+# ---------------------------------------------------------------------------
+
+class TestRobustnessSweep:
+    def test_scenario_registry(self):
+        sc = get_scenario("robustness", base="exascale_rho55",
+                          process="weibull", shape=0.5, mu_min=200.0)
+        assert isinstance(sc.process, Weibull)
+        assert sc.ckpt.mu == 200.0
+        assert "weibull" in sc.name
+        sc2 = get_scenario("robustness", process="trace",
+                           trace=[10.0, 20.0])
+        assert isinstance(sc2.process, TraceReplay)
+        with pytest.raises(ValueError):
+            get_scenario("robustness", process="trace")
+
+    def test_small_grid_sweep(self):
+        from repro.sim import sweep_weibull_shapes
+        res = sweep_weibull_shapes([0.7, 1.0], [300.0], n_trials=48,
+                                   seed=0, n_candidates=9, rounds=2)
+        assert res.T_mc_time.shape == (2, 1)
+        # CRN pairing: the MC optimum is optimal on its own schedules.
+        for pen in (res.time_penalty_exp, res.energy_penalty_exp,
+                    res.time_penalty_young, res.time_penalty_daly):
+            assert (pen >= 1.0 - 1e-9).all()
+            assert np.isfinite(pen).all()
+        # the k=1 control row: exponential closed forms near-optimal
+        assert res.time_penalty_exp[1, 0] < 1.05
+        # process means are anchored to the grid's mu, so optima stay in a
+        # sane band around the exponential T*.
+        assert (res.T_mc_time > res.T_exp_time / 6.0).all()
+        assert (res.T_mc_time < res.T_exp_time * 6.0).all()
+        # Independent-seed validation entry (the fig5 gate): the reported
+        # optima stay near-best among the scored periods on fresh
+        # randomness (CRN within the validation run keeps this tight).
+        from repro.sim import evaluate_periods_grid
+        chk = evaluate_periods_grid(res.grid, res.process, res.eval_periods,
+                                    T_base=res.T_base, n_trials=48, seed=5)
+        assert chk["wall"].shape == (6, 2, 1)
+        assert (chk["wall"][0] <= chk["wall"].min(axis=0) * 1.03).all()
+        assert (chk["energy"][1] <= chk["energy"].min(axis=0) * 1.03).all()

@@ -464,3 +464,17 @@ class TestBenchRegressionGate:
         from benchmarks.bench_sweep import check_regression
         assert check_regression(self._payload(12.0),
                                 self._payload(40.0)) == []
+
+    def test_missing_gated_grid_fails_loudly(self):
+        """A grid the committed baseline gates must not vanish silently."""
+        from benchmarks.bench_sweep import check_regression
+        partial = self._payload(12.0)
+        del partial["dense_grid"]
+        bad = check_regression(self._payload(12.0), partial)
+        assert len(bad) == 1 and "missing" in bad[0]
+
+    def test_new_payload_grid_skipped_until_baselined(self):
+        from benchmarks.bench_sweep import check_regression
+        pay = self._payload(12.0)
+        pay["brand_new_bench"] = {"speedup_warm": 0.1}
+        assert check_regression(self._payload(12.0), pay) == []

@@ -12,7 +12,10 @@ from hypothesis import given, settings, strategies as st, assume, HealthCheck
 from repro.core import (CheckpointParams, PowerParams, energy_final,
                         time_final, t_opt_time, t_opt_time_numeric,
                         t_opt_energy, t_opt_energy_numeric,
-                        energy_quadratic_coefficients)
+                        energy_quadratic_coefficients,
+                        Exponential, LogNormal, Weibull,
+                        fig12_checkpoint, simulate_once,
+                        EXASCALE_POWER_RHO55)
 from repro.core.optimal import derived_coefficients
 from repro.kernels import ops, ref
 
@@ -88,6 +91,56 @@ class TestAnalyticalInvariants:
         lo, hi = worse.valid_period_range()
         assume(lo * 1.01 < t < hi * 0.99)
         assert float(time_final(t, worse)) > float(time_final(t, ck))
+
+
+class TestFailureProcessProperties:
+    """Every failure process's sampled gap mean converges to its declared
+    mu, and exponential instances reproduce the legacy paths bit-for-bit."""
+
+    @settings(**SETTINGS)
+    @given(st.sampled_from(["exponential", "weibull", "lognormal"]),
+           st.floats(0.45, 2.5), st.floats(10.0, 1000.0),
+           st.integers(0, 2**31 - 1))
+    def test_sampled_gap_mean_converges_to_mu(self, name, shape, mu, seed):
+        if name == "weibull":
+            proc = Weibull(shape=shape)
+        elif name == "lognormal":
+            proc = LogNormal(sigma=min(shape, 1.3))
+        else:
+            proc = Exponential()
+        n = 50_000
+        g = proc.sample(np.random.default_rng(seed), size=(n,), mean=mu)
+        cv = float(np.max(np.asarray(proc.gap_cv())))
+        # 8 sigma of the sample mean: astronomically unlikely to flake while
+        # still catching any mis-scaled parameterization (which shifts the
+        # mean by O(10%+)).
+        assert abs(float(g.mean()) - mu) < 8.0 * cv * mu / math.sqrt(n)
+        assert (g > 0).all()
+
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 6),
+           st.integers(4, 64))
+    def test_exponential_presample_bit_for_bit(self, seed, n_trials, cap):
+        from repro.sim import ParamGrid
+        from repro.sim.engine import presample_gaps
+        grid = ParamGrid.from_params(fig12_checkpoint(300.0),
+                                     EXASCALE_POWER_RHO55).reshape((1,))
+        legacy = presample_gaps(grid, n_trials, cap, seed=seed)
+        via = presample_gaps(grid, n_trials, cap, seed=seed,
+                             process=Exponential())
+        np.testing.assert_array_equal(legacy, via)
+
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(0, 2**31 - 1), st.floats(40.0, 120.0))
+    def test_exponential_simulate_once_bit_for_bit(self, seed, T):
+        ck = fig12_checkpoint(300.0)
+        r1 = simulate_once(T, ck, EXASCALE_POWER_RHO55, 1500.0,
+                           np.random.default_rng(seed))
+        r2 = simulate_once(T, ck, EXASCALE_POWER_RHO55, 1500.0,
+                           np.random.default_rng(seed),
+                           process=Exponential())
+        assert r1 == r2
 
 
 class TestKernelProperties:
