@@ -1,8 +1,15 @@
-"""Scalar vs batched Figure-2 sweep timing -> BENCH_sweep.json (+ CI gate).
+"""Scalar vs batched sweep/engine timings -> BENCH_sweep.json (+ CI gate).
 
 Times the seed per-point loop (``tradeoff.sweep_mu_rho(engine="scalar")``)
 against the batched ``repro.sim`` grid evaluation on (a) the seed benchmark
-grid and (b) a dense production-resolution grid.
+grid and (b) a dense production-resolution grid; plus the Monte-Carlo
+engine entries: the exponential-vs-Weibull within-engine ratio
+(``weibull_engine``), the event kernel vs the scalar oracle on the same
+Weibull workload (``weibull_event_engine`` — the PR-4 before/after story
+for the committed 0.32x step-kernel entry), and the warm MC-surrogate
+solve step-vs-event (``mc_solver_warm``).  Every run also renders the
+warm/cold timings as ``benchmarks/results/bench_sweep_table.md`` (uploaded
+as a CI artifact).
 
 The canonical artifact is ``BENCH_sweep.json`` at the repo root — the
 committed baseline the CI regression gate compares against.  There is
@@ -70,23 +77,14 @@ def _time_pair(mus, rhos, scalar_repeat, batched_repeat):
             "speedup_warm": scalar_s / batched_s}
 
 
-def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
-    """Batched NON-exponential engine path vs the batched exponential path.
-
-    Runs ``sim.simulate_trajectories`` on the same grid/trials twice — once
-    with auto-sampled exponential schedules, once with Weibull ones (the new
-    sampling path, including its cv-scaled capacity/step budgets) — and
-    reports the within-run ratio.  The ratio is what the CI gate watches
-    (via the shared ``speedup_warm`` key): it is machine-normalized, and it
-    regresses exactly when the non-exponential sampling/budget path bloats
-    relative to the engine's baseline cost.
-    """
+def _weibull_workload(n_points=12, n_trials=128, shape=0.7):
+    """The canonical non-exponential engine workload: a mixed-mu exascale
+    grid (the regime where cv-scaled step budgets used to blow up)."""
     import numpy as np
 
     from repro.core import fig12_checkpoint, EXASCALE_POWER_RHO55
     from repro.core.failures import Weibull
     from repro.sim import ParamGrid
-    from repro.sim.engine import simulate_trajectories
 
     mus = np.linspace(120.0, 600.0, n_points)
     base = ParamGrid.from_params(fig12_checkpoint(300.0),
@@ -94,8 +92,26 @@ def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
     grid = ParamGrid(**{f: (mus if f == "mu"
                             else np.broadcast_to(v, (n_points,)))
                         for f, v in base.fields().items()})
-    T, T_base = 60.0, 1500.0
-    proc = Weibull(shape=shape)
+    return grid, Weibull(shape=shape), 60.0, 1500.0, n_trials
+
+
+def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
+    """Batched NON-exponential engine path vs the batched exponential path.
+
+    Runs ``sim.simulate_trajectories`` (the default event kernel) on the
+    same grid/trials twice — once with auto-sampled exponential schedules,
+    once with Weibull ones — and reports the within-run ratio.  The ratio
+    is what the CI gate watches (via the shared ``speedup_warm`` key): it
+    is machine-normalized, and it regresses exactly when the
+    non-exponential sampling/budget path bloats relative to the engine's
+    baseline cost.  (With the PR-3 step kernel this measured 0.32x — the
+    cv^2-scaled step budget made Weibull ~3x slower than exponential; the
+    event kernel's scan length scales with the failure count instead.)
+    """
+    from repro.sim.engine import simulate_trajectories
+
+    grid, proc, T, T_base, n_trials = _weibull_workload(n_points, n_trials,
+                                                        shape)
 
     def run_exp():
         return simulate_trajectories(T, grid, T_base, n_trials=n_trials,
@@ -122,6 +138,81 @@ def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
             "speedup_warm": exp_warm_s / weibull_warm_s}
 
 
+def _time_weibull_event_engine(n_points=12, n_trials=128, shape=0.7,
+                               repeat=5):
+    """Event engine vs the SCALAR oracle on the Weibull workload.
+
+    This is the PR-4 before/after story: on exactly the 12-point/128-trial
+    workload where the step kernel measured 0.32x against the scalar
+    per-trajectory loop, the event kernel must win outright
+    (``speedup_warm`` = scalar / event-warm; the acceptance floor is 5x).
+    """
+    from repro.core.simulator import simulate
+    from repro.sim.engine import simulate_trajectories
+
+    grid, proc, T, T_base, n_trials = _weibull_workload(n_points, n_trials,
+                                                        shape)
+
+    def run_scalar():
+        for i in range(grid.size):
+            simulate(T, grid.ckpt_at(i), grid.power_at(i), T_base,
+                     n_trials=n_trials, seed=0, process=proc)
+
+    def run_event():
+        return simulate_trajectories(T, grid, T_base, n_trials=n_trials,
+                                     seed=0, process=proc)
+
+    # No cold figure here: _time_weibull_engine already compiled these
+    # exact programs, so a "cold" measurement in this entry would be
+    # warm-started ~30x too fast (weibull_engine.batched_cold_s is the
+    # honest compile cost of the same programs).
+    run_event()
+    event_warm_s = _best_of(run_event, repeat)
+    scalar_s = _best_of(run_scalar, 1)     # the python loop needs no warmup
+    return {"n_points": grid.size, "n_trials": n_trials,
+            "weibull_shape": shape,
+            "scalar_s": scalar_s,
+            "batched_warm_s": event_warm_s,
+            "speedup_warm": scalar_s / event_warm_s}
+
+
+def _time_mc_solver(repeat=3):
+    """Warm MC-surrogate solve: event kernel vs the retained step kernel.
+
+    Both solves share the same CRN schedules and converge to the same
+    period; the within-run step/event ratio is machine-normalized and
+    regresses exactly when the event hot path (candidate-vmap + per-call
+    dispatch) loses ground to the step machine.
+    """
+    from repro.core import fig12_checkpoint, EXASCALE_POWER_RHO55
+    from repro.core.failures import Weibull
+    from repro.core.optimal import MCSurrogate
+
+    ck = fig12_checkpoint(300.0)
+    proc = Weibull(shape=0.7)
+
+    def solve(kind):
+        return MCSurrogate(ck, EXASCALE_POWER_RHO55, proc, T_base=1500.0,
+                           n_trials=96, seed=0,
+                           engine_kind=kind).argmin("time")
+
+    t0 = time.perf_counter()
+    t_event = solve("event")
+    event_cold_s = time.perf_counter() - t0
+    t_step = solve("step")                 # warms the step programs
+    # The two kernels share schedules but not arithmetic; a ~1e-13 tie in
+    # a golden-section branch can wiggle the argmin, so gate at the MC
+    # solvers' own agreement tolerance rather than exact equality.
+    assert abs(t_event - t_step) <= 5e-3 * t_step, (t_event, t_step)
+    event_warm_s = _best_of(lambda: solve("event"), repeat)
+    step_warm_s = _best_of(lambda: solve("step"), repeat)
+    return {"n_trials": 96, "weibull_shape": 0.7,
+            "step_warm_s": step_warm_s,
+            "batched_cold_s": event_cold_s,
+            "batched_warm_s": event_warm_s,
+            "speedup_warm": step_warm_s / event_warm_s}
+
+
 def run(write: bool = True):
     import numpy as np
 
@@ -131,17 +222,49 @@ def run(write: bool = True):
                             list(np.linspace(1.0, 10.0, 100)),
                             scalar_repeat=1, batched_repeat=3)
     weibull_engine = _time_weibull_engine()
+    weibull_event_engine = _time_weibull_event_engine()
+    mc_solver_warm = _time_mc_solver()
     payload = {
         "benchmark": "fig2_mu_rho_sweep",
         "unit": "seconds",
         "fig2_seed_grid": seed_grid,
         "dense_grid": dense_grid,
         "weibull_engine": weibull_engine,
+        "weibull_event_engine": weibull_event_engine,
+        "mc_solver_warm": mc_solver_warm,
     }
     if write:
         with open(CANONICAL, "w") as f:
             json.dump(payload, f, indent=2)
     return payload
+
+
+def write_timing_table(payload: dict, path=None) -> str:
+    """Render the payload as a warm/cold timing table
+    (``benchmarks/results/bench_sweep_table.md``, uploaded as a CI
+    artifact next to the raw JSON)."""
+    from ._util import RESULTS
+    if path is None:
+        path = RESULTS / "bench_sweep_table.md"
+    lines = ["# bench_sweep timings",
+             "",
+             "| grid | cold (s) | warm (s) | reference (s) | speedup_warm |",
+             "|---|---|---|---|---|"]
+    for grid, entry in payload.items():
+        if not (isinstance(entry, dict) and "speedup_warm" in entry):
+            continue
+        ref = next((entry[k] for k in ("scalar_s", "exp_warm_s",
+                                       "step_warm_s") if k in entry),
+                   float("nan"))
+        cold = entry.get("batched_cold_s")
+        lines.append(
+            f"| {grid} | {'—' if cold is None else format(cold, '.4g')} "
+            f"| {entry['batched_warm_s']:.4g} | {ref:.4g} "
+            f"| {entry['speedup_warm']:.2f}x |")
+    text = "\n".join(lines) + "\n"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+    return str(path)
 
 
 def check_regression(baseline: dict, payload: dict,
@@ -160,10 +283,9 @@ def check_regression(baseline: dict, payload: dict,
         return isinstance(entry, dict) and "speedup_warm" in entry
 
     regressions = []
-    # Every grid the committed baseline gates must be present in the
-    # payload — a renamed/dropped bench disables its gate and must fail
-    # loudly, not pass silently.  Payload-only grids are skipped: that is
-    # the transition state of a NEW bench whose baseline lands with it.
+    # The gate set must match in BOTH directions.  A grid the committed
+    # baseline gates must be present in the payload — a renamed/dropped
+    # bench disables its gate and must fail loudly, not pass silently.
     for grid in sorted(baseline):
         if not gated(baseline[grid]):
             continue
@@ -179,6 +301,15 @@ def check_regression(baseline: dict, payload: dict,
             regressions.append(
                 f"{grid}: speedup_warm {now:.1f}x is {base / now:.1f}x "
                 f"below the baseline {base:.1f}x (limit {factor:g}x)")
+    # ...and a gated grid the payload produces must be baselined — an
+    # unbaselined bench is an ungated bench, which silently exempts every
+    # future regression of that path.
+    for grid in sorted(payload):
+        if gated(payload[grid]) and not gated(baseline.get(grid)):
+            regressions.append(
+                f"{grid}: gated entry missing from the committed baseline "
+                f"— regenerate BENCH_sweep.json (standalone bench_sweep "
+                f"run) to baseline the new bench")
     return regressions
 
 
@@ -194,14 +325,20 @@ def main(argv=None):
 
     wrote = not (args.check or args.no_write)
     payload = run(write=wrote)
-    s, d, w = (payload["fig2_seed_grid"], payload["dense_grid"],
-               payload["weibull_engine"])
+    table = write_timing_table(payload)
+    s, d, w, ev, mc = (payload["fig2_seed_grid"], payload["dense_grid"],
+                       payload["weibull_engine"],
+                       payload["weibull_event_engine"],
+                       payload["mc_solver_warm"])
     emit("bench_sweep", s["batched_warm_s"] * 1e6,
          f"fig2 {s['n_points']}pts speedup={s['speedup_warm']:.1f}x; "
          f"dense {d['n_points']}pts speedup={d['speedup_warm']:.1f}x; "
          f"weibull engine {w['n_points']}x{w['n_trials']} "
-         f"exp/weibull={w['speedup_warm']:.2f}x "
-         + ("-> BENCH_sweep.json" if wrote else "(baseline untouched)"))
+         f"exp/weibull={w['speedup_warm']:.2f}x; "
+         f"event vs scalar={ev['speedup_warm']:.1f}x; "
+         f"mc solver step/event={mc['speedup_warm']:.1f}x "
+         + (f"-> BENCH_sweep.json + {table}" if wrote
+            else f"-> {table} (baseline untouched)"))
 
     if args.check:
         baseline = json.loads(CANONICAL.read_text())

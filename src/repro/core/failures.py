@@ -31,6 +31,17 @@ how one process instance serves a whole :class:`~repro.sim.scenarios.ParamGrid`
 of MTBFs.  Shape parameters may be *arrays* broadcasting against the grid's
 leading axes (batched sampling over distribution-parameter grids); use
 :meth:`FailureProcess.ravel` next to ``ParamGrid.ravel``.
+
+Two sampling backends share the same distributions:
+
+  * :meth:`FailureProcess.sample` — host numpy, from an
+    ``np.random.Generator`` (the legacy streams; the CRN solvers pre-sample
+    here so one schedule set can be replayed for every candidate period).
+  * :meth:`FailureProcess.sample_gaps` — jax-native inverse-CDF sampling
+    from a threefry key, device-resident end to end.  The batched engine's
+    default path; erases the host presample tensors and their per-call
+    host->device transfers.  The two backends draw from the same
+    distribution but NOT the same stream (threefry vs PCG64).
 """
 from __future__ import annotations
 
@@ -51,6 +62,28 @@ def _lead(x: ArrayLike, size: tuple) -> np.ndarray:
     parameter instead of the trailing-axis default.
     """
     x = np.asarray(x, dtype=np.float64)
+    if x.ndim == 0 or size is None:
+        return x
+    extra = len(size) - x.ndim
+    if extra < 0:
+        raise ValueError(f"parameter of shape {x.shape} cannot broadcast "
+                         f"against sample size {size}")
+    return x.reshape(x.shape + (1,) * extra)
+
+
+def _param_token(x) -> tuple:
+    """Hashable identity of a (possibly array-valued) parameter — used to
+    key jit caches of the device samplers."""
+    if x is None:
+        return (None,)
+    arr = np.asarray(x, dtype=np.float64)
+    return (arr.shape, arr.tobytes())
+
+
+def _lead_j(x, size: tuple):
+    """jnp counterpart of :func:`_lead` (accepts traced arrays)."""
+    import jax.numpy as jnp
+    x = jnp.asarray(x, dtype=jnp.float64)
     if x.ndim == 0 or size is None:
         return x
     extra = len(size) - x.ndim
@@ -93,9 +126,37 @@ class FailureProcess:
         """Draw inter-failure gaps of the given shape (mean ``mean``)."""
         raise NotImplementedError
 
+    def sample_gaps(self, key, size: tuple,
+                    mean: Optional[ArrayLike] = None):
+        """jax-native gap sampler: draw ``size`` inter-failure gaps on device
+        from threefry ``key`` (inverse-CDF / standard-normal transforms; no
+        host round-trip).  Distribution parameters are baked in as
+        constants; ``mean`` may be a traced array (one mean per grid
+        point, ``_lead``-aligned by the caller or broadcastable).
+
+        Subclasses without a jax sampler inherit this ``NotImplementedError``
+        and the engine falls back to host numpy sampling — new processes
+        work immediately, just without the on-device fast path.
+        """
+        raise NotImplementedError(f"{self.name}: no device sampler")
+
+    def cache_token(self) -> tuple:
+        """Hashable identity of the process (class + parameters) — keys the
+        engine's jit cache of compiled device samplers."""
+        return (type(self).__name__, _param_token(self.mu))
+
     def hazard(self, t: ArrayLike, mean: Optional[ArrayLike] = None):
         """Instantaneous failure rate h(t) at gap-age ``t``."""
         raise NotImplementedError(f"{self.name}: no analytic hazard")
+
+    def _device_mean(self, mean, size):
+        """``resolve_mean`` for the device samplers: keeps traced (jnp)
+        means intact instead of forcing them through numpy."""
+        m = self.mu if self.mu is not None else mean
+        if m is None:
+            raise ValueError(f"{self.name}: no mean gap — construct with "
+                             f"mu=... or pass mean= when sampling")
+        return _lead_j(m, size)
 
     def ravel(self) -> "FailureProcess":
         """Flatten array-valued shape parameters (``ParamGrid.ravel``'s
@@ -137,6 +198,16 @@ class Exponential(FailureProcess):
         return rng.exponential(scale=_lead(self.resolve_mean(mean), size),
                                size=size)
 
+    def sample_gaps(self, key, size, mean=None):
+        import jax
+        import jax.numpy as jnp
+        m = self._device_mean(mean, size)
+        return m * jax.random.exponential(key, size, dtype=jnp.float64)
+
+    def ravel(self) -> "Exponential":
+        return dataclasses.replace(
+            self, mu=None if self.mu is None else np.ravel(self.mu))
+
     def hazard(self, t, mean=None):
         return np.broadcast_to(1.0 / self.resolve_mean(mean),
                                np.shape(t)).astype(np.float64)
@@ -170,6 +241,21 @@ class Weibull(FailureProcess):
     def sample(self, rng, size=None, mean=None):
         lam, k = self._scale(mean, size)
         return lam * rng.weibull(k, size=size)
+
+    def sample_gaps(self, key, size, mean=None):
+        # Inverse CDF through the standard exponential: X = lam * E^(1/k)
+        # with E ~ Exp(1) (so -log U never sees U == 0).
+        import jax
+        import jax.numpy as jnp
+        k = _lead_j(self.shape, size)
+        lam = self._device_mean(mean, size) / _lead_j(
+            _gamma1p(1.0 / np.asarray(self.shape, dtype=np.float64)), size)
+        e = jax.random.exponential(key, size, dtype=jnp.float64)
+        return lam * e ** (1.0 / k)
+
+    def cache_token(self):
+        return (type(self).__name__, _param_token(self.shape),
+                _param_token(self.mu))
 
     def gap_cv(self):
         k = np.asarray(self.shape, dtype=np.float64)
@@ -208,6 +294,18 @@ class LogNormal(FailureProcess):
         s = _lead(self.sigma, size)
         m = np.log(_lead(self.resolve_mean(mean), size)) - 0.5 * s * s
         return rng.lognormal(mean=m, sigma=s, size=size)
+
+    def sample_gaps(self, key, size, mean=None):
+        import jax
+        import jax.numpy as jnp
+        s = _lead_j(self.sigma, size)
+        m = jnp.log(self._device_mean(mean, size)) - 0.5 * s * s
+        z = jax.random.normal(key, size, dtype=jnp.float64)
+        return jnp.exp(m + s * z)
+
+    def cache_token(self):
+        return (type(self).__name__, _param_token(self.sigma),
+                _param_token(self.mu))
 
     def gap_cv(self):
         s = np.asarray(self.sigma, dtype=np.float64)
@@ -279,6 +377,22 @@ class TraceReplay(FailureProcess):
         idx = (start + np.arange(size[-1])) % n
         out = trace[idx] * (_lead(self.resolve_mean(mean), size) / self.mu)
         return np.broadcast_to(out, size).copy()
+
+    def sample_gaps(self, key, size, mean=None):
+        """Device replay: one uniform starting offset per leading index
+        (trajectory), then a cyclic gather — mirrors :meth:`sample`."""
+        import jax
+        import jax.numpy as jnp
+        trace = jnp.asarray(self.gaps, dtype=jnp.float64)
+        n = len(self.gaps)
+        start = jax.random.randint(key, size[:-1] + (1,), 0, n)
+        idx = (start + jnp.arange(size[-1])) % n
+        scale = (_lead_j(mean, size) / self.mu
+                 if (mean is not None and self.rescale) else 1.0)
+        return jnp.broadcast_to(trace[idx] * scale, size)
+
+    def cache_token(self):
+        return (type(self).__name__, self.gaps, self.rescale)
 
     def iter_gaps(self, rng, mean=None):
         """Cyclic replay from one uniformly random starting offset — the

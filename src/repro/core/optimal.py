@@ -401,11 +401,12 @@ class MCSurrogate:
     def __init__(self, ckpt: CheckpointParams, power: PowerParams,
                  process: Optional[FailureProcess] = None,
                  T_base: Optional[float] = None, n_trials: int = 160,
-                 seed: int = 0):
+                 seed: int = 0, engine_kind: str = "event"):
         from ..sim import engine as _engine
         from ..sim.scenarios import ParamGrid
         self.ckpt, self.power = ckpt, power
         self.process = as_process(process)
+        self.engine_kind = engine_kind
         lo, hi = _bracket(ckpt)
         t_ref = t_opt_time_ex(ckpt).T
         # Search range: generous decades around the exponential optimum, but
@@ -420,32 +421,36 @@ class MCSurrogate:
         self.T_base = float(T_base)
         self.n_trials = int(n_trials)
 
-        self._grid1 = ParamGrid.from_params(ckpt, power)
-        flat1 = self._grid1.reshape((1,))
+        self._grid1 = ParamGrid.from_params(ckpt, power).reshape((1,))
         probes = np.linspace(self.lo, self.hi, 9)
-        cap = _engine.default_fail_capacity(probes, flat1.ravel(),
-                                           self.T_base, process=self.process)
-        self._n_steps = _engine.default_step_budget(
-            probes, flat1.ravel(), self.T_base, process=self.process)
-        self._gaps = _engine.presample_gaps(flat1, self.n_trials, cap,
-                                            seed=seed, process=self.process)
+        cap = _engine.default_fail_capacity(probes, self._grid1,
+                                            self.T_base,
+                                            process=self.process)
+        self._n_steps = (None if engine_kind == "event" else
+                         _engine.default_step_budget(
+                             probes, self._grid1, self.T_base,
+                             process=self.process))
+        # Host-sampled once (replayable numpy streams), then parked on
+        # device once — every candidate evaluation reuses the resident
+        # schedule through the candidate-axis vmap, with no per-call
+        # host->device transfer and no (M, B, trials, cap) tiling.
+        gaps = _engine.presample_gaps(self._grid1, self.n_trials, cap,
+                                      seed=seed, process=self.process)
+        with _engine.enable_x64():
+            self._gaps = _engine.jnp.asarray(gaps)
         self._engine = _engine
-        self._ParamGrid = ParamGrid
         self._first_evals: dict = {}   # initial argmin grid, shared by keys
 
     def __call__(self, Ts) -> dict:
         """Mean wall time / energy (+ standard errors) at each candidate T.
 
         All candidates share the pre-sampled schedules (CRN), evaluated in
-        one jitted batched call.
+        one jitted candidate-vmapped call.
         """
         Ts = np.atleast_1d(np.asarray(Ts, dtype=np.float64))
-        M = Ts.size
-        rep = self._ParamGrid(**{f: np.broadcast_to(v, (M,))
-                                 for f, v in self._grid1.fields().items()})
-        gaps = np.broadcast_to(self._gaps, (M,) + self._gaps.shape[1:])
-        tb = self._engine.simulate_trajectories(
-            Ts, rep, self.T_base, gaps=gaps, n_steps=self._n_steps)
+        tb = self._engine.simulate_candidates(
+            Ts, self._grid1, self.T_base, gaps=self._gaps,
+            n_steps=self._n_steps, engine_kind=self.engine_kind)
         if tb.truncated.any():
             raise RuntimeError("MC surrogate: scan budget exceeded — "
                                "candidate period too close to the bracket "
@@ -453,11 +458,12 @@ class MCSurrogate:
         if tb.gaps_exhausted.any():
             raise RuntimeError("MC surrogate: failure schedule exhausted — "
                                "increase the pre-sample capacity")
-        n = tb.wall_time.shape[-1]
+        wall = tb.wall_time[:, 0, :]
+        energy = tb.energy[:, 0, :]
+        n = wall.shape[-1]
         se = lambda a: a.std(axis=-1, ddof=1) / math.sqrt(n)
-        return {"time": tb.wall_time.mean(axis=-1),
-                "energy": tb.energy.mean(axis=-1),
-                "time_se": se(tb.wall_time), "energy_se": se(tb.energy)}
+        return {"time": wall.mean(axis=-1), "energy": energy.mean(axis=-1),
+                "time_se": se(wall), "energy_se": se(energy)}
 
     def argmin(self, key: str, rounds: int = 3, pts: int = 17) -> float:
         """Coarse-to-fine grid localization + golden-section polish of the
@@ -484,34 +490,35 @@ def t_opt_time_mc(ckpt: CheckpointParams,
                   process: Optional[FailureProcess] = None,
                   power: Optional[PowerParams] = None,
                   T_base: Optional[float] = None, n_trials: int = 160,
-                  seed: int = 0) -> float:
+                  seed: int = 0, engine_kind: str = "event") -> float:
     """Time-optimal period under an arbitrary failure process (MC surrogate).
 
     With the default exponential process this converges to AlgoT's closed
     form (within MC resolution) — the cross-check the tests pin.
     """
     power = power or PowerParams(P_static=1.0, P_cal=0.0, P_io=0.0)
-    return MCSurrogate(ckpt, power, process, T_base, n_trials,
-                       seed).argmin("time")
+    return MCSurrogate(ckpt, power, process, T_base, n_trials, seed,
+                       engine_kind=engine_kind).argmin("time")
 
 
 def t_opt_energy_mc(ckpt: CheckpointParams, power: PowerParams,
                     process: Optional[FailureProcess] = None,
                     T_base: Optional[float] = None, n_trials: int = 160,
-                    seed: int = 0) -> float:
+                    seed: int = 0, engine_kind: str = "event") -> float:
     """Energy-optimal period under an arbitrary failure process."""
-    return MCSurrogate(ckpt, power, process, T_base, n_trials,
-                       seed).argmin("energy")
+    return MCSurrogate(ckpt, power, process, T_base, n_trials, seed,
+                       engine_kind=engine_kind).argmin("energy")
 
 
 def mc_evaluate_periods(Ts: Sequence[float], ckpt: CheckpointParams,
                         power: PowerParams,
                         process: Optional[FailureProcess] = None,
                         T_base: Optional[float] = None, n_trials: int = 160,
-                        seed: int = 0) -> dict:
+                        seed: int = 0, engine_kind: str = "event") -> dict:
     """Mean wall time / energy at each candidate period under ``process``
     (one CRN schedule set shared by all candidates — fair comparisons)."""
-    return MCSurrogate(ckpt, power, process, T_base, n_trials, seed)(Ts)
+    return MCSurrogate(ckpt, power, process, T_base, n_trials, seed,
+                       engine_kind=engine_kind)(Ts)
 
 
 # --------------------------------------------------------------------------

@@ -19,9 +19,12 @@ from .scenarios import (ParamGrid, Scenario, MultilevelParamGrid,
                         multilevel_grid_from_scenarios, buddy_ratio_grid,
                         multilevel_arch_grid, robustness_grid)
 from .engine import (TrajectoryBatch, MultilevelTrajectoryBatch,
-                     ScheduledRNG, simulate_trajectories, simulate_grid,
+                     ScheduledRNG, simulate_trajectories,
+                     simulate_candidates, simulate_grid,
                      simulate_trajectories_ml, simulate_grid_ml,
-                     presample_gaps, presample_failures)
+                     presample_gaps, presample_gaps_device,
+                     presample_failures, fail_capacity_points,
+                     step_budget_points)
 from .sweep import (GridResult, MultilevelGridResult, RobustnessResult,
                     evaluate_grid, evaluate_multilevel_grid,
                     evaluate_robustness_grid, evaluate_periods_grid,

@@ -1,11 +1,43 @@
-"""Batched Monte-Carlo trajectory engine (``jax.lax.scan`` phase machine).
+"""Batched Monte-Carlo trajectory engine (``jax.lax.scan`` machines).
 
 The scalar event loop of ``repro.core.simulator.simulate_once`` rewritten as
-a fixed-shape scan so it can be ``vmap``-ed over trials and again over
+fixed-shape scans so they can be ``vmap``-ed over trials and again over
 parameter batches, and jitted in float64 (under the local ``enable_x64``
 context — global JAX dtype state is untouched).
 
-Scan-state layout (one trajectory; all scalars):
+Two interchangeable kernels implement the same trajectory semantics
+(``engine_kind=`` selects; see docs/simulation.md "Engine architecture"):
+
+``event`` (default)
+    One scan iteration per FAILURE.  Between consecutive failures the
+    trajectory is closed-form — completed periods are an integer division
+    of the inter-failure gap against the period, and the committed work,
+    checkpoint I/O and wasted partial segment all follow arithmetically —
+    so the scan length is the failure-schedule capacity (~ E[#failures]
+    x gap-cv^2), not the per-phase event count.  For heavy-tailed
+    (Weibull k < 1 / log-normal) processes this is 30-100x fewer
+    iterations than the step machine, which is what made the PR-3 Weibull
+    path ~3x SLOWER than the scalar oracle (BENCH_sweep.json's 0.32x).
+
+``step``
+    One scan iteration per phase segment or failure, mirroring the scalar
+    loop body branch-for-branch — the original machine, kept as a
+    cross-check and as the bit-level twin of the scalar oracle.
+
+Both kernels consume the same pre-sampled gap schedules and produce
+identical trajectories (exactly identical — not just statistically — when
+every quantity is binary-representable, e.g. the dyadic-schedule parity
+tests; within ~1e-13 relative rounding noise otherwise).  One caveat: a
+gap landing EXACTLY on a period boundary in exact arithmetic (``g`` an
+exact multiple of ``T`` with non-dyadic values — probability zero for
+continuous processes, constructible with synthetic schedules) is a
+genuine tie between "checkpoint committed" and "failure first"; the
+event kernel resolves it by the documented failure-wins-ties rule in
+exact arithmetic, while the step kernel's float-accumulated clock falls
+on whichever side its rounding lands — the two may then differ by one
+period's worth of committed work for that stretch.
+
+Scan-state layout of the STEP kernel (one trajectory; all scalars):
 
     wall        f64  wall-clock time
     committed   f64  work protected by the last COMPLETED checkpoint
@@ -28,10 +60,19 @@ no-ops.  Checkpoint-commit semantics follow the paper: a checkpoint commits
 the state as of the *beginning* of its phase, so the omega*C work done
 concurrently is only protected by the NEXT completed checkpoint.
 
-Failure times are consumed from a per-trajectory array of exponential gaps
-(pre-sampled outside the scan).  Feeding the same gaps to the scalar oracle
-via :class:`ScheduledRNG` reproduces trajectories bit-for-bit — the parity
-tests rely on this.
+Failure times are consumed from a per-trajectory array of gaps.  Feeding
+the same gaps to the scalar oracle via :class:`ScheduledRNG` reproduces
+trajectories bit-for-bit — the parity tests rely on this.
+
+Schedules come from one of two samplers: :func:`presample_gaps` (host
+numpy, the CRN solvers' replayable schedules) or
+:func:`presample_gaps_device` (jax-native threefry sampling via
+``FailureProcess.sample_gaps`` — the default auto-sampling path, which
+never materializes the ``(B, n_trials, capacity)`` tensor on the host nor
+pays a per-call host->device transfer).  Budgets are per-grid-point and
+bucketed to powers of two (:func:`fail_capacity_points` /
+:func:`step_budget_points`): mixed-mu grids are dispatched bucket by
+bucket so cheap points no longer pay the most fragile point's scan length.
 """
 from __future__ import annotations
 
@@ -50,6 +91,7 @@ try:  # newer jax re-exports the x64 context at top level
 except ImportError:
     from jax.experimental import enable_x64
 
+from ..core.failures import as_process
 from .scenarios import MultilevelParamGrid, ParamGrid
 
 COMPUTE, CHECKPOINT = 0, 1
@@ -204,23 +246,173 @@ def _run_one(T, C, R, D, omega, T_base, gaps, n_steps):
             "gaps_exhausted": fail_idx > n_gaps}
 
 
-def _make_runner(n_steps: int):
+def _run_one_event(T, C, R, D, omega, T_base, gaps, n_steps):
+    """One trajectory, one scan iteration per FAILURE (the fast kernel).
+
+    Between consecutive failures the machine is deterministic, so the whole
+    inter-failure stretch collapses to closed form.  With work-per-period
+    ``w = T - (1-omega)C`` and remaining work ``rem``, completion from a
+    segment start (t = 0 at the end of the previous recovery, live ==
+    committed, compute phase) takes
+
+        j    = floor((rem - eps) / w)          full periods, then
+        r    = rem - j*w                       work in the finishing period,
+        t_in = r                 if r <= T-C   (finishes mid-compute)
+               T-C + (r-(T-C))/omega otherwise (mid-checkpoint),
+
+    i.e. ``t_fin = j*T + t_in``.  A failure at gap ``g`` wins iff
+    ``t_fin >= g`` (ties go to the failure, matching the step kernel's
+    strict ``wall + t_next < next_fail``); it lands in period ``k+1`` with
+    ``k = #{i >= 1 : i*T < g}`` completed checkpoints, at in-period offset
+    ``u = g - k*T`` (compute if ``u <= T-C``, else mid-checkpoint), from
+    which the executed work, wasted checkpoint I/O and new committed value
+    follow directly.  Every arithmetic expression mirrors a step-kernel
+    accumulation term-for-term, so the two kernels agree exactly whenever
+    the quantities involved are exactly representable (the dyadic parity
+    tests) and to rounding noise otherwise — except for the
+    exact-period-boundary tie described in the module docstring, where
+    this kernel applies failure-wins-ties in exact arithmetic (``k*T >= g``
+    leaves the boundary checkpoint uncommitted) and the step kernel's
+    accumulated clock resolves the tie by its own rounding.
+
+    The ``eps`` in ``j`` reproduces the step kernel's completion slack
+    (``live >= T_base - eps``): finishing exactly at a checkpoint boundary
+    does NOT count that final checkpoint.
+    """
+    f64 = gaps.dtype
+    n_gaps = gaps.shape[0]
+    Tc = T - C                          # compute-segment length
+    w = T - (1.0 - omega) * C           # work committed per full period
+    omega_safe = jnp.where(omega > 0.0, omega, 1.0)
+
+    init = (jnp.zeros((), f64),         # wall
+            jnp.zeros((), f64),         # committed
+            jnp.zeros((), f64),         # work_exec
+            jnp.zeros((), f64),         # io_time
+            jnp.zeros((), f64),         # down_time
+            jnp.zeros((), jnp.int32),   # n_fail
+            jnp.zeros((), jnp.int32),   # n_ckpt
+            jnp.zeros((), jnp.bool_),   # used_inf (schedule ran dry)
+            jnp.zeros((), jnp.bool_))   # done
+
+    def step(carry, _):
+        (wall, committed, work_exec, io_time, down_time,
+         n_fail, n_ckpt, used_inf, done) = carry
+
+        # One gap per inter-failure stretch, exactly like the step kernel's
+        # one-draw-per-stretch accounting (the initial draw + one per
+        # failure); reading past the schedule yields inf == "no more
+        # failures" and flags exhaustion.
+        in_range = n_fail < n_gaps
+        g = jnp.where(in_range, gaps[jnp.minimum(n_fail, n_gaps - 1)],
+                      jnp.inf)
+
+        # ---- closed-form completion time from this segment start ----
+        rem = T_base - committed
+        j = jnp.maximum(jnp.floor((rem - _EPS) / w), 0.0)
+        r = rem - j * w                 # work inside the finishing period
+        rr = r - Tc                     # its checkpoint-phase share (if > 0)
+        t_in = jnp.where(rr > 0.0, Tc + rr / omega_safe, r)
+        t_fin = j * T + t_in
+        complete = t_fin < g
+
+        # ---- branch A: completes before the next failure ----
+        wall_a = wall + t_fin
+        work_a = work_exec + rem
+        io_a = io_time + j * C + jnp.maximum(rr, 0.0) / omega_safe
+
+        # ---- branch B: failure at s = g after the segment start ----
+        s = jnp.where(jnp.isfinite(g), g, 0.0)
+        k = jnp.floor(s / T)
+        # floor(s/T) can land ON k*T (exact-boundary failure: the
+        # checkpoint ending at the failure instant does NOT commit) or one
+        # above it (quotient rounded up); both correct downward.
+        k = jnp.where((k > 0.0) & (k * T >= s), k - 1.0, k)
+        u = s - k * T                   # offset inside the failing period
+        uc = u - Tc                     # its checkpoint-phase share (if > 0)
+        work_b = work_exec + k * w + jnp.where(uc > 0.0,
+                                               Tc + omega * uc, u)
+        io_b = io_time + k * C + jnp.maximum(uc, 0.0) + R
+        wall_b = (wall + s) + D + R
+        committed_b = jnp.where(k >= 1.0,
+                                committed + (k - 1.0) * w + Tc, committed)
+
+        def sel(a_val, b_val):
+            return jnp.where(complete, a_val, b_val)
+
+        new = (sel(wall_a, wall_b),
+               sel(committed, committed_b),
+               sel(work_a, work_b),
+               sel(io_a, io_b),
+               sel(down_time, down_time + D),
+               sel(n_fail, n_fail + 1).astype(jnp.int32),
+               (n_ckpt + sel(j, k).astype(jnp.int32)).astype(jnp.int32),
+               jnp.logical_or(used_inf, ~in_range),
+               jnp.logical_or(done, complete))
+
+        keep = lambda old, upd: jnp.where(done, old, upd)
+        return tuple(keep(o, u) for o, u in zip(carry, new)), None
+
+    final, _ = lax.scan(step, init, None, length=n_steps)
+    (wall, _committed, work_exec, io_time, down_time,
+     n_fail, n_ckpt, used_inf, done) = final
+    return {"wall_time": wall, "work_executed": work_exec,
+            "io_time": io_time, "down_time": down_time,
+            "n_failures": n_fail, "n_checkpoints": n_ckpt,
+            "truncated": ~done,
+            "gaps_exhausted": used_inf}
+
+
+#: kernel registry: engine_kind -> per-trajectory scan.
+_KERNELS = {"step": _run_one, "event": _run_one_event}
+
+
+def _grid_fn(n_steps: int, kind: str):
+    """The unjitted (grid x trials) double-vmap of one kernel — shared by
+    the plain and the candidate-axis runners."""
+    kernel = _KERNELS[kind]
+
     def run_grid(T, C, R, D, omega, T_base, gaps):
         def one(t, c, r, d, o, tb, g):
-            return _run_one(t, c, r, d, o, tb, g, n_steps)
+            return kernel(t, c, r, d, o, tb, g, n_steps)
         over_trials = jax.vmap(one, in_axes=(None,) * 6 + (0,))
         over_grid = jax.vmap(over_trials, in_axes=(0,) * 6 + (0,))
         return over_grid(T, C, R, D, omega, T_base, gaps)
-    return jax.jit(run_grid)
+    return run_grid
+
+
+def _make_runner(n_steps: int, kind: str):
+    return jax.jit(_grid_fn(n_steps, kind))
+
+
+def _make_cand_runner(n_steps: int, kind: str):
+    """Candidate-axis runner: vmap the grid runner over a leading axis of
+    periods with ``in_axes=None`` on everything else — the gap schedules
+    are SHARED across candidates, never tiled or re-transferred."""
+    run_grid = _grid_fn(n_steps, kind)
+
+    def run_cands(T2, C, R, D, omega, T_base, gaps):
+        return jax.vmap(run_grid, in_axes=(0,) + (None,) * 6)(
+            T2, C, R, D, omega, T_base, gaps)
+    return jax.jit(run_cands)
 
 
 _RUNNERS: dict = {}
+_CAND_RUNNERS: dict = {}
 
 
-def _runner(n_steps: int):
-    if n_steps not in _RUNNERS:
-        _RUNNERS[n_steps] = _make_runner(n_steps)
-    return _RUNNERS[n_steps]
+def _runner(n_steps: int, kind: str = "step"):
+    key = (int(n_steps), kind)
+    if key not in _RUNNERS:
+        _RUNNERS[key] = _make_runner(*key)
+    return _RUNNERS[key]
+
+
+def _cand_runner(n_steps: int, kind: str):
+    key = (int(n_steps), kind)
+    if key not in _CAND_RUNNERS:
+        _CAND_RUNNERS[key] = _make_cand_runner(*key)
+    return _CAND_RUNNERS[key]
 
 
 # ---------------------------------------------------------------------------
@@ -239,30 +431,76 @@ def _expected_failures(T, grid: ParamGrid, T_base) -> np.ndarray:
     return tf / grid.mu
 
 
-def _process_cv(process) -> float:
-    """Worst-case gap coefficient of variation of a failure process (1.0
-    for exponential / None) — scales the schedule-size safety margins."""
+def _process_cv_points(process, size: int) -> np.ndarray:
+    """Per-raveled-grid-point gap CV (shape ``(size,)``); 1.0 where the
+    process declares no spread.  Array-valued shape parameters give each
+    point ITS OWN margin instead of the grid-wide worst case."""
     if process is None:
-        return 1.0
-    return float(np.max(np.asarray(process.gap_cv(), dtype=np.float64)))
+        return np.ones(size, dtype=np.float64)
+    cv = np.asarray(as_process(process).ravel().gap_cv(), dtype=np.float64)
+    return np.broadcast_to(cv.ravel() if cv.ndim else cv, (size,))
+
+
+def _pow2(n) -> np.ndarray:
+    """Elementwise next power of two (>= 1), as int64."""
+    n = np.maximum(np.asarray(n), 1).astype(np.int64)
+    flat = np.array([1 << (int(v) - 1).bit_length() for v in n.ravel()],
+                    dtype=np.int64)
+    return flat.reshape(n.shape)
+
+
+def _per_point(arr, size: int) -> np.ndarray:
+    """Collapse a budget estimate to one value per raveled grid point.
+
+    Candidate-period probe stacks (shape ``(..., size)``) reduce by max
+    over their leading axes; anything not aligned with the grid (scalars,
+    probe vectors over a size-1 grid) collapses to the overall max.
+    """
+    arr = np.asarray(arr, dtype=np.float64)
+    if arr.ndim >= 1 and arr.shape[-1] == size:
+        if arr.ndim > 1:
+            arr = arr.max(axis=tuple(range(arr.ndim - 1)))
+        return arr
+    return np.broadcast_to(arr.max() if arr.ndim else arr, (size,))
+
+
+def fail_capacity_points(T, grid: ParamGrid, T_base,
+                         process=None) -> np.ndarray:
+    """Per-grid-point schedule capacity (mean + 10 sigma margin), bucketed
+    to powers of two; shape ``(grid.size,)``.
+
+    For non-exponential processes both the expected count (clustered short
+    gaps inflate rollbacks, hence wall time) and the count fluctuation
+    (renewal CLT: var ~ nf * cv^2) scale with the gap CV.  Power-of-two
+    bucketing keeps the number of distinct compiled programs O(log) while
+    letting mixed-mu grids pay only their own point's budget (the engine
+    dispatches one call per bucket) instead of the grid-wide worst case.
+    """
+    cv = np.maximum(1.0, _process_cv_points(process, grid.size))
+    nf = _expected_failures(T, grid, T_base) * cv * cv
+    cap = np.ceil(nf + 10.0 * cv * np.sqrt(nf + 1.0) + 10.0)
+    return _pow2(_per_point(cap, grid.size))
 
 
 def default_fail_capacity(T, grid: ParamGrid, T_base,
                           process=None) -> int:
-    """Pre-sampled gaps per trajectory: mean + 10 sigma margin.
+    """Grid-wide schedule capacity: the worst point's bucketed budget (the
+    shared-schedule callers — CRN solvers, explicit ``gaps=`` paths)."""
+    return int(np.max(fail_capacity_points(T, grid, T_base,
+                                           process=process)))
 
-    For non-exponential processes both the expected count (clustered short
-    gaps inflate rollbacks, hence wall time) and the count fluctuation
-    (renewal CLT: var ~ nf * cv^2) scale with the gap CV.
+
+def step_budget_points(T, grid: ParamGrid, T_base,
+                       process=None) -> np.ndarray:
+    """Per-grid-point STEP-kernel scan length (expected events with a 2x +
+    fluctuation margin), bucketed to powers of two; shape ``(grid.size,)``.
+
+    This is the budget the event kernel exists to avoid: per failure it
+    pays ~2 T/(T-a) phase events of re-execution, so heavy-tailed
+    processes (cv > 1) inflate it by cv^2 TWICE — once through the failure
+    count and once through the margin.
     """
-    cv = max(1.0, _process_cv(process))
-    nf = _expected_failures(T, grid, T_base) * cv * cv
-    return int(np.max(np.ceil(nf + 10.0 * cv * np.sqrt(nf + 1.0) + 10.0)))
-
-
-def default_step_budget(T, grid: ParamGrid, T_base, process=None) -> int:
-    """Scan length: expected events with a 2x + fluctuation margin."""
-    cv = max(1.0, _process_cv(process))
+    cv = np.maximum(1.0, _process_cv_points(process, grid.size))
     work_per_period = np.maximum(T - grid.a, 1e-9)
     periods = T_base / work_per_period
     nf = _expected_failures(T, grid, T_base) * cv * cv
@@ -271,7 +509,14 @@ def default_step_budget(T, grid: ParamGrid, T_base, process=None) -> int:
     per_fail = 2.0 * np.maximum(T / work_per_period, 1.0) + 4.0
     events = 2.0 * periods + 2.0 + nf * per_fail
     margin = 10.0 * cv * np.sqrt(nf + 1.0) * per_fail
-    return int(np.max(np.ceil(2.0 * events + margin + 64.0)))
+    steps = np.ceil(2.0 * events + margin + 64.0)
+    return _pow2(_per_point(steps, grid.size))
+
+
+def default_step_budget(T, grid: ParamGrid, T_base, process=None) -> int:
+    """Grid-wide step-kernel scan length: the worst point's bucketed
+    budget (shared-schedule callers)."""
+    return int(np.max(step_budget_points(T, grid, T_base, process=process)))
 
 
 def presample_gaps(grid: ParamGrid, n_trials: int, capacity: int,
@@ -293,61 +538,102 @@ def presample_gaps(grid: ParamGrid, n_trials: int, capacity: int,
                       dtype=np.float64)
 
 
+#: compiled device samplers, keyed by (process identity, sample size).
+_DEVICE_SAMPLERS: dict = {}
+
+
+def presample_gaps_device(grid: ParamGrid, n_trials: int, capacity: int,
+                          seed: int = 0, process=None):
+    """Inter-failure gaps sampled ON DEVICE, shape ``(B, n_trials, capacity)``.
+
+    jax-native counterpart of :func:`presample_gaps`: threefry streams and
+    the processes' inverse-CDF transforms (``FailureProcess.sample_gaps``),
+    jitted, float64 — the schedule never exists on the host and no
+    host->device transfer happens.  Deterministic in ``seed``; NOT the
+    same stream as the numpy sampler, only the same distribution.
+
+    Raises ``NotImplementedError`` for processes without a device sampler —
+    callers fall back to :func:`presample_gaps`.
+    """
+    proc = as_process(process).ravel()
+    flat = grid.ravel()
+    size = (flat.size, int(n_trials), int(capacity))
+    tok = (proc.cache_token(), size)
+    fn = _DEVICE_SAMPLERS.get(tok)
+    with enable_x64():
+        key = jax.random.PRNGKey(int(seed))
+        mean = jnp.asarray(flat.mu)[:, None, None]
+        if fn is None:
+            fn = jax.jit(lambda k, m: proc.sample_gaps(k, size, mean=m))
+            out = fn(key, mean)     # NotImplementedError escapes un-cached
+            _DEVICE_SAMPLERS[tok] = fn
+            return out
+        return fn(key, mean)
+
+
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
-def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
-                          n_trials: int = 200, seed: int = 0,
-                          gaps: Optional[np.ndarray] = None,
-                          n_steps: Optional[int] = None,
-                          process=None) -> TrajectoryBatch:
-    """Simulate every (grid point x trial) trajectory in one jitted call.
+def _normalize_gaps(gaps, size: int):
+    """Normalize a caller-supplied schedule to ``(size, n_trials, F)``.
 
-    ``T`` broadcasts against ``grid.shape``.  ``gaps`` (grid.size, n_trials,
-    F) overrides the pre-sampled failure schedule — pass the same schedule to
-    the scalar oracle via :class:`ScheduledRNG` for parity checks.
-    ``process`` (a :class:`repro.core.failures.FailureProcess`) selects the
-    inter-failure distribution when the schedule is auto-sampled; the scan
-    itself is distribution-agnostic (it only consumes gaps).
+    Accepts numpy or device (jnp) arrays; device arrays stay on device
+    (the CRN solvers keep their schedules resident and reuse them across
+    calls without re-transferring).
     """
-    flat = grid.ravel()
-    T_arr = np.broadcast_to(np.asarray(T, dtype=np.float64),
-                            grid.shape).ravel()
-    Tb_arr = np.broadcast_to(np.asarray(T_base, dtype=np.float64),
-                             grid.shape).ravel()
-    if np.any(T_arr <= (1.0 - flat.omega) * flat.C):
-        raise ValueError("period too short: no work progress per period")
-
-    if gaps is None:
-        cap = default_fail_capacity(T_arr, flat, Tb_arr, process=process)
-        gaps = presample_gaps(flat, n_trials, cap, seed=seed,
-                              process=process)
-    else:
+    xp = jnp if isinstance(gaps, jnp.ndarray) else np
+    if xp is np:
         gaps = np.asarray(gaps, dtype=np.float64)
-        if gaps.ndim == 1:
-            gaps = gaps[None, None, :]
-        if gaps.ndim == 2:
-            gaps = gaps[None, :, :]
-        want = (flat.size, gaps.shape[-2], gaps.shape[-1])
-        gaps = np.broadcast_to(gaps, want)
-        n_trials = gaps.shape[-2]
-    if n_steps is None:
-        n_steps = default_step_budget(T_arr, flat, Tb_arr, process=process)
-    # Round the (static) scan length up to a power of two: extra steps are
-    # no-ops, and bucketing keeps the jit cache at O(log) distinct programs
-    # instead of one recompile per distinct parameter set.
-    n_steps = 1 << (max(int(n_steps), 1) - 1).bit_length()
+    if gaps.ndim == 1:
+        gaps = gaps[None, None, :]
+    if gaps.ndim == 2:
+        gaps = gaps[None, :, :]
+    return xp.broadcast_to(gaps, (size, gaps.shape[-2], gaps.shape[-1]))
 
+
+def _scan_len(n: int) -> int:
+    """Bucket a static scan length up to a power of two: extra steps are
+    no-ops for both kernels, and bucketing keeps the jit cache at O(log)
+    distinct programs instead of one compile per distinct value."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def _run_flat(T_arr, flat: ParamGrid, Tb_arr, gaps, n_steps: int,
+              kind: str) -> dict:
+    """One jitted engine dispatch over a flat grid; returns numpy arrays
+    of shape ``(B, n_trials)`` per output key."""
     with enable_x64():
-        out = _runner(int(n_steps))(
+        out = _runner(int(n_steps), kind)(
             jnp.asarray(T_arr), jnp.asarray(flat.C), jnp.asarray(flat.R),
             jnp.asarray(flat.D), jnp.asarray(flat.omega),
-            jnp.asarray(Tb_arr), jnp.asarray(gaps))
-        out = {k: np.asarray(v) for k, v in out.items()}
+            jnp.asarray(Tb_arr),
+            # explicit f64: a device schedule built OUTSIDE an x64 context
+            # arrives as float32 and would abort the scan with an opaque
+            # carry-dtype error
+            jnp.asarray(gaps, dtype=jnp.float64))
+        return {k: np.asarray(v) for k, v in out.items()}
 
-    shp = grid.shape + (n_trials,)
-    bc = lambda x: x.reshape(grid.shape + (1,))
+
+def _sample_schedule(flat: ParamGrid, n_trials: int, capacity: int,
+                     seed: int, process):
+    """Auto-sample a schedule: on device when the process supports it,
+    host numpy otherwise (the gate for processes without a jax sampler)."""
+    try:
+        return presample_gaps_device(flat, n_trials, capacity, seed=seed,
+                                     process=process)
+    except NotImplementedError:
+        return presample_gaps(flat, n_trials, capacity, seed=seed,
+                              process=process)
+
+
+def _assemble_batch(out: dict, grid: ParamGrid, n_trials: int,
+                    lead: tuple = ()) -> TrajectoryBatch:
+    """Reshape flat engine outputs to ``lead + grid.shape + (n_trials,)``
+    and attach the energy integral (``lead`` is the candidate axis of
+    :func:`simulate_candidates`)."""
+    shp = lead + grid.shape + (n_trials,)
+    bc = lambda x: x.reshape((1,) * len(lead) + grid.shape + (1,))
     wall = out["wall_time"].reshape(shp)
     work = out["work_executed"].reshape(shp)
     io = out["io_time"].reshape(shp)
@@ -361,6 +647,146 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
         n_checkpoints=out["n_checkpoints"].reshape(shp),
         truncated=out["truncated"].reshape(shp),
         gaps_exhausted=out["gaps_exhausted"].reshape(shp))
+
+
+def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
+                          n_trials: int = 200, seed: int = 0,
+                          gaps: Optional[np.ndarray] = None,
+                          n_steps: Optional[int] = None,
+                          process=None,
+                          engine_kind: str = "event") -> TrajectoryBatch:
+    """Simulate every (grid point x trial) trajectory in a few jitted calls.
+
+    ``T`` broadcasts against ``grid.shape``.  ``gaps`` (grid.size, n_trials,
+    F) overrides the pre-sampled failure schedule — pass the same schedule to
+    the scalar oracle via :class:`ScheduledRNG` (or ``simulate_once(gaps=)``)
+    for parity checks.  ``process`` (a
+    :class:`repro.core.failures.FailureProcess`) selects the inter-failure
+    distribution when the schedule is auto-sampled — on device via the
+    process's jax sampler when it has one; the scans themselves are
+    distribution-agnostic (they only consume gaps).
+
+    ``engine_kind`` selects the kernel: ``"event"`` (default, one scan
+    iteration per failure — the fast path) or ``"step"`` (one iteration per
+    phase event — the scalar oracle's bit-level twin, kept as a
+    cross-check).  When the schedule is auto-sampled, grid points are
+    dispatched in power-of-two budget buckets so mixed-mu grids don't pay
+    the worst point's scan length everywhere.
+    """
+    if engine_kind not in _KERNELS:
+        raise ValueError(f"unknown engine_kind {engine_kind!r}; "
+                         f"one of {sorted(_KERNELS)}")
+    flat = grid.ravel()
+    T_arr = np.broadcast_to(np.asarray(T, dtype=np.float64),
+                            grid.shape).ravel()
+    Tb_arr = np.broadcast_to(np.asarray(T_base, dtype=np.float64),
+                             grid.shape).ravel()
+    if np.any(T_arr <= (1.0 - flat.omega) * flat.C):
+        raise ValueError("period too short: no work progress per period")
+
+    if gaps is not None:
+        # Shared-schedule path (parity / CRN): one dispatch, one budget.
+        gaps = _normalize_gaps(gaps, flat.size)
+        n_trials = int(gaps.shape[-2])
+        if n_steps is None:
+            # The event kernel executes (#failures + 1 completion) steps,
+            # and a schedule of F gaps admits at most F failures.
+            n_steps = (_scan_len(gaps.shape[-1]) + 1
+                       if engine_kind == "event" else
+                       default_step_budget(T_arr, flat, Tb_arr,
+                                           process=process))
+        else:
+            n_steps = _scan_len(n_steps)
+        out = _run_flat(T_arr, flat, Tb_arr, gaps, int(n_steps),
+                        engine_kind)
+        return _assemble_batch(out, grid, n_trials)
+
+    # Auto-sampled path: per-point budgets, one dispatch per pow2 bucket.
+    # The schedule is sampled ONCE for the whole grid (at the worst
+    # point's capacity) and sliced per bucket, so the randomness of a
+    # fixed seed depends only on (seed, process, capacity estimate) —
+    # pure performance knobs (n_steps, engine_kind, how points fall into
+    # buckets) never change the sampled failure times.
+    caps = fail_capacity_points(T_arr, flat, Tb_arr, process=process)
+    if n_steps is not None:
+        budgets = np.full(flat.size, _scan_len(n_steps), dtype=np.int64)
+    elif engine_kind == "event":
+        budgets = caps + 1
+    else:
+        budgets = step_budget_points(T_arr, flat, Tb_arr, process=process)
+    g_full = _sample_schedule(flat, n_trials, int(np.max(caps)), seed,
+                              process)
+    acc: dict = {}
+    for b in np.unique(budgets):
+        idx = np.nonzero(budgets == b)[0]
+        sub = ParamGrid(**{f: v[idx] for f, v in flat.fields().items()})
+        cap = int(np.max(caps[idx]))
+        with enable_x64():       # gathering a f64 device array needs x64
+            g = g_full[idx, :, :cap]
+        out = _run_flat(T_arr[idx], sub, Tb_arr[idx], g, int(b),
+                        engine_kind)
+        if not acc:
+            acc = {k: np.empty((flat.size,) + v.shape[1:], dtype=v.dtype)
+                   for k, v in out.items()}
+        for k, v in out.items():
+            acc[k][idx] = v
+    return _assemble_batch(acc, grid, n_trials)
+
+
+def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
+                        n_trials: int = 200, seed: int = 0,
+                        gaps: Optional[np.ndarray] = None,
+                        n_steps: Optional[int] = None, process=None,
+                        engine_kind: str = "event") -> TrajectoryBatch:
+    """Simulate M candidate periods against ONE shared set of failure
+    schedules, in one jitted call (the CRN solvers' hot path).
+
+    ``T_cand`` has shape ``(M,) + grid.shape`` (or ``(M,)``, one period per
+    candidate for the whole grid).  The candidate axis is a ``vmap`` with
+    ``in_axes=None`` on the schedules and parameters — the big
+    ``(B, n_trials, capacity)`` gap tensor is shared across candidates,
+    never tiled, materialized M times, or re-transferred.  Outputs carry a
+    leading ``(M,)`` axis over ``grid.shape + (n_trials,)``.
+
+    With ``gaps=None`` one schedule set is auto-sampled (device sampler
+    when available) and shared by every candidate — common random numbers
+    by construction.
+    """
+    if engine_kind not in _KERNELS:
+        raise ValueError(f"unknown engine_kind {engine_kind!r}; "
+                         f"one of {sorted(_KERNELS)}")
+    flat = grid.ravel()
+    T2 = np.asarray(T_cand, dtype=np.float64)
+    M = T2.shape[0]
+    if T2.ndim == 1:
+        T2 = T2.reshape((M,) + (1,) * max(len(grid.shape), 1))
+    T2 = np.broadcast_to(T2, (M,) + grid.shape).reshape(M, flat.size)
+    Tb_arr = np.broadcast_to(np.asarray(T_base, dtype=np.float64),
+                             grid.shape).ravel()
+    if np.any(T2 <= (1.0 - flat.omega) * flat.C):
+        raise ValueError("period too short: no work progress per period")
+
+    if gaps is None:
+        cap = default_fail_capacity(T2, flat, Tb_arr, process=process)
+        gaps = _sample_schedule(flat, n_trials, cap, seed, process)
+    gaps = _normalize_gaps(gaps, flat.size)
+    n_trials = int(gaps.shape[-2])
+    if n_steps is None:
+        n_steps = (_scan_len(gaps.shape[-1]) + 1
+                   if engine_kind == "event" else
+                   default_step_budget(T2, flat, Tb_arr, process=process))
+    else:
+        n_steps = _scan_len(n_steps)
+
+    with enable_x64():
+        out = _cand_runner(int(n_steps), engine_kind)(
+            jnp.asarray(T2), jnp.asarray(flat.C), jnp.asarray(flat.R),
+            jnp.asarray(flat.D), jnp.asarray(flat.omega),
+            jnp.asarray(Tb_arr),
+            jnp.asarray(gaps, dtype=jnp.float64))  # f64 even if the
+        # schedule was device-built outside an x64 context (float32)
+        out = {k: np.asarray(v) for k, v in out.items()}
+    return _assemble_batch(out, grid, n_trials, lead=(M,))
 
 
 # ---------------------------------------------------------------------------

@@ -680,10 +680,11 @@ def evaluate_multilevel_grid(grid: MultilevelParamGrid,
 #
 # No closed form exists for non-exponential processes, so the grid solver is
 # Monte-Carlo: one pre-sampled schedule set per grid point (common random
-# numbers) is reused for every candidate period, the argmin is localized by
-# batched coarse-to-fine refinement (each engine call scores one candidate
-# for every grid point at once; the big gap arrays are shared, never
-# tiled), and every reported period — the process optimum, the
+# numbers) is parked on device once and reused for every candidate period,
+# the argmin is localized by batched coarse-to-fine refinement (one
+# candidate-vmapped engine call scores ALL candidates for every grid point
+# at once; the big gap arrays are shared via in_axes=None, never tiled),
+# and every reported period — the process optimum, the
 # exponential-closed-form AlgoT/AlgoE, Young, Daly — is evaluated on the
 # *same* schedules so the penalties are CRN-paired.
 
@@ -734,47 +735,47 @@ def _flat_tbase(T_base, grid: ParamGrid) -> np.ndarray:
     return np.broadcast_to(arr, (grid.size,)).copy()
 
 
-def _mc_eval(T_cand, flat: ParamGrid, T_base, gaps, n_steps):
+def _mc_eval(T_cand, flat: ParamGrid, T_base, gaps, n_steps=None,
+             engine_kind: str = "event"):
     """Engine means over trials for candidate periods ``T_cand`` of shape
-    ``(M, B)`` against the flat grid (B,), one engine call per candidate
-    row (the gap schedules — the big arrays — are shared, never tiled)."""
+    ``(M, B)`` against the flat grid (B,), in ONE candidate-vmapped engine
+    call (the gap schedules — the big arrays — are shared across the
+    candidate axis via ``in_axes=None``, never tiled or re-transferred)."""
     from . import engine as _engine
-    walls, energies, wall_ses, energy_ses = [], [], [], []
-    for row in np.atleast_2d(T_cand):
-        tb = _engine.simulate_trajectories(row, flat, T_base, gaps=gaps,
-                                           n_steps=n_steps)
-        if tb.truncated.any():
-            raise RuntimeError("robustness sweep: scan budget exceeded — "
-                               "candidate period too close to a bracket "
-                               "edge")
-        if tb.gaps_exhausted.any():
-            raise RuntimeError("robustness sweep: failure schedule "
-                               "exhausted — increase n_trials capacity "
-                               "margins")
-        n = tb.wall_time.shape[-1]
-        se = lambda a: a.std(axis=-1, ddof=1) / math.sqrt(n)
-        walls.append(tb.wall_time.mean(axis=-1))
-        energies.append(tb.energy.mean(axis=-1))
-        wall_ses.append(se(tb.wall_time))
-        energy_ses.append(se(tb.energy))
-    return (np.stack(walls), np.stack(energies),
-            np.stack(wall_ses), np.stack(energy_ses))
+    T_cand = np.atleast_2d(np.asarray(T_cand, dtype=np.float64))
+    tb = _engine.simulate_candidates(T_cand, flat, T_base, gaps=gaps,
+                                     n_steps=n_steps,
+                                     engine_kind=engine_kind)
+    if tb.truncated.any():
+        raise RuntimeError("robustness sweep: scan budget exceeded — "
+                           "candidate period too close to a bracket "
+                           "edge")
+    if tb.gaps_exhausted.any():
+        raise RuntimeError("robustness sweep: failure schedule "
+                           "exhausted — increase n_trials capacity "
+                           "margins")
+    n = tb.wall_time.shape[-1]
+    se = lambda a: a.std(axis=-1, ddof=1) / math.sqrt(n)
+    return (tb.wall_time.mean(axis=-1), tb.energy.mean(axis=-1),
+            se(tb.wall_time), se(tb.energy))
 
 
 def evaluate_robustness_grid(grid: ParamGrid, process,
                              T_base: Optional[float] = None,
                              n_trials: int = 160, seed: int = 0,
                              n_candidates: int = 13, rounds: int = 3,
+                             engine_kind: str = "event",
                              ) -> RobustnessResult:
     """MC robustness evaluation of a whole grid under ``process``.
 
-    Each refinement round scores ``n_candidates`` periods (one batched
-    engine call per candidate, every grid point at once); a final pass
-    scores the six reported periods (MC-time, MC-energy, AlgoT, AlgoE,
-    Young, Daly) on the same CRN schedules.  Use
-    :func:`evaluate_periods_grid` with a different ``seed`` to re-validate
-    the reported optima on independent randomness (the benchmark's 2%
-    gate).
+    Each refinement round scores ``n_candidates`` periods in one
+    candidate-vmapped engine call (every candidate x grid point at once);
+    a final pass scores the six reported periods (MC-time, MC-energy,
+    AlgoT, AlgoE, Young, Daly) on the same CRN schedules, which are
+    host-sampled once (replayable) and then device-resident for every
+    call.  Use :func:`evaluate_periods_grid` with a different ``seed`` to
+    re-validate the reported optima on independent randomness (the
+    benchmark's 2% gate).
     """
     from ..core.failures import as_process
     from . import engine as _engine
@@ -805,10 +806,13 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
         0.0, 1.0, 9)[:, None]
     cap = _engine.default_fail_capacity(probes, flat, T_base,
                                        process=process)
-    n_steps = _engine.default_step_budget(probes, flat, T_base,
-                                          process=process)
+    n_steps = (None if engine_kind == "event" else
+               _engine.default_step_budget(probes, flat, T_base,
+                                           process=process))
     gaps = _engine.presample_gaps(flat, n_trials, cap, seed=seed,
                                   process=process)
+    with enable_x64():
+        gaps = jnp.asarray(gaps)      # device-resident once, reused below
 
     # Coarse-to-fine localization of both argmins (batched over the grid).
     frac = np.linspace(0.0, 1.0, n_candidates)[:, None]
@@ -825,10 +829,11 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
         # One engine pass returns BOTH objectives, so identical candidate
         # sets (the shared first round) are simulated only once.
         wall_t, energy_t, _, _ = _mc_eval(xs_time, flat, T_base, gaps,
-                                          n_steps)
+                                          n_steps, engine_kind)
         if xs_energy is xs_time:
             return wall_t, energy_t
-        _, energy_e, _, _ = _mc_eval(xs_energy, flat, T_base, gaps, n_steps)
+        _, energy_e, _, _ = _mc_eval(xs_energy, flat, T_base, gaps, n_steps,
+                                     engine_kind)
         return wall_t, energy_e
 
     for _ in range(rounds):
@@ -843,7 +848,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
     cands = np.clip(np.stack([T_mc_t, T_mc_e, Tt, Te, Ty, Td]),
                     lo[None, :], hi[None, :])
     wall, energy, wall_se, energy_se = _mc_eval(cands, flat, T_base, gaps,
-                                                n_steps)
+                                                n_steps, engine_kind)
     shp = grid.shape
     r = lambda a: np.asarray(a, dtype=np.float64).reshape(shp)
     return RobustnessResult(
@@ -864,7 +869,8 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
 
 
 def evaluate_periods_grid(grid: ParamGrid, process, periods,
-                          T_base, n_trials: int = 160, seed: int = 0):
+                          T_base, n_trials: int = 160, seed: int = 0,
+                          engine_kind: str = "event"):
     """MC means at given candidate periods under ``process`` (CRN-shared
     across candidates, independent across seeds).
 
@@ -881,11 +887,13 @@ def evaluate_periods_grid(grid: ParamGrid, process, periods,
     P = np.asarray(periods, dtype=np.float64).reshape((-1, B))
     T_base = _flat_tbase(T_base, grid)
     cap = _engine.default_fail_capacity(P, flat, T_base, process=process)
-    n_steps = _engine.default_step_budget(P, flat, T_base, process=process)
+    n_steps = (None if engine_kind == "event" else
+               _engine.default_step_budget(P, flat, T_base,
+                                           process=process))
     gaps = _engine.presample_gaps(flat, n_trials, cap, seed=seed,
                                   process=process)
     wall, energy, wall_se, energy_se = _mc_eval(P, flat, T_base, gaps,
-                                                n_steps)
+                                                n_steps, engine_kind)
     shp = (P.shape[0],) + grid.shape
     return {"wall": wall.reshape(shp), "energy": energy.reshape(shp),
             "wall_se": wall_se.reshape(shp),

@@ -1,0 +1,343 @@
+"""Event-kernel engine: cross-engine parity, on-device sampling, budgets.
+
+The contract under test (PR 4 acceptance):
+
+- event kernel == step kernel == scalar oracle, trajectory-for-trajectory
+  AND trial-mean-for-trial-mean, bit-for-bit, under a shared host-supplied
+  DYADIC gap schedule (every quantity exactly representable: the closed
+  forms and the step accumulations then perform exact arithmetic), for
+  every FailureProcess;
+- the same at ~1e-12 relative tolerance for arbitrary float schedules;
+- the on-device threefry sampler is deterministic in the seed and
+  distribution-identical to the host sampler;
+- per-point power-of-two budget bucketing dispatches each grid point at
+  its own scan length without changing results.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (CheckpointParams, EXASCALE_POWER_RHO55,
+                        Exponential, LogNormal, TraceReplay, Weibull,
+                        fig12_checkpoint, simulate_once)
+from repro.core import optimal
+from repro.sim import ParamGrid, simulate_candidates, simulate_trajectories
+from repro.sim.engine import (fail_capacity_points, presample_gaps,
+                              presample_gaps_device, step_budget_points)
+
+CK = fig12_checkpoint(300.0)
+PW = EXASCALE_POWER_RHO55
+
+PROCESSES = [
+    Exponential(),
+    Weibull(shape=0.6),
+    LogNormal(sigma=1.0),
+    TraceReplay(gaps=[40.0, 500.0, 120.0, 90.0, 800.0, 33.0]),
+]
+
+#: dyadic rounding grid: coarse enough that boundary coincidences with the
+#: engines' 1e-12 completion slack are impossible, fine enough to keep the
+#: schedule's distribution intact.
+_DYADIC = 2.0 ** 16
+
+
+def _dyadic(gaps):
+    return np.maximum(np.round(gaps * _DYADIC) / _DYADIC, 1.0 / _DYADIC)
+
+
+def _fields(tb):
+    return {f: getattr(tb, f) for f in
+            ("wall_time", "energy", "work_executed", "io_time", "down_time",
+             "n_failures", "n_checkpoints", "truncated", "gaps_exhausted")}
+
+
+class TestCrossEngineParity:
+    """event == step == scalar under shared host schedules."""
+
+    @pytest.mark.parametrize("proc", PROCESSES, ids=lambda p: p.name)
+    def test_bitexact_on_dyadic_schedule(self, proc):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        gaps = _dyadic(presample_gaps(grid, 8, 128, seed=9, process=proc))
+        ev = simulate_trajectories(60.0, grid, T_base=3000.0, gaps=gaps,
+                                   engine_kind="event")
+        st = simulate_trajectories(60.0, grid, T_base=3000.0, gaps=gaps,
+                                   engine_kind="step")
+        assert not ev.truncated.any() and not st.truncated.any()
+        for name, a in _fields(ev).items():
+            np.testing.assert_array_equal(a, getattr(st, name),
+                                          err_msg=f"{proc.name}/{name}")
+        # trial means bit-for-bit (the acceptance criterion's phrasing)
+        assert np.array_equal(ev.wall_time.mean(axis=-1),
+                              st.wall_time.mean(axis=-1))
+        assert np.array_equal(ev.energy.mean(axis=-1),
+                              st.energy.mean(axis=-1))
+        # ...and the scalar oracle agrees exactly on the same schedules
+        for k in range(gaps.shape[1]):
+            ref = simulate_once(60.0, CK, PW, 3000.0,
+                                np.random.default_rng(0), gaps=gaps[0, k])
+            assert float(ev.wall_time[0, k]) == ref.wall_time
+            assert float(ev.energy[0, k]) == ref.energy
+            assert float(ev.io_time[0, k]) == ref.io_time
+            assert float(ev.work_executed[0, k]) == ref.work_executed
+            assert int(ev.n_failures[0, k]) == ref.n_failures
+            assert int(ev.n_checkpoints[0, k]) == ref.n_checkpoints
+
+    @pytest.mark.parametrize("proc", PROCESSES, ids=lambda p: p.name)
+    def test_tolerance_on_raw_schedule(self, proc):
+        """Arbitrary float schedules: closed-form vs accumulated rounding
+        differs only in the last few ulps."""
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        gaps = presample_gaps(grid, 6, 128, seed=3, process=proc)
+        ev = simulate_trajectories(53.3, grid, T_base=3000.0, gaps=gaps,
+                                   engine_kind="event")
+        st = simulate_trajectories(53.3, grid, T_base=3000.0, gaps=gaps,
+                                   engine_kind="step")
+        for name in ("wall_time", "energy", "work_executed", "io_time"):
+            np.testing.assert_allclose(getattr(ev, name), getattr(st, name),
+                                       rtol=1e-12, err_msg=name)
+        np.testing.assert_array_equal(ev.n_failures, st.n_failures)
+        np.testing.assert_array_equal(ev.n_checkpoints, st.n_checkpoints)
+
+    def test_parameter_batch_parity(self):
+        """Mixed (ckpt, power) batch + per-point dyadic schedules."""
+        from repro.sim import get_scenario, grid_from_scenarios
+        scens = [get_scenario("fig12", mu_min=120.0),
+                 get_scenario("exascale_rho7", mu_min=300.0)]
+        grid = grid_from_scenarios(scens)
+        rng = np.random.default_rng(5)
+        gaps = _dyadic(rng.exponential(1.0, size=(2, 4, 96))
+                       * grid.mu[:, None, None])
+        T = np.array([40.0, 60.0])
+        ev = simulate_trajectories(T, grid, T_base=500.0, gaps=gaps,
+                                   engine_kind="event")
+        st = simulate_trajectories(T, grid, T_base=500.0, gaps=gaps,
+                                   engine_kind="step")
+        for name, a in _fields(ev).items():
+            np.testing.assert_array_equal(a, getattr(st, name), err_msg=name)
+
+    def test_exhaustion_flags_match_step(self):
+        """A schedule that runs dry flags gaps_exhausted identically in
+        both kernels (the step kernel's one-draw-per-stretch accounting)."""
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        gaps = np.array([50.0, 70.0])        # far too short for T_base=4000
+        ev = simulate_trajectories(60.0, grid, T_base=4000.0, gaps=gaps,
+                                   engine_kind="event")
+        st = simulate_trajectories(60.0, grid, T_base=4000.0, gaps=gaps,
+                                   engine_kind="step")
+        assert ev.gaps_exhausted.all() and st.gaps_exhausted.all()
+        np.testing.assert_array_equal(ev.wall_time, st.wall_time)
+
+    def test_event_truncates_on_tiny_budget(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        tb = simulate_trajectories(60.0, grid, T_base=50000.0, n_trials=4,
+                                   seed=0, n_steps=2, engine_kind="event")
+        assert tb.truncated.any()
+
+    def test_unknown_engine_kind_raises(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        with pytest.raises(ValueError, match="engine_kind"):
+            simulate_trajectories(60.0, grid, T_base=100.0, n_trials=2,
+                                  engine_kind="warp")
+
+
+class TestDeviceSampling:
+    """On-device threefry sampling: determinism + distribution parity."""
+
+    @pytest.mark.parametrize("proc", PROCESSES, ids=lambda p: p.name)
+    def test_fixed_seed_determinism(self, proc):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        a = np.asarray(presample_gaps_device(grid, 4, 32, seed=7,
+                                             process=proc))
+        b = np.asarray(presample_gaps_device(grid, 4, 32, seed=7,
+                                             process=proc))
+        c = np.asarray(presample_gaps_device(grid, 4, 32, seed=8,
+                                             process=proc))
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, c)
+        assert (a > 0).all() and np.isfinite(a).all()
+
+    @pytest.mark.parametrize("proc", [Exponential(), Weibull(shape=0.6),
+                                      LogNormal(sigma=1.0)],
+                             ids=lambda p: p.name)
+    def test_device_matches_host_distribution(self, proc):
+        """Same distribution as the numpy sampler: mean and CV agree to
+        CLT tolerance (different streams by design)."""
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        n = 40_000
+        dev = np.asarray(presample_gaps_device(grid, 1, n, seed=0,
+                                               process=proc)).ravel()
+        host = presample_gaps(grid, 1, n, seed=0, process=proc).ravel()
+        cv = float(np.max(np.asarray(proc.gap_cv())))
+        tol = 6.0 * cv / math.sqrt(n)
+        assert abs(dev.mean() / host.mean() - 1.0) < 2.0 * tol
+        assert abs(dev.std() / dev.mean() - cv) < 0.1 * max(cv, 1.0)
+
+    def test_trace_replay_device_rows_are_rotations(self):
+        tr = TraceReplay(gaps=[1.0, 2.0, 3.0, 6.0])
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        g = np.asarray(presample_gaps_device(grid, 4, 9, seed=2,
+                                             process=TraceReplay(
+                                                 gaps=[1.0, 2.0, 3.0, 6.0],
+                                                 rescale=False)))[0]
+        base = np.array([1.0, 2.0, 3.0, 6.0])
+        for row in g:
+            assert any(np.allclose(row, np.resize(np.roll(base, -s), 9))
+                       for s in range(4)), row
+        # rescale=True anchors the replay to the grid's mu
+        g2 = np.asarray(presample_gaps_device(grid, 64, 16, seed=2,
+                                              process=tr))
+        assert g2.mean() == pytest.approx(CK.mu, rel=0.25)
+
+    def test_auto_sampled_trajectories_deterministic(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        kw = dict(T_base=2000.0, n_trials=16, process=Weibull(shape=0.7))
+        a = simulate_trajectories(60.0, grid, seed=11, **kw)
+        b = simulate_trajectories(60.0, grid, seed=11, **kw)
+        c = simulate_trajectories(60.0, grid, seed=12, **kw)
+        np.testing.assert_array_equal(a.wall_time, b.wall_time)
+        assert not np.array_equal(a.wall_time, c.wall_time)
+
+    def test_host_fallback_for_unknown_process(self):
+        """A process without a jax sampler still runs (host numpy gate)."""
+        class Odd(Exponential):
+            name = "odd"
+
+            def sample_gaps(self, key, size, mean=None):
+                raise NotImplementedError("no device sampler")
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        tb = simulate_trajectories(60.0, grid, T_base=1000.0, n_trials=4,
+                                   seed=0, process=Odd())
+        assert not tb.truncated.any()
+
+
+class TestBudgetBuckets:
+    """Per-point pow2 budgets + bucketed dispatch."""
+
+    def _mixed_grid(self):
+        base = ParamGrid.from_params(CK, PW)
+        mus = np.array([80.0, 3000.0])       # ~40x failure-rate spread
+        return ParamGrid(**{f: (mus if f == "mu"
+                                else np.broadcast_to(v, (2,)))
+                            for f, v in base.fields().items()})
+
+    def test_budgets_are_per_point_pow2(self):
+        grid = self._mixed_grid()
+        caps = fail_capacity_points(60.0, grid, 2000.0,
+                                    process=Weibull(shape=0.7))
+        steps = step_budget_points(60.0, grid, 2000.0,
+                                   process=Weibull(shape=0.7))
+        for arr in (caps, steps):
+            assert arr.shape == (2,)
+            assert all((int(v) & (int(v) - 1)) == 0 for v in arr)  # pow2
+        # the mixed grid really does split: the fragile point pays more
+        assert caps[0] > caps[1]
+        assert steps[0] > steps[1]
+
+    def test_budget_knobs_never_change_the_randomness(self):
+        """The schedule is sampled once for the whole grid and sliced per
+        bucket, so scan-length knobs are PURE performance knobs: explicit
+        n_steps (single bucket) and the default bucketed dispatch give
+        bit-identical results, and the step kernel consumes the very same
+        auto-sampled schedules as the event kernel."""
+        grid = self._mixed_grid()
+        proc = Weibull(shape=0.7)
+        kw = dict(T_base=2000.0, n_trials=8, seed=4, process=proc)
+        base = simulate_trajectories(60.0, grid, **kw)          # 2 buckets
+        big = simulate_trajectories(60.0, grid, n_steps=8192, **kw)
+        for name, a in _fields(base).items():
+            np.testing.assert_array_equal(a, getattr(big, name),
+                                          err_msg=name)
+        st = simulate_trajectories(60.0, grid, engine_kind="step", **kw)
+        np.testing.assert_array_equal(base.n_failures, st.n_failures)
+        np.testing.assert_allclose(base.wall_time, st.wall_time,
+                                   rtol=1e-12)
+
+    def test_array_shape_process_buckets(self):
+        """Array-valued Weibull shape: per-point cv feeds per-point
+        budgets and the per-bucket process subsets line up."""
+        base = ParamGrid.from_params(CK, PW)
+        grid = ParamGrid(**{f: np.broadcast_to(v, (3,))
+                            for f, v in base.fields().items()})
+        proc = Weibull(shape=np.array([0.5, 1.0, 2.0]))
+        caps = fail_capacity_points(60.0, grid, 2000.0, process=proc)
+        # per-point cv: the k=0.5 row (cv ~ 2.2) pays a larger capacity
+        # than the wear-out k=2 row (cv ~ 0.5) — the old np.max would have
+        # charged every row the k=0.5 budget
+        assert caps[0] > caps[2]
+        tb = simulate_trajectories(60.0, grid, T_base=2000.0, n_trials=32,
+                                   seed=0, process=proc)
+        assert not tb.truncated.any() and not tb.gaps_exhausted.any()
+
+
+class TestCandidateAxis:
+    """simulate_candidates: shared-schedule candidate vmap."""
+
+    def test_matches_per_row_runs(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        gaps = presample_gaps(grid, 6, 128, seed=1, process=Weibull(0.7))
+        Ts = np.array([40.0, 60.0, 90.0])
+        cand = simulate_candidates(Ts, grid, T_base=2000.0, gaps=gaps)
+        assert cand.wall_time.shape == (3, 1, 6)
+        for m, T in enumerate(Ts):
+            row = simulate_trajectories(T, grid, T_base=2000.0, gaps=gaps)
+            np.testing.assert_array_equal(cand.wall_time[m], row.wall_time)
+            np.testing.assert_array_equal(cand.energy[m], row.energy)
+
+    def test_grid_shaped_candidates(self):
+        base = ParamGrid.from_params(CK, PW)
+        grid = ParamGrid(**{f: np.broadcast_to(v, (2,))
+                            for f, v in base.fields().items()})
+        gaps = presample_gaps(grid, 4, 128, seed=2)
+        Ts = np.array([[40.0, 50.0], [60.0, 70.0]])      # (M, B)
+        cand = simulate_candidates(Ts, grid, T_base=1000.0, gaps=gaps)
+        assert cand.wall_time.shape == (2, 2, 4)
+        solo = simulate_trajectories(Ts[1], grid, T_base=1000.0, gaps=gaps)
+        np.testing.assert_array_equal(cand.wall_time[1], solo.wall_time)
+
+    def test_mc_surrogate_engines_agree(self):
+        """The MC solvers land on the same optimum through either kernel
+        (same CRN schedules, same surrogate, different arithmetic path)."""
+        sur_e = optimal.MCSurrogate(CK, PW, Weibull(shape=0.7),
+                                    T_base=1500.0, n_trials=48, seed=0,
+                                    engine_kind="event")
+        sur_s = optimal.MCSurrogate(CK, PW, Weibull(shape=0.7),
+                                    T_base=1500.0, n_trials=48, seed=0,
+                                    engine_kind="step")
+        t_e = sur_e.argmin("time")
+        t_s = sur_s.argmin("time")
+        assert t_e == pytest.approx(t_s, rel=5e-3)
+
+    def test_period_guard(self):
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        with pytest.raises(ValueError, match="period too short"):
+            simulate_candidates(np.array([4.0]), grid, T_base=100.0,
+                                n_trials=2)
+
+    def test_float32_device_schedule_is_upcast(self):
+        """Regression: a schedule parked on device OUTSIDE an x64 context
+        arrives float32; the engine must upcast it instead of aborting
+        the scan with a carry-dtype error."""
+        import jax.numpy as jnp
+        grid = ParamGrid.from_params(CK, PW).reshape((1,))
+        gaps = presample_gaps(grid, 4, 64, seed=0)
+        dev = jnp.asarray(gaps)              # jax default config: float32
+        got = simulate_trajectories(60.0, grid, T_base=1000.0, gaps=dev)
+        want = simulate_trajectories(60.0, grid, T_base=1000.0,
+                                     gaps=np.asarray(dev, np.float64))
+        np.testing.assert_array_equal(got.wall_time, want.wall_time)
+
+
+class TestEventEngineStatistics:
+    def test_matches_closed_form_model(self):
+        """Auto-sampled exponential trajectories agree with the paper's
+        first-order expectation at moderate failure rates."""
+        from repro.core import model
+        ck = CheckpointParams(C=10, R=10, D=1, mu=1000.0, omega=0.5)
+        grid = ParamGrid.from_params(ck, PW).reshape((1,))
+        tb = simulate_trajectories(60.0, grid, T_base=3000.0,
+                                   n_trials=600, seed=0)
+        want = float(model.time_final(60.0, ck, 3000.0))
+        got = float(tb.wall_time.mean())
+        se = float(tb.wall_time.std(ddof=1) / math.sqrt(600))
+        assert abs(got - want) < 4.0 * se + 0.01 * want

@@ -473,8 +473,12 @@ class TestBenchRegressionGate:
         bad = check_regression(self._payload(12.0), partial)
         assert len(bad) == 1 and "missing" in bad[0]
 
-    def test_new_payload_grid_skipped_until_baselined(self):
+    def test_unbaselined_payload_grid_fails_loudly(self):
+        """A gated bench the baseline doesn't know is an UNGATED bench —
+        it must fail until BENCH_sweep.json is regenerated with it."""
         from benchmarks.bench_sweep import check_regression
         pay = self._payload(12.0)
         pay["brand_new_bench"] = {"speedup_warm": 0.1}
-        assert check_regression(self._payload(12.0), pay) == []
+        bad = check_regression(self._payload(12.0), pay)
+        assert len(bad) == 1 and "brand_new_bench" in bad[0]
+        assert "missing from the committed baseline" in bad[0]

@@ -32,14 +32,16 @@ PW = EXASCALE_POWER_RHO55
 # ---------------------------------------------------------------------------
 
 class TestTrajectoryParity:
-    """Shared failure schedule -> identical trajectories."""
+    """Shared failure schedule -> identical trajectories (both kernels)."""
 
+    @pytest.mark.parametrize("engine_kind", ["step", "event"])
     @pytest.mark.parametrize("T", [40.0, 53.3, 90.0])
-    def test_single_scenario_matches_oracle(self, T):
+    def test_single_scenario_matches_oracle(self, T, engine_kind):
         grid = ParamGrid.from_params(CK, PW).reshape((1,))
         rng = np.random.default_rng(123)
         gaps = rng.exponential(CK.mu, size=(1, 8, 64))
-        tb = simulate_trajectories(T, grid, T_base=4000.0, gaps=gaps)
+        tb = simulate_trajectories(T, grid, T_base=4000.0, gaps=gaps,
+                                   engine_kind=engine_kind)
         assert not tb.truncated.any()
         for k in range(gaps.shape[1]):
             ref = simulate_once(T, CK, PW, 4000.0, ScheduledRNG(gaps[0, k]))
