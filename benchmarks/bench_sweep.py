@@ -2,12 +2,19 @@
 
 Times the seed per-point loop (``tradeoff.sweep_mu_rho(engine="scalar")``)
 against the batched ``repro.sim`` grid evaluation on (a) the seed benchmark
-grid and (b) a dense production-resolution grid; plus the Monte-Carlo
-engine entries: the exponential-vs-Weibull within-engine ratio
-(``weibull_engine``), the event kernel vs the scalar oracle on the same
-Weibull workload (``weibull_event_engine`` — the PR-4 before/after story
-for the committed 0.32x step-kernel entry), and the warm MC-surrogate
-solve step-vs-event (``mc_solver_warm``).  Every run also renders the
+grid and (b) a dense production-resolution grid; the Monte-Carlo engine
+entries: the event kernel vs the scalar oracle on the canonical Weibull
+workload (``weibull_event_engine``) and the warm MC-surrogate solve
+step-vs-event (``mc_solver_warm``); the dispatch-layer entries: the
+multi-device sharded dense sweep (``sharded_dense_grid``, measured on
+virtual CPU devices in a subprocess), the memory-bounded 10^6-point
+chunked sweep (``chunked_dense_1m``, asserts chunked == unchunked
+bit-for-bit), and the persistent-compile-cache cold start
+(``cold_start_cached``, two fresh interpreters against one cache dir).
+``weibull_step_engine_reference`` keeps the RETAINED step kernel's
+Weibull-vs-exponential ratio as an ungated-by-design reference — it reads
+~0.3x by construction (the cv^2-scaled step budget the event kernel was
+built to avoid) and must not trip the gate.  Every run also renders the
 warm/cold timings as ``benchmarks/results/bench_sweep_table.md`` (uploaded
 as a CI artifact).
 
@@ -31,6 +38,10 @@ meaninglessly small ``batched_cold_s`` into the baseline.
 """
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -95,18 +106,20 @@ def _weibull_workload(n_points=12, n_trials=128, shape=0.7):
     return grid, Weibull(shape=shape), 60.0, 1500.0, n_trials
 
 
-def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
-    """Batched NON-exponential engine path vs the batched exponential path.
+def _time_weibull_step_engine_reference(n_points=12, n_trials=128,
+                                        shape=0.7, repeat=5):
+    """The RETAINED step kernel's Weibull-vs-exponential ratio (reference).
 
-    Runs ``sim.simulate_trajectories`` (the default event kernel) on the
-    same grid/trials twice — once with auto-sampled exponential schedules,
-    once with Weibull ones — and reports the within-run ratio.  The ratio
-    is what the CI gate watches (via the shared ``speedup_warm`` key): it
-    is machine-normalized, and it regresses exactly when the
-    non-exponential sampling/budget path bloats relative to the engine's
-    baseline cost.  (With the PR-3 step kernel this measured 0.32x — the
-    cv^2-scaled step budget made Weibull ~3x slower than exponential; the
-    event kernel's scan length scales with the failure count instead.)
+    Runs ``sim.simulate_trajectories`` with ``engine_kind="step"`` on the
+    canonical workload twice — exponential and Weibull auto-sampled
+    schedules — and reports the within-run ratio.  It reads ~0.3x BY
+    CONSTRUCTION: the step kernel's scan budget scales with the gap cv^2,
+    which is exactly the cost the event kernel (the default) erased; the
+    entry exists to keep that reference measurable, not to gate it.
+    Hence ``"ungated": True`` — ``check_regression`` skips it by design
+    (a glance at 0.3x used to read as a live regression of the hot path,
+    which it is not; the gated hot-path entries are
+    ``weibull_event_engine`` and ``mc_solver_warm``).
     """
     from repro.sim.engine import simulate_trajectories
 
@@ -115,11 +128,12 @@ def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
 
     def run_exp():
         return simulate_trajectories(T, grid, T_base, n_trials=n_trials,
-                                     seed=0)
+                                     seed=0, engine_kind="step")
 
     def run_weibull():
         return simulate_trajectories(T, grid, T_base, n_trials=n_trials,
-                                     seed=0, process=proc)
+                                     seed=0, process=proc,
+                                     engine_kind="step")
 
     t0 = time.perf_counter()
     run_weibull()
@@ -129,12 +143,10 @@ def _time_weibull_engine(n_points=12, n_trials=128, shape=0.7, repeat=5):
     exp_warm_s = _best_of(run_exp, repeat)
     return {"n_points": n_points, "n_trials": n_trials,
             "weibull_shape": shape,
+            "ungated": True,               # reference entry, by design
             "exp_warm_s": exp_warm_s,
             "batched_cold_s": weibull_cold_s,
             "batched_warm_s": weibull_warm_s,
-            # exponential-vs-weibull within-run ratio; gated like the other
-            # grids' speedups (a >2x drop = the new path got >2x slower
-            # relative to the exponential engine baseline).
             "speedup_warm": exp_warm_s / weibull_warm_s}
 
 
@@ -162,16 +174,17 @@ def _time_weibull_event_engine(n_points=12, n_trials=128, shape=0.7,
         return simulate_trajectories(T, grid, T_base, n_trials=n_trials,
                                      seed=0, process=proc)
 
-    # No cold figure here: _time_weibull_engine already compiled these
-    # exact programs, so a "cold" measurement in this entry would be
-    # warm-started ~30x too fast (weibull_engine.batched_cold_s is the
-    # honest compile cost of the same programs).
+    # The step reference entry compiled only step-kernel programs, so the
+    # first event call here is an honest cold measurement.
+    t0 = time.perf_counter()
     run_event()
+    event_cold_s = time.perf_counter() - t0
     event_warm_s = _best_of(run_event, repeat)
     scalar_s = _best_of(run_scalar, 1)     # the python loop needs no warmup
     return {"n_points": grid.size, "n_trials": n_trials,
             "weibull_shape": shape,
             "scalar_s": scalar_s,
+            "batched_cold_s": event_cold_s,
             "batched_warm_s": event_warm_s,
             "speedup_warm": scalar_s / event_warm_s}
 
@@ -213,6 +226,196 @@ def _time_mc_solver(repeat=3):
             "speedup_warm": step_warm_s / event_warm_s}
 
 
+#: cap on the sharded entry's GATED ratio: makes the committed baseline
+#: machine-portable (see _time_sharded_dense) — raising it requires a
+#: baseline machine whose capped value every CI runner can reach half of.
+_SHARDED_GATE_CAP = 2.0
+
+
+#: virtual devices for the sharded bench subprocess: one per core, capped
+#: at the acceptance target's 8 (oversubscribing cores with more virtual
+#: devices than hardware threads just measures scheduler noise).
+def _bench_device_count() -> int:
+    return max(1, min(8, os.cpu_count() or 1))
+
+
+_SHARDED_SCRIPT = r"""
+import os, sys, json, time
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=%(ndev)d "
+                           + os.environ.get("XLA_FLAGS", ""))
+sys.path.insert(0, r"%(src)s")
+import numpy as np
+import jax
+from repro.sim import DispatchConfig, ParamGrid, simulate_trajectories
+from repro.core import fig12_checkpoint, EXASCALE_POWER_RHO55
+from repro.core.failures import Weibull
+
+B, trials = 512, 128
+base = ParamGrid.from_params(fig12_checkpoint(300.0), EXASCALE_POWER_RHO55)
+mus = np.linspace(120.0, 600.0, B)
+grid = ParamGrid(**{f: (mus if f == "mu" else np.broadcast_to(v, (B,)))
+                    for f, v in base.fields().items()})
+kw = dict(T_base=1500.0, n_trials=trials, seed=0, process=Weibull(shape=0.7))
+single = DispatchConfig(shard=False)
+sharded = DispatchConfig()
+
+def best(fn, repeat=5):
+    b = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter(); fn(); b = min(b, time.perf_counter() - t0)
+    return b
+
+r1 = simulate_trajectories(60.0, grid, dispatch=single, **kw)   # compile
+r2 = simulate_trajectories(60.0, grid, dispatch=sharded, **kw)
+eq = bool(np.array_equal(r1.wall_time, r2.wall_time)
+          and np.array_equal(r1.energy, r2.energy))
+single_s = best(lambda: simulate_trajectories(60.0, grid, dispatch=single,
+                                              **kw))
+sharded_s = best(lambda: simulate_trajectories(60.0, grid, dispatch=sharded,
+                                               **kw))
+print(json.dumps({"n_devices": jax.device_count(), "bit_equal": eq,
+                  "n_points": B, "n_trials": trials,
+                  "single_warm_s": single_s, "sharded_warm_s": sharded_s}))
+"""
+
+
+def _time_sharded_dense():
+    """Sharded vs single-device dense MC-engine grid sweep on virtual CPU
+    devices.
+
+    Runs in a subprocess (the device count must be fixed before jax
+    initializes) with one virtual device per core (<= 8) — the scan-heavy
+    engine sweep is where device sharding is the real parallelism lever
+    (the elementwise model sweep is already saturated by XLA:CPU's
+    intra-op threading on a CPU host).  The subprocess asserts sharded ==
+    single-device bit parity on the full result.  Note: virtual devices
+    SHARE the host's cores (and its intra-op thread pool), so the
+    measured speedup tracks physical cores, not the virtual device
+    count; dedicated-accelerator hosts see the near-linear version of
+    the same dispatch.
+
+    The raw single/sharded ratio scales with the host's PHYSICAL cores
+    (and per-unit efficiency falls as units rise), so gating either
+    quantity raw against a committed baseline from a different machine
+    class can fail CI for core-count reasons alone.  The gated
+    ``speedup_warm`` is therefore the raw ratio CAPPED at
+    ``_SHARDED_GATE_CAP`` (2.0): any healthy multi-core host clears the
+    cap's half-way mark (failing requires sharding to be actively slower
+    than single-device — a genuine dispatch-overhead regression), while
+    a many-core machine regenerating the baseline can never raise the
+    bar above the cap.  The uncapped ratio is recorded as
+    ``sharded_speedup`` alongside n_devices/n_cores.
+    """
+    ndev = _bench_device_count()
+    script = _SHARDED_SCRIPT % {"ndev": ndev, "src": str(ROOT / "src")}
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed:\n"
+                           f"{out.stderr[-3000:]}")
+    r = json.loads(out.stdout.strip().splitlines()[-1])
+    assert r["bit_equal"], "sharded sweep diverged from single-device"
+    ratio = r["single_warm_s"] / r["sharded_warm_s"]
+    return {"n_points": r["n_points"], "n_trials": r["n_trials"],
+            "n_devices": r["n_devices"], "n_cores": os.cpu_count(),
+            "single_warm_s": r["single_warm_s"],
+            "batched_warm_s": r["sharded_warm_s"],
+            "sharded_speedup": ratio,
+            "speedup_warm": min(ratio, _SHARDED_GATE_CAP)}
+
+
+def _time_chunked_dense_1m(repeat=2):
+    """10^6-point dense sweep, streamed under the 2 GiB memory budget.
+
+    The chunked run (default budget -> two 512k-point chunks at the
+    4 KiB/point model estimate) must be bit-identical to the unchunked
+    single-dispatch run; the gated ratio unchunked/chunked (~1x) watches
+    for chunking overhead creeping in.
+    """
+    import numpy as np
+
+    from repro.sim import DispatchConfig, evaluate_grid, mu_rho_grid
+
+    grid = mu_rho_grid(list(np.linspace(30.0, 600.0, 1000)),
+                       list(np.linspace(1.0, 10.0, 1000)))
+    unchunked = DispatchConfig(shard=False, memory_budget_bytes=1 << 40)
+    chunked = DispatchConfig(shard=False)    # default 2 GiB budget
+
+    t0 = time.perf_counter()
+    ref = evaluate_grid(grid, dispatch=chunked)
+    cold_s = time.perf_counter() - t0
+    out = evaluate_grid(grid, dispatch=unchunked)
+    for f in ("T_time", "T_energy", "time_ratio", "energy_ratio"):
+        a, b = np.asarray(getattr(ref, f)), np.asarray(getattr(out, f))
+        assert np.array_equal(a, b, equal_nan=True), \
+            f"chunked 1M sweep diverged from unchunked on {f}"
+    chunked_s = _best_of(lambda: evaluate_grid(grid, dispatch=chunked),
+                         repeat)
+    unchunked_s = _best_of(lambda: evaluate_grid(grid, dispatch=unchunked),
+                           repeat)
+    return {"n_points": 1_000_000,
+            "memory_budget_bytes": DispatchConfig().budget(),
+            "unchunked_warm_s": unchunked_s,
+            "batched_cold_s": cold_s,
+            "batched_warm_s": chunked_s,
+            "speedup_warm": unchunked_s / chunked_s}
+
+
+_COLD_START_SCRIPT = r"""
+import os, sys, time
+sys.path.insert(0, r"%(src)s")
+import numpy as np
+from repro.sim import enable_compile_cache
+enable_compile_cache(r"%(cache)s")
+from repro.sim import mu_rho_grid, evaluate_grid, ParamGrid, \
+    simulate_trajectories
+from repro.core import fig12_checkpoint, EXASCALE_POWER_RHO55
+from repro.core.failures import Weibull
+
+t0 = time.perf_counter()
+evaluate_grid(mu_rho_grid([30, 60, 90, 120, 180, 240, 300, 420, 600],
+                          list(np.linspace(1.0, 10.0, 10))))
+base = ParamGrid.from_params(fig12_checkpoint(300.0), EXASCALE_POWER_RHO55)
+mus = np.linspace(120.0, 600.0, 12)
+grid = ParamGrid(**{f: (mus if f == "mu" else np.broadcast_to(v, (12,)))
+                    for f, v in base.fields().items()})
+simulate_trajectories(60.0, grid, 1500.0, n_trials=128, seed=0,
+                      process=Weibull(shape=0.7))
+print("COLD_S", time.perf_counter() - t0)
+"""
+
+
+def _time_cold_start_cached():
+    """Persistent-compile-cache cold start: two fresh interpreters, one
+    cache directory.
+
+    The first run compiles everything and populates the cache; the second
+    pays tracing/lowering but loads the serialized executables.  The
+    gated ratio uncached/cached is the once-per-machine-vs-once-per-
+    process compile story (``repro.sim.cache``); it is measured entirely
+    inside the subprocesses (jax import time excluded).
+    """
+    def one(cache_dir):
+        script = _COLD_START_SCRIPT % {"src": str(ROOT / "src"),
+                                       "cache": cache_dir}
+        out = subprocess.run([sys.executable, "-c", script],
+                             capture_output=True, text=True, timeout=1200)
+        if out.returncode != 0:
+            raise RuntimeError(f"cold-start subprocess failed:\n"
+                               f"{out.stderr[-3000:]}")
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("COLD_S")][-1]
+        return float(line.split()[1])
+
+    with tempfile.TemporaryDirectory(prefix="repro-compile-cache-") as d:
+        uncached_s = one(d)      # populates the cache
+        cached_s = one(d)        # second process: cache hits
+    return {"cold_uncached_s": uncached_s,
+            "batched_cold_s": cached_s,
+            "batched_warm_s": cached_s,
+            "speedup_warm": uncached_s / cached_s}
+
+
 def run(write: bool = True):
     import numpy as np
 
@@ -221,17 +424,23 @@ def run(write: bool = True):
     dense_grid = _time_pair(list(np.linspace(30.0, 600.0, 96)),
                             list(np.linspace(1.0, 10.0, 100)),
                             scalar_repeat=1, batched_repeat=3)
-    weibull_engine = _time_weibull_engine()
+    weibull_step_ref = _time_weibull_step_engine_reference()
     weibull_event_engine = _time_weibull_event_engine()
     mc_solver_warm = _time_mc_solver()
+    chunked_dense_1m = _time_chunked_dense_1m()
+    sharded_dense_grid = _time_sharded_dense()
+    cold_start_cached = _time_cold_start_cached()
     payload = {
         "benchmark": "fig2_mu_rho_sweep",
         "unit": "seconds",
         "fig2_seed_grid": seed_grid,
         "dense_grid": dense_grid,
-        "weibull_engine": weibull_engine,
+        "weibull_step_engine_reference": weibull_step_ref,
         "weibull_event_engine": weibull_event_engine,
         "mc_solver_warm": mc_solver_warm,
+        "sharded_dense_grid": sharded_dense_grid,
+        "chunked_dense_1m": chunked_dense_1m,
+        "cold_start_cached": cold_start_cached,
     }
     if write:
         with open(CANONICAL, "w") as f:
@@ -254,11 +463,14 @@ def write_timing_table(payload: dict, path=None) -> str:
         if not (isinstance(entry, dict) and "speedup_warm" in entry):
             continue
         ref = next((entry[k] for k in ("scalar_s", "exp_warm_s",
-                                       "step_warm_s") if k in entry),
+                                       "step_warm_s", "single_warm_s",
+                                       "unchunked_warm_s",
+                                       "cold_uncached_s") if k in entry),
                    float("nan"))
         cold = entry.get("batched_cold_s")
+        tag = " (ungated ref)" if entry.get("ungated") else ""
         lines.append(
-            f"| {grid} | {'—' if cold is None else format(cold, '.4g')} "
+            f"| {grid}{tag} | {'—' if cold is None else format(cold, '.4g')} "
             f"| {entry['batched_warm_s']:.4g} | {ref:.4g} "
             f"| {entry['speedup_warm']:.2f}x |")
     text = "\n".join(lines) + "\n"
@@ -278,9 +490,16 @@ def check_regression(baseline: dict, payload: dict,
     denominators and passes, while a real batched-path regression drops
     the speedup and fails.  Pure comparison (no timing) so the CI gate
     logic is unit-testable.
+
+    Entries carrying ``"ungated": true`` are reference measurements
+    excluded from the gate BY DESIGN (in both directions) — e.g.
+    ``weibull_step_engine_reference``, which reads ~0.3x by construction
+    because it measures the retained step kernel the event kernel
+    replaced.
     """
     def gated(entry) -> bool:
-        return isinstance(entry, dict) and "speedup_warm" in entry
+        return (isinstance(entry, dict) and "speedup_warm" in entry
+                and not entry.get("ungated"))
 
     regressions = []
     # The gate set must match in BOTH directions.  A grid the committed
@@ -326,17 +545,20 @@ def main(argv=None):
     wrote = not (args.check or args.no_write)
     payload = run(write=wrote)
     table = write_timing_table(payload)
-    s, d, w, ev, mc = (payload["fig2_seed_grid"], payload["dense_grid"],
-                       payload["weibull_engine"],
-                       payload["weibull_event_engine"],
-                       payload["mc_solver_warm"])
+    s, d, ev, mc = (payload["fig2_seed_grid"], payload["dense_grid"],
+                    payload["weibull_event_engine"],
+                    payload["mc_solver_warm"])
+    sh, ch, cc = (payload["sharded_dense_grid"],
+                  payload["chunked_dense_1m"],
+                  payload["cold_start_cached"])
     emit("bench_sweep", s["batched_warm_s"] * 1e6,
          f"fig2 {s['n_points']}pts speedup={s['speedup_warm']:.1f}x; "
          f"dense {d['n_points']}pts speedup={d['speedup_warm']:.1f}x; "
-         f"weibull engine {w['n_points']}x{w['n_trials']} "
-         f"exp/weibull={w['speedup_warm']:.2f}x; "
          f"event vs scalar={ev['speedup_warm']:.1f}x; "
-         f"mc solver step/event={mc['speedup_warm']:.1f}x "
+         f"mc solver step/event={mc['speedup_warm']:.1f}x; "
+         f"sharded x{sh['n_devices']}dev={sh['speedup_warm']:.2f}x; "
+         f"chunked 1M={ch['speedup_warm']:.2f}x; "
+         f"cold-start cached={cc['speedup_warm']:.2f}x "
          + (f"-> BENCH_sweep.json + {table}" if wrote
             else f"-> {table} (baseline untouched)"))
 

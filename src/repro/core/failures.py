@@ -134,9 +134,13 @@ class FailureProcess:
         constants; ``mean`` may be a traced array (one mean per grid
         point, ``_lead``-aligned by the caller or broadcastable).
 
-        Subclasses without a jax sampler inherit this ``NotImplementedError``
-        and the engine falls back to host numpy sampling — new processes
-        work immediately, just without the on-device fast path.
+        The engine's auto-sampling ladder: :meth:`traced_sampler` (the
+        fused per-(point, trial) dispatch path) first, then this bulk
+        sampler (one whole-grid device draw), then host numpy.
+        Subclasses without any jax sampler inherit this
+        ``NotImplementedError`` and the engine falls back to host numpy
+        sampling — new processes work immediately, just without the
+        on-device fast paths.
         """
         raise NotImplementedError(f"{self.name}: no device sampler")
 
@@ -144,6 +148,27 @@ class FailureProcess:
         """Hashable identity of the process (class + parameters) — keys the
         engine's jit cache of compiled device samplers."""
         return (type(self).__name__, _param_token(self.mu))
+
+    def traced_sampler(self):
+        """``(token, params, fn)``: the device sampler with every
+        distribution parameter TRACED instead of baked as a constant.
+
+        ``params`` is a tuple of per-grid-point parameter arrays (each
+        broadcastable against the raveled grid) and ``fn(key, size, mean,
+        params)`` draws ``size`` gaps on device where ``mean`` and every
+        element of ``params`` may be traced scalars (the engine vmaps
+        ``fn`` over grid points).  Because the parameter values enter as
+        arguments, one compiled program serves every chunk/shard slice of
+        a grid — this is what makes the dispatch layer's chunking free of
+        per-chunk recompiles for array-parameterized processes.
+
+        ``token`` is the hashable identity of the *static* part of the
+        sampler (class + non-array configuration) — the jit cache key.
+        Subclasses without a jax sampler inherit this
+        ``NotImplementedError`` and the engine falls back to host numpy
+        sampling.
+        """
+        raise NotImplementedError(f"{self.name}: no device sampler")
 
     def hazard(self, t: ArrayLike, mean: Optional[ArrayLike] = None):
         """Instantaneous failure rate h(t) at gap-age ``t``."""
@@ -204,6 +229,15 @@ class Exponential(FailureProcess):
         m = self._device_mean(mean, size)
         return m * jax.random.exponential(key, size, dtype=jnp.float64)
 
+    def traced_sampler(self):
+        import jax
+        import jax.numpy as jnp
+
+        def fn(key, size, mean, params):
+            return mean * jax.random.exponential(key, size,
+                                                 dtype=jnp.float64)
+        return ("exponential",), (), fn
+
     def ravel(self) -> "Exponential":
         return dataclasses.replace(
             self, mu=None if self.mu is None else np.ravel(self.mu))
@@ -257,6 +291,18 @@ class Weibull(FailureProcess):
         return (type(self).__name__, _param_token(self.shape),
                 _param_token(self.mu))
 
+    def traced_sampler(self):
+        import jax
+        import jax.numpy as jnp
+        k = np.asarray(self.shape, dtype=np.float64)
+        inv_gamma = 1.0 / np.asarray(_gamma1p(1.0 / k), dtype=np.float64)
+
+        def fn(key, size, mean, params):
+            kk, ig = params
+            e = jax.random.exponential(key, size, dtype=jnp.float64)
+            return mean * ig * e ** (1.0 / kk)
+        return ("weibull",), (k, inv_gamma), fn
+
     def gap_cv(self):
         k = np.asarray(self.shape, dtype=np.float64)
         g1 = _gamma1p(1.0 / k)
@@ -306,6 +352,17 @@ class LogNormal(FailureProcess):
     def cache_token(self):
         return (type(self).__name__, _param_token(self.sigma),
                 _param_token(self.mu))
+
+    def traced_sampler(self):
+        import jax
+        import jax.numpy as jnp
+        sigma = np.asarray(self.sigma, dtype=np.float64)
+
+        def fn(key, size, mean, params):
+            (s,) = params
+            z = jax.random.normal(key, size, dtype=jnp.float64)
+            return jnp.exp(jnp.log(mean) - 0.5 * s * s + s * z)
+        return ("lognormal",), (sigma,), fn
 
     def gap_cv(self):
         s = np.asarray(self.sigma, dtype=np.float64)
@@ -393,6 +450,25 @@ class TraceReplay(FailureProcess):
 
     def cache_token(self):
         return (type(self).__name__, self.gaps, self.rescale)
+
+    def traced_sampler(self):
+        import jax
+        import jax.numpy as jnp
+        trace = np.asarray(self.gaps, dtype=np.float64)
+        n = trace.size
+        trace_mu = float(self.mu)
+        rescale = self.rescale
+
+        def fn(key, size, mean, params):
+            tr = jnp.asarray(trace)
+            start = jax.random.randint(key, size[:-1] + (1,), 0, n)
+            idx = (start + jnp.arange(size[-1])) % n
+            # mean arrives pre-resolved (resolve_mean), so with
+            # rescale=False it already equals the trace mean and the
+            # static 1.0 below is exact, not an approximation.
+            scale = mean / trace_mu if rescale else 1.0
+            return jnp.broadcast_to(tr[idx] * scale, size)
+        return ("trace", self.gaps, self.rescale), (), fn
 
     def iter_gaps(self, rng, mean=None):
         """Cyclic replay from one uniformly random starting offset — the

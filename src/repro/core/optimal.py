@@ -401,12 +401,17 @@ class MCSurrogate:
     def __init__(self, ckpt: CheckpointParams, power: PowerParams,
                  process: Optional[FailureProcess] = None,
                  T_base: Optional[float] = None, n_trials: int = 160,
-                 seed: int = 0, engine_kind: str = "event"):
+                 seed: int = 0, engine_kind: str = "event",
+                 dispatch=None):
         from ..sim import engine as _engine
         from ..sim.scenarios import ParamGrid
         self.ckpt, self.power = ckpt, power
         self.process = as_process(process)
         self.engine_kind = engine_kind
+        #: sim.dispatch.DispatchConfig routing every engine call (None =
+        #: environment defaults); with several local devices the candidate
+        #: axis of each evaluation is sharded across them.
+        self.dispatch = dispatch
         lo, hi = _bracket(ckpt)
         t_ref = t_opt_time_ex(ckpt).T
         # Search range: generous decades around the exponential optimum, but
@@ -450,7 +455,8 @@ class MCSurrogate:
         Ts = np.atleast_1d(np.asarray(Ts, dtype=np.float64))
         tb = self._engine.simulate_candidates(
             Ts, self._grid1, self.T_base, gaps=self._gaps,
-            n_steps=self._n_steps, engine_kind=self.engine_kind)
+            n_steps=self._n_steps, engine_kind=self.engine_kind,
+            dispatch=self.dispatch)
         if tb.truncated.any():
             raise RuntimeError("MC surrogate: scan budget exceeded — "
                                "candidate period too close to the bracket "
@@ -490,7 +496,8 @@ def t_opt_time_mc(ckpt: CheckpointParams,
                   process: Optional[FailureProcess] = None,
                   power: Optional[PowerParams] = None,
                   T_base: Optional[float] = None, n_trials: int = 160,
-                  seed: int = 0, engine_kind: str = "event") -> float:
+                  seed: int = 0, engine_kind: str = "event",
+                  dispatch=None) -> float:
     """Time-optimal period under an arbitrary failure process (MC surrogate).
 
     With the default exponential process this converges to AlgoT's closed
@@ -498,27 +505,31 @@ def t_opt_time_mc(ckpt: CheckpointParams,
     """
     power = power or PowerParams(P_static=1.0, P_cal=0.0, P_io=0.0)
     return MCSurrogate(ckpt, power, process, T_base, n_trials, seed,
-                       engine_kind=engine_kind).argmin("time")
+                       engine_kind=engine_kind,
+                       dispatch=dispatch).argmin("time")
 
 
 def t_opt_energy_mc(ckpt: CheckpointParams, power: PowerParams,
                     process: Optional[FailureProcess] = None,
                     T_base: Optional[float] = None, n_trials: int = 160,
-                    seed: int = 0, engine_kind: str = "event") -> float:
+                    seed: int = 0, engine_kind: str = "event",
+                    dispatch=None) -> float:
     """Energy-optimal period under an arbitrary failure process."""
     return MCSurrogate(ckpt, power, process, T_base, n_trials, seed,
-                       engine_kind=engine_kind).argmin("energy")
+                       engine_kind=engine_kind,
+                       dispatch=dispatch).argmin("energy")
 
 
 def mc_evaluate_periods(Ts: Sequence[float], ckpt: CheckpointParams,
                         power: PowerParams,
                         process: Optional[FailureProcess] = None,
                         T_base: Optional[float] = None, n_trials: int = 160,
-                        seed: int = 0, engine_kind: str = "event") -> dict:
+                        seed: int = 0, engine_kind: str = "event",
+                        dispatch=None) -> dict:
     """Mean wall time / energy at each candidate period under ``process``
     (one CRN schedule set shared by all candidates — fair comparisons)."""
     return MCSurrogate(ckpt, power, process, T_base, n_trials, seed,
-                       engine_kind=engine_kind)(Ts)
+                       engine_kind=engine_kind, dispatch=dispatch)(Ts)
 
 
 # --------------------------------------------------------------------------

@@ -7,11 +7,24 @@ Layers:
               phase machine, vmapped over trials and parameter batches.
   sweep     — batched closed-form model + period solvers (AlgoT/AlgoE/Young/
               Daly/MSK) evaluated for a whole grid in a few jitted calls.
+  dispatch  — the sharded, memory-bounded execution layer every grid entry
+              point routes through: multi-device grid sharding (1-D sweep
+              mesh), streaming chunker bounded by a device-memory budget,
+              and bounded compiled-runner caches.  All knobs are pure
+              performance knobs — a fixed seed's results never change.
+  cache     — persistent XLA compilation-cache wiring (cold-start compile
+              paid once per machine, not once per process); auto-enabled
+              when ``$REPRO_COMPILE_CACHE`` is set.
 
 The scalar ``repro.core.simulator.simulate_once`` remains the reference
 oracle; ``tests/test_sim_engine.py`` pins the batched engine to it
-trajectory-for-trajectory under a shared failure schedule.
+trajectory-for-trajectory, and ``tests/test_dispatch.py`` pins the
+sharded/chunked execution paths to the single-device single-chunk results
+bit-for-bit.
 """
+from .cache import (enable_compile_cache, maybe_enable_from_env,
+                    active_cache_dir)
+from .dispatch import DispatchConfig, default_config, sweep_mesh
 from .scenarios import (ParamGrid, Scenario, MultilevelParamGrid,
                         MultilevelScenario, get_scenario, list_scenarios,
                         register_scenario, mu_rho_grid, nodes_grid,
@@ -35,3 +48,7 @@ from .sweep import (GridResult, MultilevelGridResult, RobustnessResult,
                     time_final_batched, energy_final_batched,
                     ml_time_final_batched, ml_energy_final_batched,
                     sweep_rho_grid, sweep_mu_rho_grid, sweep_nodes_grid)
+
+# Persistent compile cache: opt-in via $REPRO_COMPILE_CACHE (no-op
+# otherwise; see sim/cache.py).
+maybe_enable_from_env()

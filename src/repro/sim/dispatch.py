@@ -1,0 +1,358 @@
+"""Sharded, memory-bounded dispatch for grid workloads.
+
+Every batched grid entry point (the model sweeps in ``sim.sweep``, the
+Monte-Carlo engine in ``sim.engine``, and through them the MC solvers in
+``core.optimal``) routes its jitted calls through :func:`run`, which adds
+two orthogonal execution knobs on top of a plain ``jax.jit`` call:
+
+sharding
+    A 1-D ``"sweep"`` mesh over the local devices; the designated grid
+    axis of every array argument is split across devices with
+    ``shard_map`` (the same virtual-device CI recipe as
+    ``tests/test_sharded_execution.py``:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  Grids that
+    do not divide the device count are padded by edge replication to a
+    shard-divisible size, and the padding is sliced off before any
+    caller-side reduction can see it.
+
+chunking
+    The grid axis is cut into bounded chunks sized from a device-memory
+    budget (``memory_budget_bytes`` / ``per_point_bytes``), results
+    accumulating host-side — a dense 10^6-point grid streams through a
+    fixed-size device working set instead of materializing everything at
+    once.  Chunk shapes are ``ndev * 2^k`` so the jit cache stays at
+    O(log) compiled programs.
+
+Both knobs are PURE performance knobs: dispatch itself never touches
+randomness, every per-point computation is independent (no cross-point
+reductions happen on device), and the MC callers sample their failure
+schedules from per-(grid-point, trial) folded keys at a partition-
+independent capacity (see ``engine``), so chunk size, shard count, and
+memory budget never change a fixed seed's results — chunked == unchunked
+and sharded == single-device bit-for-bit (``tests/test_dispatch.py``).
+
+Configuration resolves from :class:`DispatchConfig` (explicit argument)
+or environment variables::
+
+    REPRO_SWEEP_DEVICES    max devices to shard over (1 disables sharding)
+    REPRO_SWEEP_MEMORY_MB  device-memory budget per dispatch (default 2048)
+    REPRO_SWEEP_CHUNK      explicit grid-axis chunk size (overrides budget)
+
+See docs/simulation.md "Scaling out" for the operational recipe.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import math
+import os
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # newer jax re-exports the x64 context at top level
+    from jax import enable_x64
+except ImportError:
+    from jax.experimental import enable_x64
+
+try:  # jax >= 0.5 promotes shard_map out of experimental
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+#: default device-memory budget per dispatch (bytes).
+DEFAULT_MEMORY_BUDGET = 2 << 30
+
+#: mesh axis name of the 1-D sweep mesh.
+SWEEP_AXIS = "sweep"
+
+#: bound on cached compiled runners (see :class:`LRUCache`).
+RUNNER_CACHE_SIZE = 64
+
+
+class LRUCache:
+    """Tiny LRU map bounding caches of compiled callables.
+
+    A long-lived sweep service creates one compiled program per distinct
+    (semantic key, chunk shape, device count); an unbounded dict leaks
+    them forever.  Eviction only drops the *cached callable* — a later
+    call with the same key rebuilds and recompiles it, producing
+    identical results (tested) at the price of one recompile.
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = int(maxsize)
+        self._d: collections.OrderedDict = collections.OrderedDict()
+
+    def get(self, key):
+        try:
+            val = self._d.pop(key)
+        except KeyError:
+            return None
+        self._d[key] = val            # re-insert as most recently used
+        return val
+
+    def put(self, key, val):
+        self._d.pop(key, None)
+        self._d[key] = val
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def clear(self):
+        self._d.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Execution knobs for :func:`run` (all pure performance knobs).
+
+    ``devices`` caps the devices sharded over (None = all local devices);
+    ``memory_budget_bytes`` bounds the per-dispatch device working set
+    (None = ``$REPRO_SWEEP_MEMORY_MB`` or 2 GiB); ``chunk`` forces an
+    explicit grid-axis chunk size (rounded up to a device multiple);
+    ``shard=False`` disables the mesh entirely.
+    """
+
+    devices: Optional[int] = None
+    memory_budget_bytes: Optional[int] = None
+    chunk: Optional[int] = None
+    shard: bool = True
+
+    def budget(self) -> int:
+        if self.memory_budget_bytes is not None:
+            return int(self.memory_budget_bytes)
+        mb = _env_int("REPRO_SWEEP_MEMORY_MB")
+        return mb << 20 if mb else DEFAULT_MEMORY_BUDGET
+
+
+def _env_int(name: str):
+    """Parse an optional integer env knob; a malformed value degrades to
+    a warning + default instead of crashing every grid entry point from
+    deep inside a sweep (same contract as ``cache.maybe_enable_from_env``
+    — opt-in performance knobs must not become hard crashes)."""
+    raw = os.environ.get(name)
+    if not raw:
+        return None
+    try:
+        return int(raw)
+    except ValueError:
+        import warnings
+        warnings.warn(f"{name}={raw!r} is not an integer; ignoring it",
+                      RuntimeWarning, stacklevel=3)
+        return None
+
+
+def default_config() -> DispatchConfig:
+    """The environment-driven config (see module docstring)."""
+    return DispatchConfig(devices=_env_int("REPRO_SWEEP_DEVICES"),
+                          chunk=_env_int("REPRO_SWEEP_CHUNK"))
+
+
+def resolve(config: Optional[DispatchConfig]) -> DispatchConfig:
+    return config if config is not None else default_config()
+
+
+def effective_devices(config: Optional[DispatchConfig] = None) -> int:
+    """Devices the sweep mesh will span under ``config`` (>= 1)."""
+    cfg = resolve(config)
+    if not cfg.shard:
+        return 1
+    n = len(jax.devices())
+    if cfg.devices is not None:
+        n = min(n, max(1, int(cfg.devices)))
+    return max(1, n)
+
+
+@functools.lru_cache(maxsize=None)
+def sweep_mesh(n_devices: int) -> Mesh:
+    """The 1-D ``("sweep",)`` mesh over the first ``n_devices`` devices."""
+    return Mesh(np.array(jax.devices()[:n_devices]), (SWEEP_AXIS,))
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+def chunk_plan(size: int, ndev: int, per_point_bytes: int,
+               config: Optional[DispatchConfig] = None,
+               quantum: int = 1) -> list:
+    """Cut a grid axis of ``size`` into ``(start, stop, padded)`` chunks.
+
+    Full chunks share one shape (a pow2 multiple of both the device count
+    and ``quantum``, sized from the memory budget); the tail is padded up
+    to its own such multiple — O(log) distinct shapes total.  ``padded ==
+    stop - start`` whenever no padding is needed (the single-device
+    whole-grid fast path compiles at the exact grid size, like a plain
+    jit call).
+
+    ``quantum`` forces every dispatched shape to a multiple of a fixed
+    lane count.  XLA:CPU's codegen is shape-dependent at small/ragged
+    batch extents (loop unrolling and scalar remainder lanes contract
+    multiply-adds differently, shifting results by ~1 ulp), so callers
+    whose kernels are sensitive to it (the dense elementwise model sweep)
+    pin a quantum to make every chunk run the same vectorized loop body —
+    that is what upgrades chunk/shard knobs from "approximately neutral"
+    to bit-exact no-ops for those paths (tests/test_dispatch.py).
+    """
+    cfg = resolve(config)
+    size = int(size)
+    q = math.lcm(max(1, int(ndev)), max(1, int(quantum)))
+    if cfg.chunk is not None:
+        base = ((max(1, int(cfg.chunk)) + q - 1) // q) * q
+    elif per_point_bytes and per_point_bytes > 0:
+        target = max(1, cfg.budget() // int(per_point_bytes))
+        base = q * max(1, _pow2ceil(target // q + 1) // 2)  # pow2 floor
+    else:
+        base = ((size + q - 1) // q) * q  # no estimate: one chunk
+    if base >= size:
+        padded = size if q == 1 else ((size + q - 1) // q) * q
+        return [(0, size, padded)]
+    plan = []
+    for start in range(0, size, base):
+        stop = min(start + base, size)
+        rem = stop - start
+        padded = rem if rem == base else min(base, q * _pow2ceil(
+            (rem + q - 1) // q))
+        plan.append((start, stop, padded))
+    return plan
+
+
+def _slice_pad(arr, axis: int, start: int, stop: int, padded: int):
+    """Slice ``[start:stop)`` along ``axis`` and edge-replicate the last
+    element up to ``padded`` (numpy or device arrays; device stays put).
+
+    Padding lanes recompute the final grid point and are sliced off by
+    :func:`run` before results reach the caller — never part of any
+    reduction.
+    """
+    xp = jnp if isinstance(arr, jnp.ndarray) else np
+    idx = [slice(None)] * arr.ndim
+    idx[axis] = slice(start, stop)
+    sl = arr[tuple(idx)]
+    pad = padded - (stop - start)
+    if pad > 0:
+        idx[axis] = slice(-1, None)
+        tail = xp.repeat(sl[tuple(idx)], pad, axis=axis)
+        sl = xp.concatenate([sl, tail], axis=axis)
+    return sl
+
+
+def _out_spec_tree(out_axes):
+    """out_axes (int, or a pytree of ints matching the output structure)
+    -> shard_map out_specs (a PartitionSpec prefix tree)."""
+    spec = lambda a: P(*([None] * int(a) + [SWEEP_AXIS]))
+    if isinstance(out_axes, int):
+        return spec(out_axes)
+    return jax.tree.map(spec, out_axes)
+
+
+def _freeze(obj):
+    """Hashable form of an out_axes pytree for the runner cache key."""
+    if isinstance(obj, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in obj.items()))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    return obj
+
+
+_RUNNERS = LRUCache(RUNNER_CACHE_SIZE)
+
+
+def _runner_for(key, build, ndev: int, in_axes: Sequence[Optional[int]],
+                out_axes):
+    """The compiled runner for ``key`` on ``ndev`` devices: a plain jit of
+    ``build`` (single device) or a shard_map over the sweep mesh.
+
+    ``key`` is the caller's semantic identity of ``build`` — it must
+    capture everything baked into the closure (kernel, scan length,
+    process, capacities).  jit handles per-shape compilation internally,
+    so the cache is per (key, ndev), not per chunk shape.
+    """
+    ck = (key, ndev, tuple(in_axes), _freeze(out_axes))
+    fn = _RUNNERS.get(ck)
+    if fn is not None:
+        return fn
+    if ndev == 1:
+        fn = jax.jit(build)
+    else:
+        in_specs = tuple(
+            P() if ax is None else P(*([None] * int(ax) + [SWEEP_AXIS]))
+            for ax in in_axes)
+        fn = jax.jit(shard_map(build, mesh=sweep_mesh(ndev),
+                               in_specs=in_specs,
+                               out_specs=_out_spec_tree(out_axes),
+                               check_rep=False))
+    _RUNNERS.put(ck, fn)
+    return fn
+
+
+def run(key, build, args, in_axes: Sequence[Optional[int]], out_axes,
+        size: int, per_point_bytes: int = 0,
+        config: Optional[DispatchConfig] = None, quantum: int = 1):
+    """Dispatch ``build(*args)`` over a grid axis: sharded across the sweep
+    mesh, chunked to the memory budget, accumulated host-side.
+
+    ``in_axes[i]`` is the grid-axis position in ``args[i]`` (None =
+    broadcast verbatim to every chunk/shard); every marked axis must have
+    length ``size``.  ``out_axes`` gives the grid-axis position in the
+    outputs (an int for all leaves, or a pytree of ints matching the
+    output structure).  ``key`` must uniquely identify the semantics of
+    ``build`` (closure contents included) — it keys the compiled-runner
+    cache.  Returns host numpy arrays in the output structure, the grid
+    axis restored to ``size``.
+    """
+    cfg = resolve(config)
+    ndev = effective_devices(cfg)
+    plan = chunk_plan(size, ndev, per_point_bytes, cfg, quantum=quantum)
+    runner = _runner_for(key, build, ndev, in_axes, out_axes)
+
+    with enable_x64():
+        # Broadcast args: convert once (device arrays stay put — a parked
+        # CRN schedule must not round-trip through the host per chunk).
+        const = [None if ax is not None
+                 else (a if isinstance(a, jnp.ndarray)
+                       else jnp.asarray(np.asarray(a)))
+                 for a, ax in zip(args, in_axes)]
+        treedef = None
+        flat_axes = None
+        bufs = None
+        for start, stop, padded in plan:
+            chunk_args = [
+                const[i] if ax is None
+                else _slice_pad(args[i], ax, start, stop, padded)
+                for i, ax in enumerate(in_axes)]
+            out = runner(*chunk_args)
+            leaves, tdef = jax.tree.flatten(out)
+            if treedef is None:
+                treedef = tdef
+                flat_axes = (jax.tree.leaves(out_axes)
+                             if not isinstance(out_axes, int)
+                             else [out_axes] * len(leaves))
+                if len(flat_axes) == 1 and len(leaves) > 1:
+                    flat_axes = flat_axes * len(leaves)
+                if len(plan) == 1 and padded == size:
+                    return tdef.unflatten([np.asarray(v) for v in leaves])
+                bufs = []
+                for leaf, ax in zip(leaves, flat_axes):
+                    shp = list(np.shape(leaf))
+                    shp[ax] = size
+                    bufs.append(np.empty(shp, dtype=np.asarray(leaf).dtype))
+            for leaf, ax, buf in zip(leaves, flat_axes, bufs):
+                arr = np.asarray(leaf)
+                sel = [slice(None)] * arr.ndim
+                sel[ax] = slice(0, stop - start)      # drop padding lanes
+                dst = [slice(None)] * arr.ndim
+                dst[ax] = slice(start, stop)
+                buf[tuple(dst)] = arr[tuple(sel)]
+    return treedef.unflatten(bufs)

@@ -65,14 +65,30 @@ the same gaps to the scalar oracle via :class:`ScheduledRNG` reproduces
 trajectories bit-for-bit — the parity tests rely on this.
 
 Schedules come from one of two samplers: :func:`presample_gaps` (host
-numpy, the CRN solvers' replayable schedules) or
-:func:`presample_gaps_device` (jax-native threefry sampling via
-``FailureProcess.sample_gaps`` — the default auto-sampling path, which
-never materializes the ``(B, n_trials, capacity)`` tensor on the host nor
-pays a per-call host->device transfer).  Budgets are per-grid-point and
-bucketed to powers of two (:func:`fail_capacity_points` /
-:func:`step_budget_points`): mixed-mu grids are dispatched bucket by
-bucket so cheap points no longer pay the most fragile point's scan length.
+numpy, the CRN solvers' replayable schedules) or — the default
+auto-sampling path — per-(grid point, trial) folded threefry keys fed to
+``FailureProcess.traced_sampler`` *inside* each dispatch chunk, so the
+``(B, n_trials, capacity)`` tensor never exists on the host, never pays a
+per-call host->device transfer, and (because every (point, trial) pair
+owns its key and the sampling capacity is the grid-wide max, a
+partition-independent quantity) is bit-identical under every way of
+cutting the work.  Budgets are per-grid-point and bucketed to powers of
+two (:func:`fail_capacity_points` / :func:`step_budget_points`): mixed-mu
+grids are dispatched bucket by bucket so cheap points no longer pay the
+most fragile point's scan length.
+
+Every single-level jitted call routes through :mod:`repro.sim.dispatch` —
+multi-device grid-axis sharding over the 1-D sweep mesh, streaming chunks
+bounded by a device-memory budget, trial-axis blocking, and LRU-bounded
+compiled-runner caches.  All dispatch knobs are pure performance knobs:
+chunk size, shard count, memory budget, budget bucketing, and
+``engine_kind`` never change a fixed seed's results
+(tests/test_dispatch.py).  The bulk :func:`presample_gaps_device` sampler
+(single key, whole grid) is kept for direct use and CRN-style workflows.
+The multilevel engine (:func:`simulate_trajectories_ml`) remains a
+single-shot dispatch — its model-grid counterpart
+``sweep.evaluate_multilevel_grid`` IS dispatch-routed, and its runner
+cache is LRU-bounded like the rest.
 """
 from __future__ import annotations
 
@@ -92,6 +108,7 @@ except ImportError:
     from jax.experimental import enable_x64
 
 from ..core.failures import as_process
+from . import dispatch as _dispatch
 from .scenarios import MultilevelParamGrid, ParamGrid
 
 COMPUTE, CHECKPOINT = 0, 1
@@ -381,11 +398,7 @@ def _grid_fn(n_steps: int, kind: str):
     return run_grid
 
 
-def _make_runner(n_steps: int, kind: str):
-    return jax.jit(_grid_fn(n_steps, kind))
-
-
-def _make_cand_runner(n_steps: int, kind: str):
+def _cand_fn(n_steps: int, kind: str):
     """Candidate-axis runner: vmap the grid runner over a leading axis of
     periods with ``in_axes=None`` on everything else — the gap schedules
     are SHARED across candidates, never tiled or re-transferred."""
@@ -394,25 +407,7 @@ def _make_cand_runner(n_steps: int, kind: str):
     def run_cands(T2, C, R, D, omega, T_base, gaps):
         return jax.vmap(run_grid, in_axes=(0,) + (None,) * 6)(
             T2, C, R, D, omega, T_base, gaps)
-    return jax.jit(run_cands)
-
-
-_RUNNERS: dict = {}
-_CAND_RUNNERS: dict = {}
-
-
-def _runner(n_steps: int, kind: str = "step"):
-    key = (int(n_steps), kind)
-    if key not in _RUNNERS:
-        _RUNNERS[key] = _make_runner(*key)
-    return _RUNNERS[key]
-
-
-def _cand_runner(n_steps: int, kind: str):
-    key = (int(n_steps), kind)
-    if key not in _CAND_RUNNERS:
-        _CAND_RUNNERS[key] = _make_cand_runner(*key)
-    return _CAND_RUNNERS[key]
+    return run_cands
 
 
 # ---------------------------------------------------------------------------
@@ -538,8 +533,16 @@ def presample_gaps(grid: ParamGrid, n_trials: int, capacity: int,
                       dtype=np.float64)
 
 
+#: bound on cached compiled device samplers.  A long-lived sweep service
+#: touches a new (process identity, sample size) pair per distinct grid,
+#: and an unbounded dict would leak one compiled callable per pair
+#: forever; the LRU evicts the least recently used sampler instead —
+#: eviction only forces a recompile on the next use, never changes
+#: results (tested in tests/test_dispatch.py).
+DEVICE_SAMPLER_CACHE_SIZE = 32
+
 #: compiled device samplers, keyed by (process identity, sample size).
-_DEVICE_SAMPLERS: dict = {}
+_DEVICE_SAMPLERS = _dispatch.LRUCache(DEVICE_SAMPLER_CACHE_SIZE)
 
 
 def presample_gaps_device(grid: ParamGrid, n_trials: int, capacity: int,
@@ -566,7 +569,7 @@ def presample_gaps_device(grid: ParamGrid, n_trials: int, capacity: int,
         if fn is None:
             fn = jax.jit(lambda k, m: proc.sample_gaps(k, size, mean=m))
             out = fn(key, mean)     # NotImplementedError escapes un-cached
-            _DEVICE_SAMPLERS[tok] = fn
+            _DEVICE_SAMPLERS.put(tok, fn)
             return out
         return fn(key, mean)
 
@@ -599,32 +602,112 @@ def _scan_len(n: int) -> int:
     return 1 << (max(int(n), 1) - 1).bit_length()
 
 
-def _run_flat(T_arr, flat: ParamGrid, Tb_arr, gaps, n_steps: int,
-              kind: str) -> dict:
-    """One jitted engine dispatch over a flat grid; returns numpy arrays
-    of shape ``(B, n_trials)`` per output key."""
-    with enable_x64():
-        out = _runner(int(n_steps), kind)(
-            jnp.asarray(T_arr), jnp.asarray(flat.C), jnp.asarray(flat.R),
-            jnp.asarray(flat.D), jnp.asarray(flat.omega),
-            jnp.asarray(Tb_arr),
-            # explicit f64: a device schedule built OUTSIDE an x64 context
-            # arrives as float32 and would abort the scan with an opaque
-            # carry-dtype error
-            jnp.asarray(gaps, dtype=jnp.float64))
-        return {k: np.asarray(v) for k, v in out.items()}
+def _as_f64_gaps(gaps):
+    """Coerce a schedule to f64 (a device schedule built OUTSIDE an x64
+    context arrives as float32 and would abort the scan with an opaque
+    carry-dtype error); device arrays stay on device."""
+    if isinstance(gaps, jnp.ndarray):
+        if gaps.dtype == jnp.float64:
+            return gaps
+        with enable_x64():        # upcasting outside x64 silently truncates
+            return jnp.asarray(gaps, dtype=jnp.float64)
+    return np.asarray(gaps, dtype=np.float64)
 
 
-def _sample_schedule(flat: ParamGrid, n_trials: int, capacity: int,
-                     seed: int, process):
-    """Auto-sample a schedule: on device when the process supports it,
-    host numpy otherwise (the gate for processes without a jax sampler)."""
+def _trial_chunk(n_trials: int, capacity: int, ndev: int, cfg) -> int:
+    """Trials per dispatch: all of them, unless even one grid chunk row
+    per device at the full trial count would blow the memory budget —
+    then the trials axis streams in blocks (an outer host loop; the MC
+    reductions happen host-side on the reassembled arrays, so the block
+    size never changes results)."""
+    per_trial = 8 * (capacity + 32)
+    budget = _dispatch.resolve(cfg).budget()
+    if ndev * n_trials * per_trial <= budget:
+        return n_trials
+    return max(1, min(n_trials, budget // (ndev * per_trial)))
+
+
+def _dispatch_explicit(T_arr, flat: ParamGrid, Tb_arr, gaps, n_steps: int,
+                       kind: str, cfg) -> dict:
+    """Explicit-schedule engine dispatch over a flat grid: the grid axis
+    is chunked/sharded by :mod:`.dispatch`, the trials axis streamed in
+    memory-bounded blocks; returns numpy ``(B, n_trials)`` per key."""
+    B = flat.size
+    gaps = _as_f64_gaps(gaps)
+    n_trials, cap = int(gaps.shape[-2]), int(gaps.shape[-1])
+    ndev = _dispatch.effective_devices(cfg)
+    tc = _trial_chunk(n_trials, cap, ndev, cfg)
+    parts = []
+    for t0 in range(0, n_trials, tc):
+        g = gaps[:, t0:t0 + tc, :]
+        parts.append(_dispatch.run(
+            key=("explicit", int(n_steps), kind),
+            build=_grid_fn(int(n_steps), kind),
+            args=(T_arr, flat.C, flat.R, flat.D, flat.omega, Tb_arr, g),
+            in_axes=(0,) * 7, out_axes=0, size=B,
+            per_point_bytes=8 * min(tc, n_trials) * (cap + 32),
+            config=cfg))
+    if len(parts) == 1:
+        return parts[0]
+    return {k: np.concatenate([p[k] for p in parts], axis=1)
+            for k in parts[0]}
+
+
+def _sampled_build(proc_fn, cap_sample: int, cap_used: int,
+                   n_steps: int, kind: str):
+    """Fused sample-then-simulate chunk kernel (the auto-sampling path).
+
+    Point ``i``/trial ``t`` draws its schedule from the folded key
+    ``fold_in(fold_in(key, i), t)`` at the partition-independent
+    ``cap_sample`` (the grid-wide max capacity) and slices to this
+    bucket's ``cap_used`` — so bucketing, chunking, sharding, and trial
+    blocking are all pure performance knobs for a fixed seed.  The
+    ``(chunk, trials, cap)`` schedule tensor only ever exists inside this
+    jitted call.
+    """
+    kernel = _KERNELS[kind]
+
+    def build(T, C, R, D, omega, Tb, mean, idx, t_idx, key, *params):
+        def per_point(t, c, r, d, o, tb, m, i, *pp):
+            kp = jax.random.fold_in(key, i)
+
+            def per_trial(ti):
+                kt = jax.random.fold_in(kp, ti)
+                g = proc_fn(kt, (cap_sample,), m, pp)
+                return kernel(t, c, r, d, o, tb, g[:cap_used], n_steps)
+            return jax.vmap(per_trial)(t_idx)
+        return jax.vmap(per_point)(T, C, R, D, omega, Tb, mean, idx,
+                                   *params)
+    return build
+
+
+def _bulk_schedule(flat: ParamGrid, n_trials: int, capacity: int,
+                   seed: int, process):
+    """Whole-grid auto-sampled schedule for processes WITHOUT a traced
+    sampler: bulk device sampling (``FailureProcess.sample_gaps``) when
+    the process has it, host numpy otherwise — the compatibility tiers
+    below the fused pointwise path."""
     try:
         return presample_gaps_device(flat, n_trials, capacity, seed=seed,
                                      process=process)
     except NotImplementedError:
         return presample_gaps(flat, n_trials, capacity, seed=seed,
                               process=process)
+
+
+def _sampler_inputs(proc, flat: ParamGrid, seed: int):
+    """(token, per-point parameter arrays, sampler fn, per-point means,
+    global indices, base key) of the pointwise auto-sampling contract."""
+    token, params, fn = proc.traced_sampler()
+    size = flat.size
+    mean_arr = np.broadcast_to(
+        np.asarray(proc.resolve_mean(flat.mu), dtype=np.float64), (size,))
+    params_b = tuple(np.broadcast_to(np.asarray(p, dtype=np.float64),
+                                     (size,)) for p in params)
+    idx_all = np.arange(size, dtype=np.uint32)
+    with enable_x64():
+        key = jax.random.PRNGKey(int(seed))
+    return token, params_b, fn, mean_arr, idx_all, key
 
 
 def _assemble_batch(out: dict, grid: ParamGrid, n_trials: int,
@@ -654,7 +737,8 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
                           gaps: Optional[np.ndarray] = None,
                           n_steps: Optional[int] = None,
                           process=None,
-                          engine_kind: str = "event") -> TrajectoryBatch:
+                          engine_kind: str = "event",
+                          dispatch=None) -> TrajectoryBatch:
     """Simulate every (grid point x trial) trajectory in a few jitted calls.
 
     ``T`` broadcasts against ``grid.shape``.  ``gaps`` (grid.size, n_trials,
@@ -672,6 +756,15 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
     cross-check).  When the schedule is auto-sampled, grid points are
     dispatched in power-of-two budget buckets so mixed-mu grids don't pay
     the worst point's scan length everywhere.
+
+    Every jitted call routes through :mod:`repro.sim.dispatch`
+    (``dispatch`` is its :class:`~repro.sim.dispatch.DispatchConfig`; None
+    = environment defaults): the grid axis is sharded across the local
+    devices and chunked to a device-memory budget, and the trials axis
+    streams in memory-bounded blocks.  Auto-sampled schedules are drawn
+    inside each chunk from per-(grid point, trial) folded keys at the
+    grid-wide capacity, so sharding/chunking/budget knobs — like the
+    budget-bucketing knobs above — never change a fixed seed's results.
     """
     if engine_kind not in _KERNELS:
         raise ValueError(f"unknown engine_kind {engine_kind!r}; "
@@ -683,9 +776,10 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
                              grid.shape).ravel()
     if np.any(T_arr <= (1.0 - flat.omega) * flat.C):
         raise ValueError("period too short: no work progress per period")
+    cfg = _dispatch.resolve(dispatch)
 
     if gaps is not None:
-        # Shared-schedule path (parity / CRN): one dispatch, one budget.
+        # Shared-schedule path (parity / CRN): one budget, grid chunked.
         gaps = _normalize_gaps(gaps, flat.size)
         n_trials = int(gaps.shape[-2])
         if n_steps is None:
@@ -697,16 +791,18 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
                                            process=process))
         else:
             n_steps = _scan_len(n_steps)
-        out = _run_flat(T_arr, flat, Tb_arr, gaps, int(n_steps),
-                        engine_kind)
+        out = _dispatch_explicit(T_arr, flat, Tb_arr, gaps, int(n_steps),
+                                 engine_kind, cfg)
         return _assemble_batch(out, grid, n_trials)
 
     # Auto-sampled path: per-point budgets, one dispatch per pow2 bucket.
-    # The schedule is sampled ONCE for the whole grid (at the worst
-    # point's capacity) and sliced per bucket, so the randomness of a
-    # fixed seed depends only on (seed, process, capacity estimate) —
-    # pure performance knobs (n_steps, engine_kind, how points fall into
-    # buckets) never change the sampled failure times.
+    # Point i / trial t samples its schedule from the folded key
+    # fold_in(fold_in(PRNGKey(seed), i), t) at the grid-wide max capacity
+    # (partition-independent), sliced to the bucket's capacity — the
+    # randomness of a fixed seed depends only on (seed, process, capacity
+    # estimate); n_steps, engine_kind, bucket membership, chunk size,
+    # shard count, and memory budget never change the sampled failure
+    # times.
     caps = fail_capacity_points(T_arr, flat, Tb_arr, process=process)
     if n_steps is not None:
         budgets = np.full(flat.size, _scan_len(n_steps), dtype=np.int64)
@@ -714,32 +810,103 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
         budgets = caps + 1
     else:
         budgets = step_budget_points(T_arr, flat, Tb_arr, process=process)
-    g_full = _sample_schedule(flat, n_trials, int(np.max(caps)), seed,
-                              process)
+    cap_sample = int(np.max(caps))
+    proc = as_process(process).ravel()
+    try:
+        token, params_b, proc_fn, mean_arr, idx_all, key = \
+            _sampler_inputs(proc, flat, seed)
+        g_full = None
+    except NotImplementedError:
+        # Processes without a traced-parameter sampler fall back to ONE
+        # full-grid schedule at the max capacity, sliced per bucket (and
+        # per chunk by the dispatcher) — the same partition-independent
+        # contract as the fused path.  Prefer the bulk device sampler
+        # (``sample_gaps`` — the PR-4 extension point custom processes
+        # may already implement) so their draws stay on device; host
+        # numpy is the last-resort gate.  Note the bulk tensor is
+        # grid-wide, so the memory-bounded-chunking promise only holds
+        # for processes with a traced sampler.
+        g_full = _bulk_schedule(flat, n_trials, cap_sample, seed, process)
+
+    ndev = _dispatch.effective_devices(cfg)
+    tc = _trial_chunk(n_trials, cap_sample, ndev, cfg)
     acc: dict = {}
     for b in np.unique(budgets):
         idx = np.nonzero(budgets == b)[0]
         sub = ParamGrid(**{f: v[idx] for f, v in flat.fields().items()})
         cap = int(np.max(caps[idx]))
-        with enable_x64():       # gathering a f64 device array needs x64
-            g = g_full[idx, :, :cap]
-        out = _run_flat(T_arr[idx], sub, Tb_arr[idx], g, int(b),
-                        engine_kind)
-        if not acc:
-            acc = {k: np.empty((flat.size,) + v.shape[1:], dtype=v.dtype)
-                   for k, v in out.items()}
-        for k, v in out.items():
-            acc[k][idx] = v
+        if g_full is not None:
+            with enable_x64():   # gathering a f64 device array needs x64
+                g = g_full[idx, :, :cap]
+            out = _dispatch_explicit(T_arr[idx], sub, Tb_arr[idx], g,
+                                     int(b), engine_kind, cfg)
+            _scatter(acc, out, flat.size, n_trials, idx, slice(None))
+            continue
+        for t0 in range(0, n_trials, tc):
+            t_idx = np.arange(t0, min(t0 + tc, n_trials), dtype=np.uint32)
+            out = _dispatch.run(
+                key=("sampled", token, cap_sample, cap, int(b),
+                     engine_kind, len(params_b)),
+                build=_sampled_build(proc_fn, cap_sample, cap, int(b),
+                                     engine_kind),
+                args=(T_arr[idx], sub.C, sub.R, sub.D, sub.omega,
+                      Tb_arr[idx], mean_arr[idx], idx_all[idx], t_idx,
+                      key) + tuple(p[idx] for p in params_b),
+                in_axes=(0,) * 8 + (None, None) + (0,) * len(params_b),
+                out_axes=0, size=len(idx),
+                per_point_bytes=8 * len(t_idx) * (cap_sample + 32),
+                config=cfg)
+            _scatter(acc, out, flat.size, n_trials, idx,
+                     slice(t0, t0 + len(t_idx)))
     return _assemble_batch(acc, grid, n_trials)
+
+
+def _scatter(acc: dict, out: dict, size: int, n_trials: int, idx,
+             t_slice) -> None:
+    """Write one (bucket x trial-block) result into the full-grid
+    accumulator (allocating it on first use)."""
+    for k, v in out.items():
+        if k not in acc:
+            acc[k] = np.empty((size, n_trials), dtype=v.dtype)
+        acc[k][idx, t_slice] = v
+
+
+def _cand_sampled_build(proc_fn, cap_sample: int, n_steps: int, kind: str):
+    """Fused sample-then-candidate-vmap chunk kernel: the schedule is
+    drawn once per chunk from the pointwise folded keys and SHARED across
+    the candidate axis (``in_axes=None``) — CRN by construction, never
+    tiled, and partition-independent like :func:`_sampled_build`."""
+    run_grid = _grid_fn(n_steps, kind)
+
+    def build(T2, C, R, D, omega, Tb, mean, idx, t_idx, key, *params):
+        def sample_point(m, i, *pp):
+            kp = jax.random.fold_in(key, i)
+
+            def sample_trial(ti):
+                return proc_fn(jax.random.fold_in(kp, ti), (cap_sample,),
+                               m, pp)
+            return jax.vmap(sample_trial)(t_idx)
+        gaps = jax.vmap(sample_point)(mean, idx, *params)
+        return jax.vmap(run_grid, in_axes=(0,) + (None,) * 6)(
+            T2, C, R, D, omega, Tb, gaps)
+    return build
+
+
+def _cand_axis(M: int, B: int) -> str:
+    """Which axis the candidate dispatch shards/chunks over: the grid
+    axis normally; the candidate axis for single-point grids (the
+    MCSurrogate shape, where the grid axis has nothing to split)."""
+    return "cand" if B == 1 and M > 1 else "grid"
 
 
 def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
                         n_trials: int = 200, seed: int = 0,
                         gaps: Optional[np.ndarray] = None,
                         n_steps: Optional[int] = None, process=None,
-                        engine_kind: str = "event") -> TrajectoryBatch:
+                        engine_kind: str = "event",
+                        dispatch=None) -> TrajectoryBatch:
     """Simulate M candidate periods against ONE shared set of failure
-    schedules, in one jitted call (the CRN solvers' hot path).
+    schedules (the CRN solvers' hot path).
 
     ``T_cand`` has shape ``(M,) + grid.shape`` (or ``(M,)``, one period per
     candidate for the whole grid).  The candidate axis is a ``vmap`` with
@@ -748,9 +915,13 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
     never tiled, materialized M times, or re-transferred.  Outputs carry a
     leading ``(M,)`` axis over ``grid.shape + (n_trials,)``.
 
-    With ``gaps=None`` one schedule set is auto-sampled (device sampler
-    when available) and shared by every candidate — common random numbers
-    by construction.
+    With ``gaps=None`` one schedule set is auto-sampled (pointwise folded
+    keys, device sampler when available) and shared by every candidate —
+    common random numbers by construction.  Calls route through
+    :mod:`repro.sim.dispatch` (sharding + memory-bounded chunking over
+    the grid axis — or over the candidate axis for single-point grids,
+    where the schedules are replicated instead of split); the dispatch
+    knobs never change a fixed seed's results.
     """
     if engine_kind not in _KERNELS:
         raise ValueError(f"unknown engine_kind {engine_kind!r}; "
@@ -765,10 +936,34 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
                              grid.shape).ravel()
     if np.any(T2 <= (1.0 - flat.omega) * flat.C):
         raise ValueError("period too short: no work progress per period")
+    cfg = _dispatch.resolve(dispatch)
+    B = flat.size
+    axis = _cand_axis(M, B)
 
     if gaps is None:
         cap = default_fail_capacity(T2, flat, Tb_arr, process=process)
-        gaps = _sample_schedule(flat, n_trials, cap, seed, process)
+        if n_steps is None:
+            ns = (_scan_len(cap) + 1 if engine_kind == "event" else
+                  default_step_budget(T2, flat, Tb_arr, process=process))
+        else:
+            ns = _scan_len(n_steps)
+        proc = as_process(process).ravel()
+        try:
+            token, params_b, proc_fn, mean_arr, idx_all, key = \
+                _sampler_inputs(proc, flat, seed)
+        except NotImplementedError:
+            # sample_gaps-only processes keep their bulk device draws
+            # (PR-4 contract); host numpy is the last-resort gate.
+            gaps = _bulk_schedule(flat, n_trials, cap, seed, process)
+        else:
+            out = _dispatch_cands(
+                ("cand_sampled", token, cap, int(ns), engine_kind,
+                 len(params_b)),
+                _cand_sampled_build(proc_fn, cap, int(ns), engine_kind),
+                T2, flat, Tb_arr, axis, cfg, n_trials, cap,
+                sampler_args=(mean_arr, idx_all, key, params_b))
+            return _assemble_batch(out, grid, n_trials, lead=(M,))
+
     gaps = _normalize_gaps(gaps, flat.size)
     n_trials = int(gaps.shape[-2])
     if n_steps is None:
@@ -777,16 +972,72 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
                    default_step_budget(T2, flat, Tb_arr, process=process))
     else:
         n_steps = _scan_len(n_steps)
-
-    with enable_x64():
-        out = _cand_runner(int(n_steps), engine_kind)(
-            jnp.asarray(T2), jnp.asarray(flat.C), jnp.asarray(flat.R),
-            jnp.asarray(flat.D), jnp.asarray(flat.omega),
-            jnp.asarray(Tb_arr),
-            jnp.asarray(gaps, dtype=jnp.float64))  # f64 even if the
-        # schedule was device-built outside an x64 context (float32)
-        out = {k: np.asarray(v) for k, v in out.items()}
+    out = _dispatch_cands(
+        ("cand_explicit", int(n_steps), engine_kind),
+        _cand_fn(int(n_steps), engine_kind),
+        T2, flat, Tb_arr, axis, cfg, n_trials, int(gaps.shape[-1]),
+        gaps=gaps)
     return _assemble_batch(out, grid, n_trials, lead=(M,))
+
+
+def _dispatch_cands(key, build, T2, flat: ParamGrid, Tb_arr, axis: str,
+                    cfg, n_trials: int, cap: int, gaps=None,
+                    sampler_args=None) -> dict:
+    """Route a candidate-vmap runner through the dispatcher.
+
+    ``axis="grid"`` shards/chunks the grid axis (candidate axis rides
+    whole, schedules split with their grid points); ``axis="cand"``
+    shards/chunks the candidate axis (schedules replicated — the B == 1
+    solver shape).  The trials axis streams in memory-bounded blocks on
+    both schedule paths (explicit schedules are sliced; auto-sampled
+    blocks re-derive their per-(point, trial) folded keys, so blocking
+    is bit-exact).
+    """
+    M, B = T2.shape
+    ndev = _dispatch.effective_devices(cfg)
+    grid_args = (flat.C, flat.R, flat.D, flat.omega, Tb_arr)
+    sampled = sampler_args is not None
+    if not sampled:
+        gaps = _as_f64_gaps(gaps)
+    # Trials stream in memory-bounded blocks on BOTH schedule paths.  On
+    # the candidate axis the (B, trials-block, cap) schedule is
+    # replicated per device (ndev-independent, hence the 1), so the
+    # block length is what bounds it; on the grid axis each point owns
+    # its schedule slice plus M candidates' worth of live carries.
+    tc = _trial_chunk(n_trials,
+                      B * cap if axis == "cand" else cap + 32 * M,
+                      1 if axis == "cand" else ndev, cfg)
+    parts = []
+    for t0 in range(0, n_trials, tc):
+        t1 = min(t0 + tc, n_trials)
+        if sampled:
+            mean_arr, idx_all, base_key, params_b = sampler_args
+            t_idx = np.arange(t0, t1, dtype=np.uint32)
+            args = (T2,) + grid_args + (mean_arr, idx_all, t_idx,
+                                        base_key) + tuple(params_b)
+            cand_axes = (0,) + (None,) * (len(args) - 1)
+            grid_axes = ((1,) + (0,) * 5 + (0, 0, None, None)
+                         + (0,) * len(params_b))
+        else:
+            args = (T2,) + grid_args + (gaps[:, t0:t1, :],)
+            cand_axes = (0,) + (None,) * 6
+            grid_axes = (1,) + (0,) * 6
+        if axis == "cand":
+            out = _dispatch.run(
+                key=key + ("cand",), build=build, args=args,
+                in_axes=cand_axes, out_axes=0, size=M,
+                per_point_bytes=8 * B * (t1 - t0) * 48, config=cfg)
+        else:
+            out = _dispatch.run(
+                key=key + ("grid",), build=build, args=args,
+                in_axes=grid_axes, out_axes=1, size=B,
+                per_point_bytes=8 * (t1 - t0) * (cap + 32 * M),
+                config=cfg)
+        parts.append(out)
+    if len(parts) == 1:
+        return parts[0]
+    return {k: np.concatenate([p[k] for p in parts], axis=-1)
+            for k in parts[0]}
 
 
 # ---------------------------------------------------------------------------
@@ -968,13 +1219,17 @@ def _make_runner_ml(n_steps: int):
     return jax.jit(run_grid)
 
 
-_ML_RUNNERS: dict = {}
+#: multilevel runners, LRU-bounded like every other compiled-callable
+#: cache in this module (eviction recompiles, never changes results).
+_ML_RUNNERS = _dispatch.LRUCache(_dispatch.RUNNER_CACHE_SIZE)
 
 
 def _runner_ml(n_steps: int):
-    if n_steps not in _ML_RUNNERS:
-        _ML_RUNNERS[n_steps] = _make_runner_ml(n_steps)
-    return _ML_RUNNERS[n_steps]
+    fn = _ML_RUNNERS.get(n_steps)
+    if fn is None:
+        fn = _make_runner_ml(n_steps)
+        _ML_RUNNERS.put(n_steps, fn)
+    return fn
 
 
 def _expected_failures_ml(T, m, grid: MultilevelParamGrid,

@@ -15,13 +15,11 @@ argmin — falls back to the numeric result elementwise.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Callable, Optional, Sequence
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -31,10 +29,28 @@ except ImportError:
     from jax.experimental import enable_x64
 
 from ..core.params import PowerParams
+from . import dispatch as _dispatch
 from . import scenarios
 from .scenarios import MultilevelParamGrid, ParamGrid
 
 _GOLDEN = (math.sqrt(5.0) - 1.0) / 2.0
+
+#: conservative device-memory estimate per grid point of the closed-form
+#: model sweep (the stacked golden-section state plus its elementwise
+#: temporaries measure ~0.5 KiB/point; 8x headroom keeps the chunker's
+#: budget promise honest).  Feeds dispatch.chunk_plan.
+_MODEL_BYTES_PER_POINT = 4096
+
+#: per-(grid point, candidate cadence) estimate for the multilevel sweep
+#: (same stacked loops, per m plus the by_m output block).
+_ML_BYTES_PER_POINT_M = 2048
+
+#: every model-sweep dispatch shape is padded to a multiple of this lane
+#: count.  XLA:CPU contracts the dense elementwise math differently at
+#: small/ragged batch extents (unrolling + scalar remainder lanes flip
+#: ~1-ulp roundings), so a fixed quantum is what makes chunk size, shard
+#: count, and memory budget bit-exact no-ops for the model paths.
+_MODEL_PAD_QUANTUM = 64
 
 # p: dict of broadcastable jnp float64 arrays with the ParamGrid field names.
 
@@ -281,10 +297,10 @@ _OUT_ORDER = ("T_time", "T_energy", "T_young", "T_daly", "T_msk",
               "time_ratio", "energy_ratio", "valid")
 
 
-@jax.jit
 def _evaluate_core(P, T_base):
     # P is one stacked (9, N) array — a single host->device transfer and a
-    # single dispatch beat nine tiny ones on small grids.
+    # single dispatch beat nine tiny ones on small grids.  Jitted (and
+    # sharded/chunked) by the dispatch layer, not here.
     p = dict(zip(_FIELD_ORDER, P))
     lo, hi, valid = _bracket(p)
     p0, lo_m, hi_m, _ = _msk_setup(p)
@@ -328,14 +344,24 @@ def _evaluate_core(P, T_base):
                       valid.astype(C.dtype)])
 
 
-def evaluate_grid(grid: ParamGrid, T_base: float = 1.0) -> GridResult:
-    """Periods + time/energy ratios for every grid point, in one jitted call."""
+def evaluate_grid(grid: ParamGrid, T_base: float = 1.0,
+                  dispatch=None) -> GridResult:
+    """Periods + time/energy ratios for every grid point.
+
+    Routed through :mod:`repro.sim.dispatch`: the grid axis is sharded
+    across the local devices and chunked to the configured device-memory
+    budget (``dispatch`` is a :class:`~repro.sim.dispatch.DispatchConfig`;
+    None = environment defaults), so a 10^6-point dense grid streams in
+    bounded memory.  The computation is elementwise per grid point —
+    chunk size and shard count are bit-exact no-ops on the results.
+    """
     flat = grid.ravel()
     P = np.stack([getattr(flat, f) for f in _FIELD_ORDER])
-    with enable_x64():
-        raw = np.asarray(_evaluate_core(
-            jnp.asarray(P, dtype=jnp.float64),
-            jnp.asarray(float(T_base), jnp.float64)))
+    raw = _dispatch.run(
+        key=("evaluate_core",), build=_evaluate_core,
+        args=(P, np.float64(T_base)), in_axes=(1, None), out_axes=1,
+        size=flat.size, per_point_bytes=_MODEL_BYTES_PER_POINT,
+        config=dispatch, quantum=_MODEL_PAD_QUANTUM)
     out = {k: raw[i].reshape(grid.shape) for i, k in enumerate(_OUT_ORDER)}
     out["valid"] = out["valid"] > 0.5
     return GridResult(grid=grid, T_base=float(T_base), **out)
@@ -559,9 +585,10 @@ _ML_OUT_ORDER = ("T_time", "m_time", "T_energy", "m_energy",
                  "time_vs_single", "energy_vs_single", "valid")
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
 def _evaluate_ml_core(P, T_base, m_values):
-    # P: one stacked (14, N) array; m_values: static tuple of cadences.
+    # P: one stacked (14, N) array; m_values: static tuple of cadences
+    # (closed over by the dispatch build — one compiled program per
+    # distinct tuple, exactly like the old static_argnums jit).
     p = dict(zip(_ML_FIELD_ORDER, P))
     mv = jnp.asarray(m_values, P.dtype).reshape((-1, 1))     # (M, 1)
     lo, hi, valid_m = _ml_bracket(p, mv)                     # (M, N)
@@ -643,22 +670,27 @@ def _evaluate_ml_core(P, T_base, m_values):
 
 def evaluate_multilevel_grid(grid: MultilevelParamGrid,
                              m_values: Sequence[int] = tuple(range(1, 13)),
-                             T_base: float = 1.0) -> MultilevelGridResult:
-    """Jointly optimal (T, m) + ratios for every grid point, one jitted call.
+                             T_base: float = 1.0,
+                             dispatch=None) -> MultilevelGridResult:
+    """Jointly optimal (T, m) + ratios for every grid point.
 
     ``m_values`` is the candidate set of deep-checkpoint cadences (static:
-    one compiled program per distinct tuple).
+    one compiled program per distinct tuple).  The grid axis routes
+    through :mod:`repro.sim.dispatch` (sharding + memory-bounded
+    chunking; ``dispatch`` is its config, None = environment defaults).
     """
     m_values = tuple(int(m) for m in m_values)
     if not m_values or min(m_values) < 1:
         raise ValueError(f"m_values must be positive ints, got {m_values}")
     flat = grid.ravel()
     P = np.stack([getattr(flat, f) for f in _ML_FIELD_ORDER])
-    with enable_x64():
-        scalars, by_m = _evaluate_ml_core(
-            jnp.asarray(P, dtype=jnp.float64),
-            jnp.asarray(float(T_base), jnp.float64), m_values)
-        scalars, by_m = np.asarray(scalars), np.asarray(by_m)
+    scalars, by_m = _dispatch.run(
+        key=("evaluate_ml_core", m_values),
+        build=lambda P_, tb: _evaluate_ml_core(P_, tb, m_values),
+        args=(P, np.float64(T_base)), in_axes=(1, None), out_axes=(1, 2),
+        size=flat.size,
+        per_point_bytes=_ML_BYTES_PER_POINT_M * len(m_values),
+        config=dispatch, quantum=_MODEL_PAD_QUANTUM)
     out = {k: scalars[i].reshape(grid.shape)
            for i, k in enumerate(_ML_OUT_ORDER)}
     out["valid"] = out["valid"] > 0.5
@@ -736,7 +768,7 @@ def _flat_tbase(T_base, grid: ParamGrid) -> np.ndarray:
 
 
 def _mc_eval(T_cand, flat: ParamGrid, T_base, gaps, n_steps=None,
-             engine_kind: str = "event"):
+             engine_kind: str = "event", dispatch=None):
     """Engine means over trials for candidate periods ``T_cand`` of shape
     ``(M, B)`` against the flat grid (B,), in ONE candidate-vmapped engine
     call (the gap schedules — the big arrays — are shared across the
@@ -745,7 +777,8 @@ def _mc_eval(T_cand, flat: ParamGrid, T_base, gaps, n_steps=None,
     T_cand = np.atleast_2d(np.asarray(T_cand, dtype=np.float64))
     tb = _engine.simulate_candidates(T_cand, flat, T_base, gaps=gaps,
                                      n_steps=n_steps,
-                                     engine_kind=engine_kind)
+                                     engine_kind=engine_kind,
+                                     dispatch=dispatch)
     if tb.truncated.any():
         raise RuntimeError("robustness sweep: scan budget exceeded — "
                            "candidate period too close to a bracket "
@@ -765,7 +798,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
                              n_trials: int = 160, seed: int = 0,
                              n_candidates: int = 13, rounds: int = 3,
                              engine_kind: str = "event",
-                             ) -> RobustnessResult:
+                             dispatch=None) -> RobustnessResult:
     """MC robustness evaluation of a whole grid under ``process``.
 
     Each refinement round scores ``n_candidates`` periods in one
@@ -780,7 +813,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
     from ..core.failures import as_process
     from . import engine as _engine
     process = as_process(process)
-    res = evaluate_grid(grid, T_base=1.0)
+    res = evaluate_grid(grid, T_base=1.0, dispatch=dispatch)
     if not res.valid.all():
         raise ValueError("robustness sweep: grid contains degenerate points "
                          "(no valid period); filter them first")
@@ -829,11 +862,11 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
         # One engine pass returns BOTH objectives, so identical candidate
         # sets (the shared first round) are simulated only once.
         wall_t, energy_t, _, _ = _mc_eval(xs_time, flat, T_base, gaps,
-                                          n_steps, engine_kind)
+                                          n_steps, engine_kind, dispatch)
         if xs_energy is xs_time:
             return wall_t, energy_t
         _, energy_e, _, _ = _mc_eval(xs_energy, flat, T_base, gaps, n_steps,
-                                     engine_kind)
+                                     engine_kind, dispatch)
         return wall_t, energy_e
 
     for _ in range(rounds):
@@ -848,7 +881,8 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
     cands = np.clip(np.stack([T_mc_t, T_mc_e, Tt, Te, Ty, Td]),
                     lo[None, :], hi[None, :])
     wall, energy, wall_se, energy_se = _mc_eval(cands, flat, T_base, gaps,
-                                                n_steps, engine_kind)
+                                                n_steps, engine_kind,
+                                                dispatch)
     shp = grid.shape
     r = lambda a: np.asarray(a, dtype=np.float64).reshape(shp)
     return RobustnessResult(
@@ -870,7 +904,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
 
 def evaluate_periods_grid(grid: ParamGrid, process, periods,
                           T_base, n_trials: int = 160, seed: int = 0,
-                          engine_kind: str = "event"):
+                          engine_kind: str = "event", dispatch=None):
     """MC means at given candidate periods under ``process`` (CRN-shared
     across candidates, independent across seeds).
 
@@ -893,7 +927,8 @@ def evaluate_periods_grid(grid: ParamGrid, process, periods,
     gaps = _engine.presample_gaps(flat, n_trials, cap, seed=seed,
                                   process=process)
     wall, energy, wall_se, energy_se = _mc_eval(P, flat, T_base, gaps,
-                                                n_steps, engine_kind)
+                                                n_steps, engine_kind,
+                                                dispatch)
     shp = (P.shape[0],) + grid.shape
     return {"wall": wall.reshape(shp), "energy": energy.reshape(shp),
             "wall_se": wall_se.reshape(shp),

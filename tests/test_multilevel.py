@@ -482,3 +482,23 @@ class TestBenchRegressionGate:
         bad = check_regression(self._payload(12.0), pay)
         assert len(bad) == 1 and "brand_new_bench" in bad[0]
         assert "missing from the committed baseline" in bad[0]
+
+    def test_ungated_reference_entry_is_skipped(self):
+        """Entries flagged ``ungated`` (the step-kernel reference) are
+        excluded from the gate by design: an arbitrarily low ratio must
+        not fail, and their presence on either side must not trip the
+        missing/unbaselined checks."""
+        from benchmarks.bench_sweep import check_regression
+        base = self._payload(12.0)
+        base["weibull_step_engine_reference"] = {"speedup_warm": 0.48,
+                                                 "ungated": True}
+        pay = self._payload(12.0)
+        pay["weibull_step_engine_reference"] = {"speedup_warm": 0.01,
+                                                "ungated": True}
+        assert check_regression(base, pay) == []
+        # payload-only ungated entry: still no complaint (not gated)
+        pay["another_reference"] = {"speedup_warm": 0.2, "ungated": True}
+        assert check_regression(base, pay) == []
+        # baseline-only ungated entry: likewise skipped
+        base["old_reference"] = {"speedup_warm": 3.0, "ungated": True}
+        assert check_regression(base, pay) == []
