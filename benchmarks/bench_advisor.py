@@ -1,0 +1,149 @@
+"""Advisor serving benchmarks: micro-batched burst + open-loop regimes.
+
+Two measurements, both consumed by ``bench_sweep`` for the committed
+``BENCH_sweep.json`` baseline:
+
+``advisor_rps`` (gated)
+    A 512-request synthetic burst of DISTINCT single-level platforms,
+    answered by one warm ``advise_many`` call — asserted to issue exactly
+    ONE dispatched solve and to be bit-identical to the naive
+    one-solve-per-request loop it replaces.  The gated ``speedup_warm``
+    is naive/batched measured in the same run (machine-normalized, like
+    every other gate); the acceptance floor is 20x.  Requests/sec and
+    the open-loop p50/p99 ride along in the entry.
+
+``advisor_load_regimes`` (ungated)
+    Open-loop load-generator runs across batch-window x workload-repeat
+    regimes: requests/sec, p50/p99 latency and fingerprint-cache hit
+    rate per regime.  Absolute latencies are machine-dependent, hence no
+    gate — the regression story lives in ``advisor_rps``.
+
+Standalone:
+  python -m benchmarks.bench_advisor    # measure + print (writes nothing)
+"""
+import time
+
+from ._util import emit
+
+#: burst size of the gated entry (the acceptance criterion's 512).
+BURST = 512
+#: (batch_window_s, repeat_frac) grid of the ungated open-loop entry.
+REGIMES = ((0.0, 0.0), (0.0, 0.8), (2e-3, 0.0), (2e-3, 0.8))
+_REGIME_N = 256
+_REGIME_RATE_HZ = 4000.0
+
+
+def _best_of(fn, repeat):
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _burst_requests():
+    from repro.serve import synthetic_requests
+
+    reqs = synthetic_requests(BURST, seed=42, two_tier_frac=0.0,
+                              repeat_frac=0.0)
+    assert len(reqs) == BURST
+    return reqs
+
+
+def time_advisor_rps(repeat=3):
+    """The gated burst entry (see module docstring)."""
+    import numpy as np
+
+    from repro.serve import AdvisorService, ThreadedAdvisor, run_open_loop
+
+    reqs = _burst_requests()
+
+    # -- batched: one advise_many call, one dispatched solve ---------------
+    svc = AdvisorService(cache_name=None)
+    t0 = time.perf_counter()
+    batched = svc.advise_many(reqs)
+    cold_s = time.perf_counter() - t0
+    m = svc.metrics()
+    assert m["dispatched_solves"] == 1, \
+        f"burst took {m['dispatched_solves']} dispatched solves, wanted 1"
+
+    def batched_once():
+        return AdvisorService(cache_name=None).advise_many(reqs)
+
+    batched_s = _best_of(batched_once, repeat)
+
+    # -- naive: one solve per request --------------------------------------
+    naive_svc = AdvisorService(cache_name=None)
+    naive = [naive_svc.advise(r) for r in reqs]      # also warms the path
+    n_naive = naive_svc.metrics()["dispatched_solves"]
+    assert n_naive == BURST, f"naive loop solved {n_naive}x, wanted {BURST}"
+    for a, b in zip(batched, naive):
+        assert a.period == b.period and a.deep_every == b.deep_every \
+            and (a.predicted_energy == b.predicted_energy
+                 or (np.isnan(a.predicted_energy)
+                     and np.isnan(b.predicted_energy))), \
+            "batched advisor diverged from the naive per-request loop"
+
+    def naive_once():
+        s = AdvisorService(cache_name=None)
+        for r in reqs:
+            s.advise(r)
+
+    naive_s = _best_of(naive_once, max(1, repeat - 1))
+
+    # -- open-loop latency of the same burst shape -------------------------
+    with ThreadedAdvisor(AdvisorService(cache_name=None),
+                         batch_window_s=2e-3, max_batch=BURST) as advisor:
+        rep = run_open_loop(advisor, reqs, rate_hz=_REGIME_RATE_HZ,
+                            warmup=_burst_requests()[:32])
+
+    return {"n_requests": BURST,
+            "naive_s": naive_s,
+            "batched_cold_s": cold_s,
+            "batched_warm_s": batched_s,
+            "rps": BURST / batched_s,
+            "open_loop_rps": rep.rps,
+            "p50_ms": rep.p50_ms,
+            "p99_ms": rep.p99_ms,
+            "speedup_warm": naive_s / batched_s}
+
+
+def time_advisor_regimes():
+    """The ungated batch-window x cache-hit-rate open-loop sweep."""
+    from repro.serve import (AdvisorService, ThreadedAdvisor, run_open_loop,
+                             synthetic_requests)
+
+    out = {"n_requests": _REGIME_N, "rate_hz": _REGIME_RATE_HZ,
+           "ungated": True}
+    for window_s, repeat_frac in REGIMES:
+        reqs = synthetic_requests(_REGIME_N, seed=11, two_tier_frac=0.5,
+                                  repeat_frac=repeat_frac)
+        warm = synthetic_requests(32, seed=12, two_tier_frac=0.5)
+        with ThreadedAdvisor(AdvisorService(cache_name=None),
+                             batch_window_s=window_s) as advisor:
+            rep = run_open_loop(advisor, reqs, rate_hz=_REGIME_RATE_HZ,
+                                warmup=warm)
+        key = f"window_{window_s * 1e3:g}ms_repeat_{repeat_frac:g}"
+        out[key] = {"rps": rep.rps, "p50_ms": rep.p50_ms,
+                    "p99_ms": rep.p99_ms, "hit_rate": rep.hit_rate,
+                    "mean_window": rep.mean_window}
+    return out
+
+
+def main(argv=None):
+    burst = time_advisor_rps()
+    regimes = time_advisor_regimes()
+    hot = regimes["window_2ms_repeat_0.8"]
+    emit("bench_advisor", burst["batched_warm_s"] / BURST * 1e6,
+         f"{BURST}-req burst {burst['rps']:.0f} rps "
+         f"(speedup vs naive {burst['speedup_warm']:.0f}x); "
+         f"open loop p50={burst['p50_ms']:.1f}ms "
+         f"p99={burst['p99_ms']:.1f}ms; "
+         f"2ms-window repeated workload {hot['rps']:.0f} rps "
+         f"@ hit rate {hot['hit_rate']:.0%}")
+    return {"advisor_rps": burst, "advisor_load_regimes": regimes}
+
+
+if __name__ == "__main__":
+    main()

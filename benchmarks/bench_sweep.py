@@ -10,7 +10,12 @@ multi-device sharded dense sweep (``sharded_dense_grid``, measured on
 virtual CPU devices in a subprocess), the memory-bounded 10^6-point
 chunked sweep (``chunked_dense_1m``, asserts chunked == unchunked
 bit-for-bit), and the persistent-compile-cache cold start
-(``cold_start_cached``, two fresh interpreters against one cache dir).
+(``cold_start_cached``, two fresh interpreters against one cache dir);
+and the serving entries from ``bench_advisor``: the micro-batched
+512-request advisor burst vs the naive per-request loop (``advisor_rps``,
+gated, with open-loop p50/p99 riding along) and the batch-window x
+cache-hit-rate open-loop sweep (``advisor_load_regimes``, ungated:
+absolute latency is machine-dependent).
 ``weibull_step_engine_reference`` keeps the RETAINED step kernel's
 Weibull-vs-exponential ratio as an ungated-by-design reference — it reads
 ~0.3x by construction (the cv^2-scaled step budget the event kernel was
@@ -430,6 +435,9 @@ def run(write: bool = True):
     chunked_dense_1m = _time_chunked_dense_1m()
     sharded_dense_grid = _time_sharded_dense()
     cold_start_cached = _time_cold_start_cached()
+    from .bench_advisor import time_advisor_regimes, time_advisor_rps
+    advisor_rps = time_advisor_rps()
+    advisor_load_regimes = time_advisor_regimes()
     payload = {
         "benchmark": "fig2_mu_rho_sweep",
         "unit": "seconds",
@@ -441,6 +449,8 @@ def run(write: bool = True):
         "sharded_dense_grid": sharded_dense_grid,
         "chunked_dense_1m": chunked_dense_1m,
         "cold_start_cached": cold_start_cached,
+        "advisor_rps": advisor_rps,
+        "advisor_load_regimes": advisor_load_regimes,
     }
     if write:
         with open(CANONICAL, "w") as f:
@@ -465,7 +475,8 @@ def write_timing_table(payload: dict, path=None) -> str:
         ref = next((entry[k] for k in ("scalar_s", "exp_warm_s",
                                        "step_warm_s", "single_warm_s",
                                        "unchunked_warm_s",
-                                       "cold_uncached_s") if k in entry),
+                                       "cold_uncached_s", "naive_s")
+                    if k in entry),
                    float("nan"))
         cold = entry.get("batched_cold_s")
         tag = " (ungated ref)" if entry.get("ungated") else ""
@@ -551,6 +562,7 @@ def main(argv=None):
     sh, ch, cc = (payload["sharded_dense_grid"],
                   payload["chunked_dense_1m"],
                   payload["cold_start_cached"])
+    ad = payload["advisor_rps"]
     emit("bench_sweep", s["batched_warm_s"] * 1e6,
          f"fig2 {s['n_points']}pts speedup={s['speedup_warm']:.1f}x; "
          f"dense {d['n_points']}pts speedup={d['speedup_warm']:.1f}x; "
@@ -558,7 +570,8 @@ def main(argv=None):
          f"mc solver step/event={mc['speedup_warm']:.1f}x; "
          f"sharded x{sh['n_devices']}dev={sh['speedup_warm']:.2f}x; "
          f"chunked 1M={ch['speedup_warm']:.2f}x; "
-         f"cold-start cached={cc['speedup_warm']:.2f}x "
+         f"cold-start cached={cc['speedup_warm']:.2f}x; "
+         f"advisor {ad['rps']:.0f} rps={ad['speedup_warm']:.0f}x "
          + (f"-> BENCH_sweep.json + {table}" if wrote
             else f"-> {table} (baseline untouched)"))
 

@@ -12,11 +12,11 @@ def main() -> None:
     from . import (fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
                    fig4_multilevel, fig5_robustness, table_baselines,
                    table_simulation, table_arch_periods, bench_kernels,
-                   bench_sweep, roofline)
+                   bench_advisor, bench_sweep, roofline)
     modules = [fig1_rho_sweep, fig2_mu_rho, fig3_scalability,
                fig4_multilevel, fig5_robustness, table_baselines,
                table_simulation, table_arch_periods, bench_kernels,
-               bench_sweep, roofline]
+               bench_advisor, bench_sweep, roofline]
     print("name,us_per_call,derived")
     failures = 0
     for m in modules:

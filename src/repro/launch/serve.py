@@ -1,26 +1,33 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Serving drivers.
+
+Model path (default): prefill a batch of prompts, then greedy-decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b \\
         --reduce --batch 4 --prompt-len 64 --new-tokens 16 --kv-cache int8
+
+Advisor path: drive the checkpoint-advisor service (``repro.serve``)
+with a synthetic open-loop workload and print throughput/latency/cache
+statistics.  ``--smoke`` runs the short self-checking workload CI uses.
+
+    PYTHONPATH=src python -m repro.launch.serve advisor --requests 512 \\
+        --rate 2000 --repeat-frac 0.5 --batch-window-ms 2
+    PYTHONPATH=src python -m repro.launch.serve advisor --smoke
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
 
-from ..configs import get_config, reduced
-import dataclasses
-
-from ..models import build
-
-
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """Model-serving CLI (kept separate so tests can parse without jax)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="starcoder2-3b")
-    ap.add_argument("--reduce", action="store_true", default=True)
+    # BooleanOptionalAction gives --reduce/--no-reduce; the old
+    # store_true + default=True form made the flag impossible to disable.
+    ap.add_argument("--reduce", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -28,7 +35,98 @@ def main(argv=None):
                     choices=["bfloat16", "int8"])
     ap.add_argument("--waves", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def build_advisor_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve advisor",
+        description="Open-loop load run against the checkpoint advisor.")
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--batch-window-ms", type=float, default=2.0)
+    ap.add_argument("--max-batch", type=int, default=512)
+    ap.add_argument("--two-tier-frac", type=float, default=0.5)
+    ap.add_argument("--repeat-frac", type=float, default=0.0)
+    ap.add_argument("--warmup", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short self-checking run (used by CI)")
+    return ap
+
+
+def advisor_main(argv=None):
+    from ..serve import (AdvisorService, ThreadedAdvisor, run_open_loop,
+                         synthetic_requests)
+
+    args = build_advisor_parser().parse_args(argv)
+    if args.smoke:
+        return _advisor_smoke()
+
+    reqs = synthetic_requests(args.requests, seed=args.seed,
+                              two_tier_frac=args.two_tier_frac,
+                              repeat_frac=args.repeat_frac)
+    warm = synthetic_requests(args.warmup, seed=args.seed + 1,
+                              two_tier_frac=args.two_tier_frac)
+    with ThreadedAdvisor(AdvisorService(),
+                         batch_window_s=args.batch_window_ms * 1e-3,
+                         max_batch=args.max_batch) as advisor:
+        rep = run_open_loop(advisor, reqs, rate_hz=args.rate, warmup=warm)
+        metrics = advisor.metrics()
+    print(f"served {rep.n} requests in {rep.duration_s:.3f}s "
+          f"-> {rep.rps:.0f} rps")
+    print(f"latency p50={rep.p50_ms:.2f}ms p99={rep.p99_ms:.2f}ms "
+          f"max={rep.max_ms:.2f}ms")
+    print(f"cache hit rate {rep.hit_rate:.1%}; "
+          f"{rep.windows} windows, mean size {rep.mean_window:.1f}")
+    print(f"dispatched solves: {metrics['dispatched_solves']} "
+          f"({metrics['solved_lanes']} lanes), "
+          f"exact fallbacks: {metrics['fallback_requests']}")
+    return rep
+
+
+def _advisor_smoke():
+    """CI leg: throughput > 0, hits on repeats, batched == unbatched."""
+    from ..serve import (AdvisorService, ThreadedAdvisor, run_open_loop,
+                         synthetic_requests)
+
+    reqs = synthetic_requests(48, seed=7, two_tier_frac=0.5,
+                              repeat_frac=0.5)
+
+    # batched answers == unbatched single-request answers, bit for bit
+    batched = AdvisorService(cache_name=None).advise_many(reqs)
+    solo_svc = AdvisorService(cache_name=None)
+    for req, a in zip(reqs, batched):
+        b = solo_svc.advise(req)
+        same = (a.period == b.period and a.deep_every == b.deep_every
+                and (a.predicted_energy == b.predicted_energy
+                     or (a.predicted_energy != a.predicted_energy
+                         and b.predicted_energy != b.predicted_energy)))
+        if not same:
+            raise SystemExit(f"FAIL: batched != unbatched for {req}")
+    print("PASS batched == unbatched (48 requests, bit-identical)")
+
+    with ThreadedAdvisor(AdvisorService(cache_name=None),
+                         batch_window_s=2e-3) as advisor:
+        rep = run_open_loop(advisor, reqs, rate_hz=2000.0,
+                            warmup=synthetic_requests(8, seed=8))
+    if not rep.rps > 0.0:
+        raise SystemExit("FAIL: zero throughput")
+    print(f"PASS open loop: {rep.rps:.0f} rps, p50={rep.p50_ms:.2f}ms, "
+          f"p99={rep.p99_ms:.2f}ms")
+    if not rep.hit_rate > 0.0:
+        raise SystemExit("FAIL: no cache hits on repeated workload")
+    print(f"PASS cache hit rate {rep.hit_rate:.1%} on repeated workload")
+    return rep
+
+
+def model_main(args):
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config, reduced
+    from ..models import build
 
     cfg = get_config(args.arch)
     if args.reduce:
@@ -76,6 +174,14 @@ def main(argv=None):
     print("generated token ids (first sequence):",
           [int(t) for t in gen[0][:16]])
     return gen
+
+
+def main(argv=None):
+    import sys
+    argv = list(sys.argv[1:]) if argv is None else list(argv)
+    if argv and argv[0] == "advisor":
+        return advisor_main(argv[1:])
+    return model_main(build_parser().parse_args(argv))
 
 
 if __name__ == "__main__":

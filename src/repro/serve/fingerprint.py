@@ -1,0 +1,271 @@
+"""Fingerprint cache: quantized request keys with a certified tolerance.
+
+This lifts the ``sim/cache.py`` idea (pay for a computation once per
+*equivalence class*, not once per call) one level up, from compiled
+programs to solved answers.  Two requests whose platform parameters
+round to the same point of a logarithmic lattice share one cache entry;
+the entry stores the EXACT solve of the lattice representative, so every
+request mapping to a fingerprint receives bit-identical numbers whether
+it hits or misses.
+
+Lattice
+-------
+Positive scale parameters (C, R, D, mu, P_*) are rounded in log space
+with relative step ``rel`` (each parameter moves by at most a factor
+``(1 + rel)^(1/2)``); the bounded mixing parameters (omega, q) are
+rounded on a linear grid of step ``absolute``.  ``T_base`` is excluded
+(both objectives are degree-1 homogeneous in it — see ``serve.schema``)
+and ``objective`` is excluded (one entry stores both optima).
+
+Tolerance contract (the sandwich lemma)
+---------------------------------------
+Let ``J_p(T)`` be the served objective (expected makespan or energy) on
+platform ``p``, ``p^`` the lattice representative of ``p``'s cell, and
+
+    ``T* = argmin J_p``,   ``T^ = argmin J_{p^}`` (the cached answer).
+
+Suppose every platform in the cell satisfies the two-sided ratio bound
+``J_{p'}(T) <= e^L * J_{p''}(T)`` for all ``T`` in ``{T^, T*}`` and all
+cell members ``p', p''``.  Then serving ``T^`` instead of ``T*`` costs
+
+    ``J_p(T^) <= e^L J_{p^}(T^) <= e^L J_{p^}(T*) <= e^{2L} J_p(T*)``,
+
+i.e. a relative degradation of at most ``e^{2L} - 1`` — the middle
+inequality is just the optimality of ``T^`` for ``p^``.  The bound needs
+NO smoothness of the argmin itself, only of the objective's value, which
+is why it survives the flat-valley regions where the argmin moves a lot.
+
+``certified_bound`` computes, per cache entry, a conservative ``L``:
+for each parameter it perturbs the representative to both edges of its
+cell (holding ``T^`` fixed), measures the worst log-change of the
+objective with the exact closed form, and sums over parameters; the sum
+is doubled (``_CELL_SAFETY``) to cover cross terms and the fact that the
+request sits up to a full half-step from the representative in every
+coordinate simultaneously.  The service compares ``expm1(2 * L)``
+against the documented tolerance and falls back to an exact per-request
+solve whenever the certificate fails — so the contract
+
+    served objective  <=  (1 + tol) * exact optimum
+
+holds for every answer the cache is allowed to serve, and the property
+suite (``tests/test_advisor.py``) checks it against brute-force exact
+solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import numpy as np
+
+from ..sim import sweep as _sweep
+from .schema import AdviceRequest, StoreTier
+
+#: safety factor on the per-cell log-ratio ``L``: the axis sweep measures
+#: one coordinate at a time; doubling covers simultaneous perturbation of
+#: all coordinates plus curvature beyond first order.
+_CELL_SAFETY = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantization:
+    """Cache lattice knobs.
+
+    ``rel``      — relative log-space step for positive scale params.
+    ``absolute`` — linear step for omega / q in [0, 1].
+    ``tol``      — documented relative-degradation tolerance: entries
+                   whose certified bound exceeds it are not served from
+                   the lattice (the request is solved exactly instead).
+
+    The defaults certify well under ``tol`` on the paper's platform
+    ranges; pass ``rel=0.0`` to disable quantization entirely (the
+    fingerprint then only merges bit-identical requests).
+    """
+
+    rel: float = 1e-3
+    absolute: float = 1e-3
+    tol: float = 1e-2
+
+    def __post_init__(self):
+        if self.rel < 0.0 or self.absolute < 0.0 or self.tol < 0.0:
+            raise ValueError("quantization steps must be >= 0")
+
+
+def _qlog(x: float, rel: float) -> float:
+    """Round ``x > 0`` to the nearest point of the log-lattice."""
+    if rel <= 0.0 or x <= 0.0:
+        return float(x)
+    step = math.log1p(rel)
+    return float(math.exp(round(math.log(x) / step) * step))
+
+
+def _qlin(x: float, step: float) -> float:
+    """Round ``x`` to the nearest multiple of ``step`` (clipped to [0,1])."""
+    if step <= 0.0:
+        return float(x)
+    return float(min(1.0, max(0.0, round(x / step) * step)))
+
+
+def _qtier(t: StoreTier, q: Quantization) -> StoreTier:
+    return StoreTier(name=t.name, C=_qlog(t.C, q.rel), R=_qlog(t.R, q.rel),
+                     D=_qlog(t.D, q.rel), P_io=_qlog(t.P_io, q.rel),
+                     q=_qlin(t.q, q.absolute))
+
+
+def quantize_request(req: AdviceRequest, q: Quantization) -> AdviceRequest:
+    """The lattice representative of ``req``'s cell.
+
+    Canonicalized to ``T_base = 1`` (homogeneity) — the objective and the
+    tier names are carried through untouched (they don't enter the solve).
+    """
+    return dataclasses.replace(
+        req,
+        mu=_qlog(req.mu, q.rel),
+        tiers=tuple(_qtier(t, q) for t in req.tiers),
+        omega=_qlin(req.omega, q.absolute),
+        P_static=_qlog(req.P_static, q.rel),
+        P_cal=_qlog(req.P_cal, q.rel),
+        P_down=_qlog(req.P_down, q.rel),
+        T_base=1.0,
+        process_param=_qlog(req.process_param, q.rel),
+    )
+
+
+def fingerprint(req: AdviceRequest, q: Quantization) -> Tuple:
+    """Hashable cache key of ``req``'s cell (quantize + key)."""
+    return quantized_key(quantize_request(req, q))
+
+
+def quantized_key(qr: AdviceRequest) -> Tuple:
+    """Cache key of an ALREADY-QUANTIZED request.
+
+    Built from the quantized numeric fields; excludes ``objective`` (one
+    entry serves both), ``T_base`` (homogeneity) and tier names (labels,
+    not physics).  Two-tier keys include ``max_deep_every`` because it
+    caps the cadence search space and can change the answer.
+    """
+    tiers = tuple((t.C, t.R, t.D, t.P_io, t.q) for t in qr.tiers)
+    key = ("2l" if qr.is_multilevel else "1l", qr.mu, tiers, qr.omega,
+           qr.P_static, qr.P_cal, qr.P_down, qr.process, qr.process_param)
+    if qr.is_multilevel:
+        key = key + (qr.max_deep_every,)
+    return key
+
+
+def exact_fingerprint(req: AdviceRequest) -> Tuple:
+    """Zero-width cache key: merges only bit-identical platforms.
+
+    Used for entries whose lattice cell failed certification — repeats of
+    the same request still hit, but nothing is shared across a cell.
+    """
+    tiers = tuple((t.C, t.R, t.D, t.P_io, t.q) for t in req.tiers)
+    key = ("exact", "2l" if req.is_multilevel else "1l", req.mu, tiers,
+           req.omega, req.P_static, req.P_cal, req.P_down, req.process,
+           req.process_param)
+    if req.is_multilevel:
+        key = key + (req.max_deep_every,)
+    return key
+
+
+# ---------------------------------------------------------------------------
+# Certified bound: axis-edge sweep of the exact closed forms (host numpy).
+# ---------------------------------------------------------------------------
+
+_SINGLE_LOG_FIELDS = ("C", "R", "D", "mu", "P_static", "P_cal", "P_io",
+                      "P_down")
+_SINGLE_LIN_FIELDS = ("omega",)
+_ML_LOG_FIELDS = ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "P_static",
+                  "P_cal", "P_io1", "P_io2", "P_down")
+_ML_LIN_FIELDS = ("omega", "q")
+
+
+def _log_span(objective, fields: dict, q: Quantization, log_fields,
+              lin_fields) -> np.ndarray:
+    """Per-point worst-case sum of axis log-ratios ``L`` (vectorized).
+
+    ``objective(p)`` maps a param dict (numpy arrays) to the objective
+    value at the (fixed) served operating point.  Points where any
+    perturbed evaluation leaves the model's domain (objective <= 0 or
+    non-finite) get ``L = inf`` — the certificate fails closed.
+    """
+    J0 = np.asarray(objective(fields), dtype=np.float64)
+    bad = ~np.isfinite(J0) | (J0 <= 0.0)
+    logJ0 = np.log(np.where(bad, 1.0, J0))
+    L = np.zeros_like(logJ0)
+    half_log = 0.5 * math.log1p(q.rel)
+    for name in log_fields:
+        if q.rel <= 0.0:
+            break
+        span = np.zeros_like(logJ0)
+        for s in (half_log, -half_log):
+            p = dict(fields)
+            p[name] = fields[name] * math.exp(s)
+            J = np.asarray(objective(p), dtype=np.float64)
+            ok = np.isfinite(J) & (J > 0.0)
+            bad |= ~ok
+            span = np.maximum(span,
+                              np.abs(np.log(np.where(ok, J, 1.0)) - logJ0))
+        L += span
+    for name in lin_fields:
+        if q.absolute <= 0.0:
+            break
+        span = np.zeros_like(logJ0)
+        for s in (0.5 * q.absolute, -0.5 * q.absolute):
+            p = dict(fields)
+            p[name] = np.clip(fields[name] + s, 0.0, 1.0)
+            J = np.asarray(objective(p), dtype=np.float64)
+            ok = np.isfinite(J) & (J > 0.0)
+            bad |= ~ok
+            span = np.maximum(span,
+                              np.abs(np.log(np.where(ok, J, 1.0)) - logJ0))
+        L += span
+    return np.where(bad, np.inf, L)
+
+
+def certified_bound_single(fields: dict, T_time: np.ndarray,
+                           T_energy: np.ndarray,
+                           q: Quantization) -> np.ndarray:
+    """Per-point certified degradation bound for single-level entries.
+
+    ``fields`` holds the QUANTIZED platform arrays (the 9 ``ParamGrid``
+    fields, numpy float64); ``T_time``/``T_energy`` the served optima at
+    ``T_base = 1``.  Returns ``expm1(2 * safety * L)`` with ``L`` the
+    worse of the two objectives' axis spans — one number certifying the
+    entry for BOTH objectives.
+    """
+    T_time = np.asarray(T_time, dtype=np.float64)
+    T_energy = np.asarray(T_energy, dtype=np.float64)
+    L_t = _log_span(lambda p: _sweep.time_final_batched(T_time, p),
+                    fields, q, _SINGLE_LOG_FIELDS, _SINGLE_LIN_FIELDS)
+    L_e = _log_span(lambda p: _sweep.energy_final_batched(T_energy, p),
+                    fields, q, _SINGLE_LOG_FIELDS, _SINGLE_LIN_FIELDS)
+    L = np.maximum(L_t, L_e)
+    with np.errstate(over="ignore"):
+        return np.where(np.isfinite(L),
+                        np.expm1(2.0 * _CELL_SAFETY * L), np.inf)
+
+
+def certified_bound_multilevel(fields: dict, T_time: np.ndarray,
+                               m_time: np.ndarray, T_energy: np.ndarray,
+                               m_energy: np.ndarray,
+                               q: Quantization) -> np.ndarray:
+    """Per-point certified bound for two-tier ``(T, m)`` entries.
+
+    Same sandwich argument with the operating point ``(T^, m^)`` held
+    fixed; the cadence is discrete and identical on both sides of every
+    comparison, so only the objective's parameter sensitivity enters.
+    """
+    T_time = np.asarray(T_time, dtype=np.float64)
+    T_energy = np.asarray(T_energy, dtype=np.float64)
+    m_t = np.asarray(m_time, dtype=np.float64)
+    m_e = np.asarray(m_energy, dtype=np.float64)
+    L_t = _log_span(lambda p: _sweep.ml_time_final_batched(T_time, m_t, p),
+                    fields, q, _ML_LOG_FIELDS, _ML_LIN_FIELDS)
+    L_e = _log_span(
+        lambda p: _sweep.ml_energy_final_batched(T_energy, m_e, p),
+        fields, q, _ML_LOG_FIELDS, _ML_LIN_FIELDS)
+    L = np.maximum(L_t, L_e)
+    with np.errstate(over="ignore"):
+        return np.where(np.isfinite(L),
+                        np.expm1(2.0 * _CELL_SAFETY * L), np.inf)

@@ -24,7 +24,8 @@ bit-for-bit.
 """
 from .cache import (enable_compile_cache, maybe_enable_from_env,
                     active_cache_dir)
-from .dispatch import DispatchConfig, default_config, sweep_mesh
+from .dispatch import (DispatchConfig, default_config, sweep_mesh,
+                       cache_stats, reset_cache_stats)
 from .scenarios import (ParamGrid, Scenario, MultilevelParamGrid,
                         MultilevelScenario, get_scenario, list_scenarios,
                         register_scenario, mu_rho_grid, nodes_grid,

@@ -75,6 +75,68 @@ SWEEP_AXIS = "sweep"
 RUNNER_CACHE_SIZE = 64
 
 
+class CacheStats:
+    """Hit/miss/eviction counters shared by every bounded cache.
+
+    One instance per :class:`LRUCache`; a cache constructed with a
+    ``name`` lands in the module registry so :func:`cache_stats` can
+    report every cache in the process (the PR-4/5 compiled-program
+    caches and the advisor's fingerprint cache alike) — the benches and
+    tests read these instead of guessing at cache behavior from timings.
+    """
+
+    __slots__ = ("hits", "misses", "inserts", "evictions")
+
+    def __init__(self):
+        self.reset()
+
+    def reset(self):
+        self.hits = 0
+        self.misses = 0
+        self.inserts = 0
+        self.evictions = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookups
+        return self.hits / n if n else 0.0
+
+    def snapshot(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "lookups": self.lookups, "inserts": self.inserts,
+                "evictions": self.evictions, "hit_rate": self.hit_rate}
+
+
+#: name -> LRUCache for every cache constructed with a ``name``.
+_CACHE_REGISTRY: dict = {}
+
+
+def cache_stats(reset: bool = False) -> dict:
+    """``{cache name: stats snapshot (+ size/maxsize)}`` for every named
+    cache in the process; ``reset=True`` zeroes the counters after
+    reading (sizes/contents are untouched — stats are observability
+    only, never behavior)."""
+    out = {}
+    for name, cache in sorted(_CACHE_REGISTRY.items()):
+        snap = cache.stats.snapshot()
+        snap["size"] = len(cache)
+        snap["maxsize"] = cache.maxsize
+        out[name] = snap
+        if reset:
+            cache.stats.reset()
+    return out
+
+
+def reset_cache_stats():
+    """Zero every named cache's counters (cache contents untouched)."""
+    for cache in _CACHE_REGISTRY.values():
+        cache.stats.reset()
+
+
 class LRUCache:
     """Tiny LRU map bounding caches of compiled callables.
 
@@ -83,25 +145,36 @@ class LRUCache:
     them forever.  Eviction only drops the *cached callable* — a later
     call with the same key rebuilds and recompiles it, producing
     identical results (tested) at the price of one recompile.
+
+    ``name`` registers the cache (and its :class:`CacheStats`) with
+    :func:`cache_stats`; anonymous caches still count, just privately.
     """
 
-    def __init__(self, maxsize: int):
+    def __init__(self, maxsize: int, name: Optional[str] = None):
         self.maxsize = int(maxsize)
+        self.name = name
+        self.stats = CacheStats()
         self._d: collections.OrderedDict = collections.OrderedDict()
+        if name is not None:
+            _CACHE_REGISTRY[name] = self
 
     def get(self, key):
         try:
             val = self._d.pop(key)
         except KeyError:
+            self.stats.misses += 1
             return None
+        self.stats.hits += 1
         self._d[key] = val            # re-insert as most recently used
         return val
 
     def put(self, key, val):
         self._d.pop(key, None)
         self._d[key] = val
+        self.stats.inserts += 1
         while len(self._d) > self.maxsize:
             self._d.popitem(last=False)
+            self.stats.evictions += 1
 
     def __len__(self) -> int:
         return len(self._d)
@@ -266,7 +339,7 @@ def _freeze(obj):
     return obj
 
 
-_RUNNERS = LRUCache(RUNNER_CACHE_SIZE)
+_RUNNERS = LRUCache(RUNNER_CACHE_SIZE, name="dispatch.runners")
 
 
 def _runner_for(key, build, ndev: int, in_axes: Sequence[Optional[int]],

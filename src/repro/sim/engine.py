@@ -542,7 +542,8 @@ def presample_gaps(grid: ParamGrid, n_trials: int, capacity: int,
 DEVICE_SAMPLER_CACHE_SIZE = 32
 
 #: compiled device samplers, keyed by (process identity, sample size).
-_DEVICE_SAMPLERS = _dispatch.LRUCache(DEVICE_SAMPLER_CACHE_SIZE)
+_DEVICE_SAMPLERS = _dispatch.LRUCache(DEVICE_SAMPLER_CACHE_SIZE,
+                                      name="engine.device_samplers")
 
 
 def presample_gaps_device(grid: ParamGrid, n_trials: int, capacity: int,
@@ -1221,7 +1222,8 @@ def _make_runner_ml(n_steps: int):
 
 #: multilevel runners, LRU-bounded like every other compiled-callable
 #: cache in this module (eviction recompiles, never changes results).
-_ML_RUNNERS = _dispatch.LRUCache(_dispatch.RUNNER_CACHE_SIZE)
+_ML_RUNNERS = _dispatch.LRUCache(_dispatch.RUNNER_CACHE_SIZE,
+                                 name="engine.ml_runners")
 
 
 def _runner_ml(n_steps: int):

@@ -585,13 +585,19 @@ _ML_OUT_ORDER = ("T_time", "m_time", "T_energy", "m_energy",
                  "time_vs_single", "energy_vs_single", "valid")
 
 
-def _evaluate_ml_core(P, T_base, m_values):
+def _evaluate_ml_core(P, T_base, m_values, m_max=None):
     # P: one stacked (14, N) array; m_values: static tuple of cadences
     # (closed over by the dispatch build — one compiled program per
     # distinct tuple, exactly like the old static_argnums jit).
+    # m_max: optional traced (N,) per-point cadence cap — candidates with
+    # mv > m_max are masked invalid for that point, so heterogeneous
+    # cadence budgets (the advisor's admission batches) share ONE
+    # compiled program over the union candidate set.
     p = dict(zip(_ML_FIELD_ORDER, P))
     mv = jnp.asarray(m_values, P.dtype).reshape((-1, 1))     # (M, 1)
     lo, hi, valid_m = _ml_bracket(p, mv)                     # (M, N)
+    if m_max is not None:
+        valid_m = valid_m & (mv <= m_max[None, :])
 
     # The per-m time and energy numeric argmins share ONE golden-section
     # loop over a stacked leading axis (same dispatch-bound rationale as
@@ -671,26 +677,46 @@ def _evaluate_ml_core(P, T_base, m_values):
 def evaluate_multilevel_grid(grid: MultilevelParamGrid,
                              m_values: Sequence[int] = tuple(range(1, 13)),
                              T_base: float = 1.0,
-                             dispatch=None) -> MultilevelGridResult:
+                             dispatch=None, m_max=None) -> MultilevelGridResult:
     """Jointly optimal (T, m) + ratios for every grid point.
 
     ``m_values`` is the candidate set of deep-checkpoint cadences (static:
     one compiled program per distinct tuple).  The grid axis routes
     through :mod:`repro.sim.dispatch` (sharding + memory-bounded
     chunking; ``dispatch`` is its config, None = environment defaults).
+
+    ``m_max`` (optional) caps the cadence PER GRID POINT: an integer array
+    broadcastable to ``grid.shape``; candidates ``m > m_max[point]`` are
+    masked invalid for that point only.  This is the heterogeneous-request
+    assembly hook: requests with different cadence budgets batch into one
+    call over the union candidate set instead of one compiled program per
+    distinct budget.  ``m_max=None`` keeps the unmasked program and its
+    results bit-for-bit.
     """
     m_values = tuple(int(m) for m in m_values)
     if not m_values or min(m_values) < 1:
         raise ValueError(f"m_values must be positive ints, got {m_values}")
     flat = grid.ravel()
     P = np.stack([getattr(flat, f) for f in _ML_FIELD_ORDER])
-    scalars, by_m = _dispatch.run(
-        key=("evaluate_ml_core", m_values),
-        build=lambda P_, tb: _evaluate_ml_core(P_, tb, m_values),
-        args=(P, np.float64(T_base)), in_axes=(1, None), out_axes=(1, 2),
-        size=flat.size,
-        per_point_bytes=_ML_BYTES_PER_POINT_M * len(m_values),
-        config=dispatch, quantum=_MODEL_PAD_QUANTUM)
+    if m_max is None:
+        scalars, by_m = _dispatch.run(
+            key=("evaluate_ml_core", m_values),
+            build=lambda P_, tb: _evaluate_ml_core(P_, tb, m_values),
+            args=(P, np.float64(T_base)), in_axes=(1, None), out_axes=(1, 2),
+            size=flat.size,
+            per_point_bytes=_ML_BYTES_PER_POINT_M * len(m_values),
+            config=dispatch, quantum=_MODEL_PAD_QUANTUM)
+    else:
+        mm = np.broadcast_to(np.asarray(m_max, dtype=np.float64),
+                             grid.shape).ravel()
+        scalars, by_m = _dispatch.run(
+            key=("evaluate_ml_core_masked", m_values),
+            build=lambda P_, tb, mm_: _evaluate_ml_core(P_, tb, m_values,
+                                                        mm_),
+            args=(P, np.float64(T_base), mm), in_axes=(1, None, 0),
+            out_axes=(1, 2), size=flat.size,
+            per_point_bytes=_ML_BYTES_PER_POINT_M * len(m_values),
+            config=dispatch, quantum=_MODEL_PAD_QUANTUM)
     out = {k: scalars[i].reshape(grid.shape)
            for i, k in enumerate(_ML_OUT_ORDER)}
     out["valid"] = out["valid"] > 0.5

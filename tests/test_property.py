@@ -235,3 +235,43 @@ class TestShardingProperties:
             for a in axes:
                 size *= mesh.shape[a]
         assert dim % size == 0
+
+
+class TestAdvisorQuantizationContract:
+    """serve.fingerprint's tolerance contract, hypothesis-driven.
+
+    For arbitrary platforms, the answer served from the quantized-key
+    cache must cost at most ``(1 + cert_bound)`` times the exact
+    per-request optimum in the served objective — with ``cert_bound``
+    within the documented tolerance whenever the cache was allowed to
+    serve it (uncertifiable cells fall back to exact solves, so the
+    contract holds unconditionally).  The seeded-random sweep (including
+    multilevel (T, m)) lives in tests/test_advisor.py.
+    """
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(ckpt_params, power_params,
+           st.sampled_from(["time", "energy"]))
+    def test_cached_answer_within_documented_tolerance(self, ck, pw, obj):
+        from repro.serve import AdviceRequest, AdvisorService, Quantization
+        from repro.sim.sweep import (energy_final_batched,
+                                     time_final_batched)
+
+        req = AdviceRequest.from_params(ck, pw, objective=obj)
+        quant = AdvisorService(cache_name=None)
+        exact = AdvisorService(
+            quantization=Quantization(rel=0.0, absolute=0.0),
+            cache_name=None)
+        a, t = quant.advise(req), exact.advise(req)
+        assume(a.valid and t.valid)
+        if not a.exact:
+            assert a.cert_bound <= quant.quant.tol
+
+        p = dict(C=ck.C, R=ck.R, D=ck.D, mu=ck.mu, omega=ck.omega,
+                 P_static=pw.P_static, P_cal=pw.P_cal, P_io=pw.P_io,
+                 P_down=pw.P_down)
+        J = (time_final_batched if obj == "time"
+             else energy_final_batched)
+        assert float(J(a.period, p)) <= float(J(t.period, p)) * (
+            1.0 + max(a.cert_bound, 1e-12))
