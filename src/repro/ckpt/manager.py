@@ -13,13 +13,25 @@ Pipeline per checkpoint:
 The manager feeds *measurements* back into the CheckpointPolicy: C (write
 duration), omega (overlap efficiency), and exposes maybe_checkpoint(step) as
 the single integration point for the trainer.
+
+Two-level cadence: every checkpoint pushes to the buddy replica, every
+``m``-th also writes the sharded (PFS) store.  ``m`` comes from
+``ManagerConfig.pfs_every`` when hand-set, or — the model-driven path —
+from ``policy.deep_every()`` when ``pfs_every`` is None, so the joint
+``(T, m)`` solvers choose both the period and the deepening cadence.
+
+Scaled-time runs set ``virtual_C1_s`` / ``virtual_C2_s``: the write still
+happens for real (restores must work), but the *reported* duration — what
+the policy estimates from and what the trainer charges to its virtual
+clock — is the configured per-level cost, so the run's checkpoint
+parameters are exactly the scenario's.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -40,6 +52,11 @@ class BuddyReplica:
         host = [np.asarray(x) for x in leaves]
         with self._lock:
             self._data = (step, host, treedef)
+
+    def clear(self) -> None:
+        """Drop the replica (a *hard* failure: both buddies lost)."""
+        with self._lock:
+            self._data = None
 
     def restore(self, like_tree: Any):
         with self._lock:
@@ -63,15 +80,23 @@ class ManagerConfig:
     #: deep-storage cadence (the model's ``m``): every checkpoint pushes to
     #: the buddy replica, every ``pfs_every``-th also writes the sharded
     #: (PFS) store.  1 = every checkpoint goes deep (single-level behavior).
-    pfs_every: int = 1
+    #: None = ask the policy (``policy.deep_every()``, the joint (T, m)
+    #: solver's m) before each checkpoint.
+    pfs_every: Optional[int] = 1
+    #: scaled-time overrides: report these as the per-level checkpoint
+    #: durations instead of the measured wall time (None = measure).  When
+    #: set, the measured overlap fraction is *not* reported either — the
+    #: policy keeps its configured omega prior, as the scenario intends.
+    virtual_C1_s: Optional[float] = None
+    virtual_C2_s: Optional[float] = None
 
 
 class CheckpointManager:
     def __init__(self, store: ShardedStore, policy: CheckpointPolicy,
                  config: ManagerConfig = ManagerConfig()):
-        if config.pfs_every < 1:
+        if config.pfs_every is not None and config.pfs_every < 1:
             raise ValueError(f"pfs_every must be >= 1, got {config.pfs_every}")
-        if config.pfs_every > 1 and not config.use_buddy:
+        if (config.pfs_every or 1) > 1 and not config.use_buddy:
             raise ValueError("pfs_every > 1 needs the buddy level enabled "
                              "(buddy-only checkpoints would protect nothing)")
         self.store = store
@@ -81,9 +106,19 @@ class CheckpointManager:
         self._writer: Optional[threading.Thread] = None
         self._last_ckpt_step: Optional[int] = None
         self._n_ckpts = 0                # schedule position (the model's k)
-        self._pending_meta: dict = {}
+        self._ckpt_pos: dict = {}        # step -> schedule ordinal
         self._lock = threading.Lock()
         self.stats: list = []
+
+    # -------------------------------------------------------------- schedule
+    def deep_every(self) -> int:
+        """The effective m: the config's when hand-set, else the policy's
+        (clamped to 1 when there is no buddy level to carry the cheap
+        checkpoints)."""
+        m = self.cfg.pfs_every
+        if m is None:
+            m = max(1, int(self.policy.deep_every()))
+        return m if self.buddy is not None else 1
 
     # ------------------------------------------------------------------ write
     def _write(self, step: int, host_tree, t_snapshot: float,
@@ -93,31 +128,38 @@ class CheckpointManager:
         if self.buddy is not None:
             self.buddy.push(step, host_tree)
         t_write = time.perf_counter() - t0
-        C = t_snapshot + t_write
+        measured = t_snapshot + t_write
+        virt = self.cfg.virtual_C2_s if deep else self.cfg.virtual_C1_s
+        C = measured if virt is None else virt
         with self._lock:
             self.stats.append({"step": step, "snapshot_s": t_snapshot,
-                               "write_s": t_write, "C_s": C,
-                               "level": 2 if deep else 1,
+                               "write_s": t_write, "measured_s": measured,
+                               "C_s": C, "level": 2 if deep else 1,
                                "bytes": meta["bytes"] if deep else 0})
-        # omega: only the snapshot stalls compute; the write overlaps.
-        omega = t_write / C if C > 0 else 0.0
+        # omega: only the snapshot stalls compute; the write overlaps.  In
+        # scaled time the measured split is meaningless — keep the prior.
+        omega = None if virt is not None else (
+            t_write / measured if measured > 0 else 0.0)
         self.policy.observe_checkpoint(duration_s=C,
-                                       slowdown_work_fraction=omega)
+                                       slowdown_work_fraction=omega,
+                                       level=2 if deep else 1)
 
     def checkpoint(self, step: int, state: Any, *, block: bool = False,
-                   deep: Optional[bool] = None):
+                   deep: Optional[bool] = None) -> int:
         """Snapshot now; write in the background (non-blocking checkpoints).
 
         ``deep`` forces/suppresses the deep (PFS) write; by default the
-        ``pfs_every`` schedule decides: checkpoints 0, m, 2m, ... go deep,
-        the rest are buddy-only (the model's every-m-th cadence).
+        ``deep_every()`` schedule decides: checkpoints 0, m, 2m, ... go
+        deep, the rest are buddy-only (the model's every-m-th cadence).
+        Returns the level written (2 = deep, 1 = buddy-only).
         """
         if deep is None:
-            deep = self._n_ckpts % self.cfg.pfs_every == 0
+            deep = self._n_ckpts % self.deep_every() == 0
         if not deep and self.buddy is None:
             raise ValueError("deep=False without a buddy level would "
                              "persist nothing (same invariant as the "
                              "pfs_every > 1 config guard)")
+        self._ckpt_pos[step] = self._n_ckpts
         self._n_ckpts += 1
         self.wait()                      # one in-flight write at a time
         t0 = time.perf_counter()
@@ -131,37 +173,83 @@ class CheckpointManager:
             self._writer.start()
         else:
             self._write(step, host, t_snapshot, deep)
+        return 2 if deep else 1
 
-    def maybe_checkpoint(self, step: int, state: Any) -> bool:
-        """Policy-driven: checkpoint when period_steps have elapsed (deep
-        vs buddy-only decided by the ``pfs_every`` schedule)."""
+    def due(self, step: int) -> int:
+        """0 when the period has not elapsed, else the level the next
+        checkpoint WOULD write (2 = deep, 1 = buddy-only) — without
+        writing anything.  Lets the trainer price the write (and model a
+        failure interrupting it) before committing."""
         period = self.policy.period_steps()
         last = self._last_ckpt_step
         if last is not None and step - last < period:
-            return False
-        self.checkpoint(step, state)
-        return True
+            return 0
+        return 2 if self._n_ckpts % self.deep_every() == 0 else 1
+
+    def expected_cost(self, level: int) -> Optional[float]:
+        """The cost a write at ``level`` will report: the virtual override
+        in scaled time, else the recent measured mean (None before any)."""
+        virt = (self.cfg.virtual_C2_s if level >= 2
+                else self.cfg.virtual_C1_s)
+        return virt if virt is not None else self.measured_C_s
+
+    def maybe_checkpoint(self, step: int, state: Any) -> int:
+        """Policy-driven: checkpoint when period_steps have elapsed.
+
+        Returns 0 when skipped, else the level written (2 = deep, 1 =
+        buddy-only) — falsy/truthy compatible with the old bool API.
+        """
+        if not self.due(step):
+            return 0
+        return self.checkpoint(step, state)
 
     def wait(self):
         if self._writer is not None and self._writer.is_alive():
             self._writer.join()
         self._writer = None
 
+    def drop_buddy(self) -> None:
+        """Simulate a hard failure: the buddy copy is lost too, so the next
+        restore must fall back to the deep (PFS) level."""
+        self.wait()                      # don't race an in-flight push
+        if self.buddy is not None:
+            self.buddy.clear()
+
     # ---------------------------------------------------------------- restore
     def restore(self, like_tree: Any):
         """Deepest *surviving* level wins by recency: the newest of (valid
         store generation, buddy replica).  With ``pfs_every > 1`` the buddy
         usually holds a fresher state than the last PFS write; ties prefer
-        the store (it survives process loss, the buddy does not)."""
+        the store (it survives process loss, the buddy does not).
+
+        A store-sourced restore reseeds the buddy replica: after a hard
+        failure the replacement pair starts protected again, so later
+        buddy-only checkpoints have a level to deepen from.
+        """
         self.wait()
         s_tree, s_step = self.store.restore(like_tree)
         b_tree, b_step = (self.buddy.restore(like_tree)
                           if self.buddy is not None else (None, None))
         if b_tree is not None and (s_tree is None or b_step > s_step):
+            self._rewind_to(b_step)
             return b_tree, b_step, "buddy"
         if s_tree is not None:
+            if self.buddy is not None:
+                self.buddy.push(s_step, s_tree)
+            self._rewind_to(s_step)
             return s_tree, s_step, "store"
         return None, None, "none"
+
+    def _rewind_to(self, step: int) -> None:
+        """Re-anchor the schedule at a restored checkpoint: checkpoints for
+        the redone span must be re-taken (``_last_ckpt_step`` rolls back —
+        otherwise a second failure during the redo re-loses everything),
+        and the deep-every cadence resumes from the restored checkpoint's
+        ordinal so the superperiod structure survives rollbacks."""
+        self._last_ckpt_step = step
+        pos = self._ckpt_pos.get(step)
+        if pos is not None:
+            self._n_ckpts = pos + 1
 
     @property
     def measured_C_s(self) -> Optional[float]:
@@ -169,3 +257,9 @@ class CheckpointManager:
             if not self.stats:
                 return None
             return float(np.mean([s["C_s"] for s in self.stats[-5:]]))
+
+    def last_checkpoint(self) -> Optional[dict]:
+        """The most recent completed write's stats entry (level, C_s, ...)."""
+        self.wait()
+        with self._lock:
+            return dict(self.stats[-1]) if self.stats else None

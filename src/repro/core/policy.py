@@ -1,16 +1,28 @@
 """Checkpoint-period policy: the paper's formulas as a runtime decision.
 
 The :class:`CheckpointPolicy` is the bridge between the analytical core and
-the distributed trainer:
+the fault-tolerant trainer:
 
- * the trainer feeds it *measurements* (step time, checkpoint duration C,
-   overlap factor omega, recovery time R, downtime D, observed failure times);
+ * the trainer feeds it *measurements* (step time, per-level checkpoint
+   durations C1/C2, overlap factor omega, per-level recovery times R1/R2,
+   downtimes, observed failure times);
  * the policy maintains EWMA estimates, re-solves the chosen strategy
-   (AlgoT / AlgoE / Young / Daly / MSK / fixed) when estimates drift, and
-   exposes the decision as "checkpoint every k steps".
+   (AlgoT / AlgoE / Young / Daly / MSK / fixed, or the joint multilevel
+   ``algo_t_ml`` / ``algo_e_ml`` solvers) when estimates drift beyond
+   ``drift_threshold``, and exposes the decision as "checkpoint every k
+   steps" plus "write the deep (PFS) level every m-th checkpoint".
 
 All policy times are SECONDS (the trainer's unit); the analytical model is
 unit-agnostic so no conversion is needed beyond consistency.
+
+Step conversion semantics: the model's period T is *wall* time per period,
+of which ``a = (1-omega) * C`` is the checkpoint's critical-path share and
+``T - a`` is work.  Training steps carry only the work, and the trainer
+charges the checkpoint's ``(1-omega)*C`` wall cost separately, so for the
+model-driven strategies ``period_steps`` budgets ``(T - a) / step_time``
+steps per period — making the *realized* wall period equal the solved T.
+The ``fixed`` strategy keeps the literal interpretation (checkpoint every
+``fixed_period_s`` seconds of stepping).
 """
 from __future__ import annotations
 
@@ -19,7 +31,11 @@ import math
 from typing import Optional
 
 from . import model, optimal
-from .params import CheckpointParams, PowerParams
+from .params import (CheckpointParams, MultilevelCheckpointParams,
+                     MultilevelPowerParams, PowerParams)
+
+#: Joint (T, m) strategies: solve period AND deep-write cadence together.
+ML_STRATEGIES = ("algo_t_ml", "algo_e_ml")
 
 
 @dataclasses.dataclass
@@ -39,34 +55,54 @@ class _Ewma:
 
 @dataclasses.dataclass
 class PolicyConfig:
-    strategy: str = "algo_t"          # one of optimal.STRATEGIES or "fixed"
+    strategy: str = "algo_t"          # optimal.STRATEGIES, ML_STRATEGIES
     fixed_period_s: float = 600.0     # used when strategy == "fixed"
-    # Priors (used until enough measurements arrive):
+    # Priors (used until enough measurements arrive).  C_s/R_s/D_s are the
+    # deep (PFS, level-2) costs — for single-level strategies every
+    # checkpoint is deep, so they are simply THE costs.
     C_s: float = 60.0
     R_s: float = 60.0
     D_s: float = 6.0
     mu_s: float = 24 * 3600.0         # platform MTBF prior
     omega: float = 0.5
+    # Multilevel (buddy, level-1) priors — only read by the *_ml strategies:
+    C1_s: float = 6.0
+    R1_s: float = 6.0
+    D1_s: Optional[float] = None      # None -> D_s
+    q: float = 0.1                    # P[failure also loses the buddy copy]
+    m_max: int = optimal.DEFAULT_M_MAX
     # Re-solve when an estimate moves by more than this fraction:
     drift_threshold: float = 0.10
     min_period_steps: int = 1
+    #: blend observed failure gaps into the MTBF estimate.  Disable when the
+    #: platform MTBF is known (e.g. scaled-time validation runs) so the
+    #: solved period is a pure function of the configured scenario.
+    mu_from_observations: bool = True
 
 
 class CheckpointPolicy:
     """Online period selection driven by the paper's model."""
 
-    def __init__(self, config: PolicyConfig, power: PowerParams):
+    def __init__(self, config: PolicyConfig, power: PowerParams,
+                 ml_power: Optional[MultilevelPowerParams] = None):
         self.config = config
         self.power = power
-        self._C = _Ewma()
+        #: per-level I/O powers for the *_ml energy solver; defaults to
+        #: degenerate levels (buddy draws PFS power).
+        self.ml_power = (ml_power if ml_power is not None
+                         else MultilevelPowerParams.from_power(power))
+        self._C = _Ewma()             # deep (level-2) checkpoint duration
         self._R = _Ewma()
         self._D = _Ewma()
+        self._C1 = _Ewma()            # buddy (level-1) checkpoint duration
+        self._R1 = _Ewma()
+        self._D1 = _Ewma()
         self._omega = _Ewma()
         self._step_time = _Ewma(alpha=0.1)
         self._failure_gaps: list[float] = []
         self._last_failure_t: Optional[float] = None
-        self._cached_period: Optional[float] = None
-        self._cached_inputs: Optional[tuple] = None
+        # (param values, strategy, T, m) of the last solve
+        self._cached: Optional[tuple] = None
 
     # ---- measurement intake ------------------------------------------------
     def observe_step_time(self, seconds: float) -> None:
@@ -74,20 +110,25 @@ class CheckpointPolicy:
         # step time changes do not invalidate the period (seconds-based).
 
     def observe_checkpoint(self, *, duration_s: float,
-                           slowdown_work_fraction: float | None = None) -> None:
+                           slowdown_work_fraction: float | None = None,
+                           level: int = 2) -> None:
         """Record a completed checkpoint.
 
-        ``slowdown_work_fraction`` is the measured omega: fraction of a normal
-        step's work that still progressed per unit time while the checkpoint
-        was in flight (1.0 = fully overlapped).
+        ``level`` is the deepest level written: 2 for a deep (PFS) write,
+        1 for a buddy-only write (the ``pfs_every`` cadence's cheap
+        checkpoints).  ``slowdown_work_fraction`` is the measured omega:
+        fraction of a normal step's work that still progressed per unit
+        time while the checkpoint was in flight (1.0 = fully overlapped).
         """
-        self._C.update(duration_s)
+        (self._C if level >= 2 else self._C1).update(duration_s)
         if slowdown_work_fraction is not None:
             self._omega.update(min(max(slowdown_work_fraction, 0.0), 1.0))
 
-    def observe_recovery(self, *, recovery_s: float, downtime_s: float) -> None:
-        self._R.update(recovery_s)
-        self._D.update(downtime_s)
+    def observe_recovery(self, *, recovery_s: float, downtime_s: float,
+                         level: int = 2) -> None:
+        """``level`` is the level the recovery read from (1 = buddy)."""
+        (self._R if level >= 2 else self._R1).update(recovery_s)
+        (self._D if level >= 2 else self._D1).update(downtime_s)
 
     def observe_failure(self, wall_time_s: float) -> None:
         if self._last_failure_t is not None:
@@ -98,11 +139,16 @@ class CheckpointPolicy:
 
     # ---- estimates ---------------------------------------------------------
     @property
+    def is_multilevel(self) -> bool:
+        return self.config.strategy in ML_STRATEGIES
+
+    @property
     def mu_estimate_s(self) -> float:
         """MLE of the exponential MTBF from observed gaps, blended with the
-        prior (the prior acts as one pseudo-observation)."""
+        prior (the prior acts as one pseudo-observation); the prior alone
+        when ``mu_from_observations`` is off."""
         cfg = self.config
-        if not self._failure_gaps:
+        if not self._failure_gaps or not cfg.mu_from_observations:
             return cfg.mu_s
         n = len(self._failure_gaps)
         return (sum(self._failure_gaps) + cfg.mu_s) / (n + 1)
@@ -117,38 +163,105 @@ class CheckpointPolicy:
             omega=self._omega.get(cfg.omega),
         )
 
+    def checkpoint_params_ml(self) -> MultilevelCheckpointParams:
+        cfg = self.config
+        d1 = cfg.D_s if cfg.D1_s is None else cfg.D1_s
+        return MultilevelCheckpointParams(
+            C1=self._C1.get(cfg.C1_s), R1=self._R1.get(cfg.R1_s),
+            C2=self._C.get(cfg.C_s), R2=self._R.get(cfg.R_s),
+            D1=self._D1.get(d1), D2=self._D.get(cfg.D_s),
+            mu=self.mu_estimate_s, q=cfg.q,
+            omega=self._omega.get(cfg.omega),
+        )
+
     # ---- decision ----------------------------------------------------------
-    def period_seconds(self) -> float:
+    def _param_values(self) -> tuple:
+        """The estimate tuple whose drift invalidates the cached solve."""
+        if self.is_multilevel:
+            ck = self.checkpoint_params_ml()
+            return (ck.C1, ck.R1, ck.D1, ck.C2, ck.R2, ck.D2, ck.mu)
+        ck = self.checkpoint_params()
+        return (ck.C, ck.R, ck.D, ck.mu)
+
+    def _solve(self) -> tuple[float, int]:
+        cfg = self.config
+        if cfg.strategy == "algo_t_ml":
+            T, m = optimal.t_opt_time_multilevel(self.checkpoint_params_ml(),
+                                                 m_max=cfg.m_max)
+            return T, m
+        if cfg.strategy == "algo_e_ml":
+            T, m = optimal.t_opt_energy_multilevel(
+                self.checkpoint_params_ml(), self.ml_power, m_max=cfg.m_max)
+            return T, m
+        return optimal.period_for(cfg.strategy, self.checkpoint_params(),
+                                  self.power), 1
+
+    def _decision(self) -> tuple[float, int]:
+        """(period T seconds, deep-write cadence m), cached across calls and
+        re-solved only when an estimate drifts beyond the threshold."""
         cfg = self.config
         if cfg.strategy == "fixed":
-            return cfg.fixed_period_s
-        ck = self.checkpoint_params()
-        if not math.isfinite(ck.mu):       # no failures expected: never ckpt
-            return float("inf")
-        key = (round(ck.C, 6), round(ck.R, 6), round(ck.D, 6),
-               round(ck.mu, 3), round(ck.omega, 4), cfg.strategy)
-        if self._cached_inputs is not None and self._cached_period is not None:
-            # Only re-solve on drift beyond the threshold.
-            oC, oR, oD, omu, _, ostrat = self._cached_inputs
+            return cfg.fixed_period_s, 1
+        if not math.isfinite(self.mu_estimate_s):   # no failures expected
+            return float("inf"), 1
+        vals = self._param_values()
+        if self._cached is not None:
+            ovals, ostrat, operiod, om = self._cached
+
             def drift(new, old):
                 return abs(new - old) > cfg.drift_threshold * max(old, 1e-9)
-            if (ostrat == cfg.strategy and not any(
-                    (drift(ck.C, oC), drift(ck.R, oR), drift(ck.D, oD),
-                     drift(ck.mu, omu)))):
-                return self._cached_period
-        period = optimal.period_for(cfg.strategy, ck, self.power)
-        self._cached_inputs = key
-        self._cached_period = period
-        return period
+            if (ostrat == cfg.strategy and len(vals) == len(ovals)
+                    and not any(drift(n, o) for n, o in zip(vals, ovals))):
+                return operiod, om
+        T, m = self._solve()
+        self._cached = (vals, cfg.strategy, T, m)
+        return T, m
+
+    def period_seconds(self) -> float:
+        return self._decision()[0]
+
+    def deep_every(self) -> int:
+        """The model's m: write the deep (PFS) level every m-th checkpoint.
+        1 for every single-level strategy."""
+        return self._decision()[1]
+
+    def _critical_path_a(self, m: int) -> float:
+        """The checkpoint's expected critical-path wall share per period,
+        a = (1-omega) * C_mean(m)."""
+        if m > 1 or self.is_multilevel:
+            return self.checkpoint_params_ml().a(m)
+        return self.checkpoint_params().a
 
     def period_steps(self) -> int:
-        """The decision in trainer units: checkpoint every k steps."""
+        """The decision in trainer units: checkpoint every k steps.
+
+        Steps carry the period's *work* share ``T - a`` (see module
+        docstring); the ``fixed`` strategy keeps the literal ``T``.
+        """
         st = self._step_time.get(1.0)
-        period = self.period_seconds()
-        if not math.isfinite(period):      # infinite MTBF: never checkpoint
+        T, m = self._decision()
+        if not math.isfinite(T):       # infinite MTBF: never checkpoint
             return 10 ** 9
-        k = int(round(period / max(st, 1e-9)))
+        work = T if self.config.strategy == "fixed" \
+            else T - self._critical_path_a(m)
+        k = int(round(work / max(st, 1e-9)))
         return max(k, self.config.min_period_steps)
+
+    def operating_point(self, m: Optional[int] = None) -> dict:
+        """The decision as actually executed by the trainer: k steps per
+        period plus the checkpoint's wall share, at deep cadence ``m``
+        (defaults to the policy's own; pass the manager's when its
+        ``pfs_every`` was hand-set)."""
+        T, m_pol = self._decision()
+        m_eff = m_pol if m is None else m
+        k = self.period_steps()
+        s = self._step_time.get(1.0)
+        realized = (float("inf") if not math.isfinite(T)
+                    else k * s + self._critical_path_a(m_eff))
+        return {"strategy": self.config.strategy,
+                "period_solved_s": T, "deep_every": m_eff,
+                "period_steps": k, "step_s": s,
+                "period_realized_s": realized}
 
     # ---- reporting ---------------------------------------------------------
     def report(self) -> dict:
@@ -159,10 +272,31 @@ class CheckpointPolicy:
             "omega": ck.omega,
             "period_s": self.period_seconds(),
             "period_steps": self.period_steps(),
+            "deep_every": self.deep_every(),
             "step_time_s": self._step_time.get(float("nan")),
             "n_failures_observed": len(self._failure_gaps),
         }
         if not math.isfinite(ck.mu):
+            return out
+        if self.is_multilevel:
+            mlck = self.checkpoint_params_ml()
+            out.update({"C1_s": mlck.C1, "R1_s": mlck.R1, "D1_s": mlck.D1,
+                        "q": mlck.q})
+            try:
+                tt, mt = optimal.t_opt_time_multilevel(
+                    mlck, m_max=self.config.m_max)
+                te, me = optimal.t_opt_energy_multilevel(
+                    mlck, self.ml_power, m_max=self.config.m_max)
+                out["algo_t_ml_period_s"], out["algo_t_ml_m"] = tt, mt
+                out["algo_e_ml_period_s"], out["algo_e_ml_m"] = te, me
+                out["predicted_time_ratio"] = float(
+                    model.ml_time_final(te, me, mlck)
+                    / model.ml_time_final(tt, mt, mlck))
+                out["predicted_energy_ratio"] = float(
+                    model.ml_energy_final(tt, mt, mlck, self.ml_power)
+                    / model.ml_energy_final(te, me, mlck, self.ml_power))
+            except (ValueError, AssertionError):
+                pass
             return out
         try:
             tt = optimal.t_opt_time(ck)

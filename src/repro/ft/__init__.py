@@ -2,3 +2,6 @@ from .failures import FailureInjector, FailureModel
 from .watchdog import StepTimeWatchdog, WatchdogConfig
 from .elastic import ElasticPlan, plan_reshard, build_mesh, reshard_tree
 from .trainer import FaultTolerantTrainer, TrainerConfig
+from .tracker import (Tracker, NullTracker, MemoryTracker, StdoutTracker,
+                      JsonlTracker, CompositeTracker)
+from .run import RunSpec, execute as execute_run

@@ -5,6 +5,12 @@ downtime/recovery duration models.
 The inter-failure distribution is pluggable (``FailureModel.process``, any
 :class:`repro.core.failures.FailureProcess`); the default remains the
 paper's exponential and reproduces the legacy sampling stream bit-for-bit.
+
+Two-level severity: with probability ``buddy_loss_prob`` (the multilevel
+model's ``q``) a failure is *hard* — it takes the in-memory buddy copy
+down with it, forcing recovery from the deep (PFS) level.  Hardness draws
+come from a *separate* RNG stream so enabling q does not perturb the
+failure-time schedule (same gaps with q=0 and q=0.5 at a given seed).
 """
 from __future__ import annotations
 
@@ -24,6 +30,15 @@ class FailureModel:
     seed: int = 0
     #: inter-failure distribution; None = exponential (legacy behavior).
     process: Optional[FailureProcess] = None
+    #: P[failure also loses the buddy copy] — the multilevel model's q.
+    buddy_loss_prob: float = 0.0
+    #: downtime after a *hard* failure (D2); None = same as downtime_s.
+    downtime_hard_s: Optional[float] = None
+    #: scaled-time per-level recovery overrides: when set, the trainer
+    #: charges this instead of the measured restore time (R1 = buddy,
+    #: R2 = deep); None = measure + recovery_extra_s.
+    recovery_buddy_s: Optional[float] = None
+    recovery_deep_s: Optional[float] = None
 
     @classmethod
     def from_platform(cls, *, n_nodes: int, mu_ind_s: float, **kw):
@@ -45,6 +60,8 @@ class FailureInjector:
     def __init__(self, model: FailureModel, start_time: float = 0.0):
         self.model = model
         self.rng = np.random.default_rng(model.seed)
+        # independent stream: hardness draws must not disturb the gap draws
+        self._hard_rng = np.random.default_rng((model.seed, 0x6b75))
         self.enabled = model.mu_s > 0 and np.isfinite(model.mu_s)
         self._exponential = model.process is None
         self._gap_iter = None if self._exponential else \
@@ -52,7 +69,10 @@ class FailureInjector:
                                                 mean=model.mu_s)
         self._next = (start_time + self._draw() if self.enabled else np.inf)
         self.n_failures = 0
+        self.n_hard = 0
         self.failure_times: list = []
+        #: severity of the most recent failure returned by ``check``.
+        self.last_was_hard = False
 
     def _draw(self) -> float:
         if self._exponential:
@@ -69,9 +89,19 @@ class FailureInjector:
             return False
         self.n_failures += 1
         self.failure_times.append(self._next)
+        q = self.model.buddy_loss_prob
+        self.last_was_hard = bool(q > 0.0
+                                  and self._hard_rng.random() < q)
+        self.n_hard += int(self.last_was_hard)
         origin = now if self._exponential else self._next
         self._next = origin + self._draw()
         return True
+
+    def downtime_for(self, hard: bool) -> float:
+        m = self.model
+        if hard and m.downtime_hard_s is not None:
+            return m.downtime_hard_s
+        return m.downtime_s
 
     def mtbf_estimate(self) -> Optional[float]:
         if len(self.failure_times) < 2:

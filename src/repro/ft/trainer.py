@@ -3,17 +3,33 @@
 Wires together:
   model train_step  <-  repro.models
   data pipeline     <-  repro.data.synthetic (checkpointable)
-  period policy     <-  repro.core.policy (AlgoT / AlgoE / Young / Daly / ...)
+  period policy     <-  repro.core.policy (AlgoT / AlgoE / ... / algo_t_ml)
   checkpointing     <-  repro.ckpt (async snapshot -> sharded store -> buddy)
-  failure injection <-  repro.ft.failures (Poisson @ platform MTBF)
+  failure injection <-  repro.ft.failures (any FailureProcess @ platform MTBF)
   straggler watch   <-  repro.ft.watchdog
   energy accounting <-  repro.energy (phase powers -> joules, alpha/beta/rho)
+  metrics           <-  repro.ft.tracker (jsonl / stdout / memory backends)
 
 Time can be real (wall clock) or *scaled*: ``sim_seconds_per_step`` lets a
 CPU-sized model emulate production step times so that MTBF/periods exercise
-realistic regimes in seconds of test time.  Failures roll the run back to the
-last committed checkpoint — data stream included — so a failure-free run and
-a failure+resume run produce IDENTICAL final parameters (property-tested).
+realistic regimes in seconds of test time.  For validation runs, the
+checkpoint/recovery/downtime durations are virtual too (manager
+``virtual_C*_s``, failure-model ``recovery_*_s`` / ``downtime_*_s``), so
+the whole run lives in one consistent virtual-time world whose parameters
+are exactly the analytical scenario's — the failure schedule is then the
+only randomness, and measured wall/energy converge to the model's
+``time_final`` / ``energy_final`` (``ml_*`` for two-level runs) over seeds.
+
+Overlap accounting mirrors the model: a non-blocking checkpoint of cost C
+advances the wall by its critical-path share ``(1-omega)*C`` while the I/O
+device is busy for the full C (the remaining ``omega*C`` is metered
+off-wall, overlapped under later compute).  Compute time is the steps
+alone — the overlapped work is already inside them.
+
+Failures roll the run back to the last committed checkpoint — data stream
+included — so a failure-free run and a failure+resume run produce IDENTICAL
+final parameters (property-tested).  *Hard* failures (probability q) drop
+the buddy replica first, forcing a deep (PFS) restore at R2/D2 cost.
 """
 from __future__ import annotations
 
@@ -26,7 +42,8 @@ import numpy as np
 
 from ..core.policy import CheckpointPolicy
 from ..energy import EnergyMeter, Phase
-from .failures import FailureInjector, FailureModel
+from .failures import FailureInjector
+from .tracker import NullTracker, Tracker
 from .watchdog import StepTimeWatchdog
 
 
@@ -43,6 +60,7 @@ class FaultTolerantTrainer:
                  policy: CheckpointPolicy, manager, meter: EnergyMeter,
                  failures: FailureInjector,
                  watchdog: Optional[StepTimeWatchdog] = None,
+                 tracker: Optional[Tracker] = None,
                  config: TrainerConfig = TrainerConfig()):
         self.train_step = train_step
         self.state = state          # (params, opt_state)
@@ -52,6 +70,7 @@ class FaultTolerantTrainer:
         self.meter = meter
         self.failures = failures
         self.watchdog = watchdog or StepTimeWatchdog()
+        self.tracker = tracker or NullTracker()
         self.cfg = config
         # virtual clock (seconds since run start)
         self.now = 0.0
@@ -64,29 +83,36 @@ class FaultTolerantTrainer:
         return {"model": self.state, "data": self.data.state(),
                 "step": np.asarray(self.step, np.int64)}
 
-    def _advance(self, seconds: float, phase: Phase, *,
-                 overlapped_compute: float = 0.0) -> None:
+    def _advance(self, seconds: float, phase: Phase) -> None:
         self.now += seconds
         self.meter.add(phase, seconds)
-        if overlapped_compute:
-            self.meter.add(Phase.COMPUTE, overlapped_compute,
-                           advances_wall=False)
 
     # ---------------------------------------------------------------- failure
     def _handle_failure(self):
         self.n_rollbacks += 1
         self.policy.observe_failure(self.now)
-        # downtime D
-        D = self.failures.model.downtime_s
+        hard = self.failures.last_was_hard
+        if hard:
+            self.manager.drop_buddy()
+        # downtime D (D2 for hard failures when configured)
+        D = self.failures.downtime_for(hard)
         self._advance(D, Phase.DOWN)
-        # recovery R: restore the last committed checkpoint (measured)
+        # recovery R: restore the last *surviving* checkpoint (measured,
+        # or the scenario's virtual per-level cost in scaled time)
         t0 = time.perf_counter()
         like = self._full_state()
         restored, ck_step, source = self.manager.restore(like)
         r_measured = time.perf_counter() - t0
-        R = r_measured + self.failures.model.recovery_extra_s
-        self._advance(R, Phase.RECOVERY_IO)
-        self.policy.observe_recovery(recovery_s=R, downtime_s=D)
+        fm = self.failures.model
+        # Recovery level follows failure *severity*, not the manager's
+        # tie-breaking: a soft failure with a buddy level reads the (always
+        # freshest) buddy copy at R1 cost, exactly the model's q-mixing.
+        level = 1 if (not hard and self.manager.buddy is not None) else 2
+        virt = fm.recovery_buddy_s if level == 1 else fm.recovery_deep_s
+        R = (r_measured + fm.recovery_extra_s) if virt is None else virt
+        self._advance(R, Phase.RECOVERY_IO_BUDDY if level == 1
+                      else Phase.RECOVERY_IO)
+        self.policy.observe_recovery(recovery_s=R, downtime_s=D, level=level)
         if restored is None:
             # no checkpoint yet: restart from step 0 state (kept by caller)
             raise RuntimeError(
@@ -96,6 +122,10 @@ class FaultTolerantTrainer:
         self.step = int(restored["step"])
         self.log.append({"event": "rollback", "to_step": self.step,
                          "source": source, "t": self.now})
+        self.tracker.log({"kind": "failure", "t": self.now, "hard": hard,
+                          "downtime_s": D, "recovery_s": R,
+                          "level": level, "source": source,
+                          "to_step": self.step})
 
     # ------------------------------------------------------------------- run
     def run(self) -> dict:
@@ -118,6 +148,16 @@ class FaultTolerantTrainer:
             step_s = (cfg.sim_seconds_per_step
                       if cfg.sim_seconds_per_step is not None else wall)
 
+            # A failure scheduled inside this step interrupts it: the
+            # partial compute is wasted wall time and the step's results
+            # never commit (a crashed node checkpoints nothing) — without
+            # this, work would "outrun" the failure to the next poll.
+            nf = self.failures.next_failure_time
+            if nf < self.now + step_s:
+                self.meter.add(Phase.COMPUTE, max(nf - self.now, 0.0))
+                self.now = nf       # loop-top check fires exactly here
+                continue
+
             self.state = (params, opt)
             next(self.data)          # consume the batch
             self.step += 1
@@ -125,17 +165,38 @@ class FaultTolerantTrainer:
             self.policy.observe_step_time(step_s)
             self.watchdog.observe(self.step, step_s)
             losses.append(float(metrics["loss"]))
+            self.tracker.log({"kind": "step", "t": self.now,
+                              "step": self.step, "step_s": step_s,
+                              "loss": float(metrics["loss"])})
 
-            # policy-driven non-blocking checkpoint
-            if self.manager.maybe_checkpoint(self.step, self._full_state()):
-                C = self.manager.measured_C_s or 0.0
-                ck = self.policy.checkpoint_params()
-                # non-blocking: I/O time C overlaps omega*C of useful work
-                self._advance(C * (1.0 - ck.omega), Phase.CHECKPOINT_IO)
-                self.meter.add(Phase.CHECKPOINT_IO, C * ck.omega,
-                               advances_wall=False)
-                self.meter.add(Phase.COMPUTE, C * ck.omega,
-                               advances_wall=False)
+            # policy-driven non-blocking checkpoint (level 2 = deep/PFS,
+            # level 1 = buddy-only on the every-m-th cadence)
+            level = self.manager.due(self.step)
+            if level:
+                omega = self.policy.checkpoint_params().omega
+                C_est = self.manager.expected_cost(level) or 0.0
+                phase = (Phase.CHECKPOINT_IO if level >= 2
+                         else Phase.CHECKPOINT_IO_BUDDY)
+                nf = self.failures.next_failure_time
+                if nf < self.now + C_est * (1.0 - omega):
+                    # failure mid-write: the partial I/O is wasted wall
+                    # time and the checkpoint never commits (torn write)
+                    self.meter.add(phase, max(nf - self.now, 0.0))
+                    self.now = nf
+                    self.tracker.log({"kind": "checkpoint_aborted",
+                                      "t": self.now, "step": self.step,
+                                      "level": level})
+                    continue
+                self.manager.checkpoint(self.step, self._full_state())
+                last = self.manager.last_checkpoint()
+                C = last["C_s"] if last else C_est
+                # non-blocking: only (1-omega)*C hits the wall; the I/O
+                # device is busy the full C (rest overlaps later compute)
+                self._advance(C * (1.0 - omega), phase)
+                self.meter.add(phase, C * omega, advances_wall=False)
+                self.tracker.log({"kind": "checkpoint", "t": self.now,
+                                  "step": self.step, "level": level,
+                                  "C_s": C})
 
             if self.failures.n_failures > cfg.max_failures:
                 raise RuntimeError("failure budget exceeded")
@@ -145,11 +206,21 @@ class FaultTolerantTrainer:
             "final_step": self.step,
             "losses": losses,
             "n_failures": self.failures.n_failures,
+            "n_hard_failures": self.failures.n_hard,
             "n_rollbacks": self.n_rollbacks,
             "wall_s": self.now,
             "energy": self.meter.report(),
             "policy": self.policy.report(),
+            "operating_point": self.policy.operating_point(
+                self.manager.deep_every()),
             "straggler_events": len(self.watchdog.events),
             "checkpoints": list(self.manager.stats),
         }
+        self.tracker.log({"kind": "summary", "t": self.now,
+                          "final_step": self.step,
+                          "n_failures": self.failures.n_failures,
+                          "n_rollbacks": self.n_rollbacks,
+                          "wall_s": self.now,
+                          "energy_total_j": report["energy"]["E_total_j"]})
+        self.tracker.close()
         return report

@@ -14,6 +14,7 @@ import pytest
 from repro.ckpt import (ShardedStore, StoreConfig, CheckpointManager,
                         ManagerConfig, BuddyReplica)
 from repro.configs import get_config, reduced
+from repro.core.failures import get_process
 from repro.core.params import PowerParams
 from repro.core.policy import CheckpointPolicy, PolicyConfig
 from repro.data import for_arch
@@ -314,7 +315,8 @@ def tiny_rig():
     return cfg, m, ocfg, step_fn
 
 
-def _trainer(tmp, rig, mu_s, seed=0, steps=20, strategy="algo_t"):
+def _trainer(tmp, rig, mu_s, seed=0, steps=20, strategy="algo_t",
+             process=None, pfs_every=1, q=0.0):
     cfg, m, ocfg, step_fn = rig
     params = m.init(jax.random.key(0))
     opt = adamw.init_state(params, ocfg)
@@ -322,9 +324,11 @@ def _trainer(tmp, rig, mu_s, seed=0, steps=20, strategy="algo_t"):
     pol = CheckpointPolicy(PolicyConfig(strategy=strategy, C_s=0.05,
                                         R_s=0.05, D_s=0.1, mu_s=mu_s,
                                         omega=0.5), PW)
-    mgr = CheckpointManager(ShardedStore(StoreConfig(root=str(tmp))), pol)
+    mgr = CheckpointManager(ShardedStore(StoreConfig(root=str(tmp))), pol,
+                            ManagerConfig(pfs_every=pfs_every))
     meter = EnergyMeter(PAPER_EXASCALE_PROFILE)
-    inj = FailureInjector(FailureModel(mu_s=mu_s, downtime_s=0.1, seed=seed))
+    inj = FailureInjector(FailureModel(mu_s=mu_s, downtime_s=0.1, seed=seed,
+                                       process=process, buddy_loss_prob=q))
     return FaultTolerantTrainer(
         train_step=step_fn, state=(params, opt), data=data, policy=pol,
         manager=mgr, meter=meter, failures=inj,
@@ -341,6 +345,63 @@ class TestFaultTolerantTrainer:
         rep_f = t_fail.run()
         assert rep_f["n_failures"] >= 1
         assert rep_f["final_step"] == rep_c["final_step"]
+        for a, b in zip(jax.tree.leaves(t_clean.state[0]),
+                        jax.tree.leaves(t_fail.state[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("process_kw", [
+        {"process": get_process("weibull", shape=0.7), "seed": 5},
+        {"process": get_process("trace",
+                                gaps=[5.0, 9.0, 4.0, 12.0, 6.0],
+                                rescale=False), "seed": 0},
+    ], ids=["weibull", "trace_replay"])
+    def test_rollback_identity_any_process(self, tmp_path, tiny_rig,
+                                           process_kw):
+        """The kill-anywhere property must hold for every injector: the
+        renewal-clock schedules (Weibull, trace replay) roll back through
+        the same restore path as the legacy exponential."""
+        t_clean = _trainer(tmp_path / "clean", tiny_rig, mu_s=float("inf"))
+        rep_c = t_clean.run()
+        t_fail = _trainer(tmp_path / "fail", tiny_rig, mu_s=7.0,
+                          **process_kw)
+        rep_f = t_fail.run()
+        assert rep_f["n_failures"] >= 1
+        assert rep_f["final_step"] == rep_c["final_step"]
+        for a, b in zip(jax.tree.leaves(t_clean.state[0]),
+                        jax.tree.leaves(t_fail.state[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_rollback_identity_multilevel(self, tmp_path, tiny_rig):
+        """Kill-anywhere through the two-level manager: buddy-only
+        checkpoints every period, PFS every 3rd, and hard failures
+        (q=0.5) that drop the buddy and recover from the deep level."""
+        t_clean = _trainer(tmp_path / "clean", tiny_rig, mu_s=float("inf"),
+                           pfs_every=3)
+        rep_c = t_clean.run()
+        t_fail = _trainer(tmp_path / "fail", tiny_rig, mu_s=5.0, seed=2,
+                          pfs_every=3, q=0.5)
+        rep_f = t_fail.run()
+        assert rep_f["n_failures"] >= 2
+        # both checkpoint levels were exercised
+        assert {c["level"] for c in t_fail.manager.stats} == {1, 2}
+        assert rep_f["final_step"] == rep_c["final_step"]
+        for a, b in zip(jax.tree.leaves(t_clean.state[0]),
+                        jax.tree.leaves(t_fail.state[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_hard_failure_recovers_from_store(self, tmp_path, tiny_rig):
+        """q=1: every failure drops the buddy; recovery must come from the
+        deep level and the run must still finish bit-identical."""
+        t_clean = _trainer(tmp_path / "clean", tiny_rig, mu_s=float("inf"))
+        rep_c = t_clean.run()
+        t_fail = _trainer(tmp_path / "fail", tiny_rig, mu_s=8.0, seed=2,
+                          q=1.0)
+        rep_f = t_fail.run()
+        assert rep_f["n_failures"] >= 1
+        assert rep_f["n_hard_failures"] == rep_f["n_failures"]
+        sources = [e["source"] for e in t_fail.log
+                   if e.get("event") == "rollback"]
+        assert sources and all(s == "store" for s in sources)
         for a, b in zip(jax.tree.leaves(t_clean.state[0]),
                         jax.tree.leaves(t_fail.state[0])):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

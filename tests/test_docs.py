@@ -1,0 +1,72 @@
+"""Docs integrity: required files exist, cross-links resolve, and the
+link checker actually detects breakage (not just vacuously passing)."""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs_links as cdl  # noqa: E402
+
+
+class TestDocsResolve:
+    def test_required_docs_exist(self):
+        for name in ("README.md", "docs/simulation.md", "docs/serving.md",
+                     "docs/training.md"):
+            assert (ROOT / name).exists(), name
+
+    def test_all_internal_references_resolve(self):
+        errors = []
+        for md in cdl.doc_files():
+            assert md.exists(), md
+            errors.extend(cdl.check_file(md))
+        assert not errors, "\n".join(errors)
+
+    def test_docs_are_cross_linked(self):
+        """The three subsystem guides must reference each other and the
+        README must index all of them."""
+        readme = (ROOT / "README.md").read_text()
+        for name in ("simulation.md", "serving.md", "training.md"):
+            assert f"docs/{name}" in readme
+        training = (ROOT / "docs/training.md").read_text()
+        assert "simulation.md" in training and "serving.md" in training
+        assert "training.md" in (ROOT / "docs/simulation.md").read_text()
+        assert "training.md" in (ROOT / "docs/serving.md").read_text()
+
+
+class TestCheckerCatchesBreakage:
+    def test_broken_link_reported(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("see [gone](no_such_file.md)\n")
+        errors = cdl.check_file(md)
+        assert len(errors) == 1 and "broken link" in errors[0]
+
+    def test_missing_anchor_reported(self, tmp_path):
+        (tmp_path / "t.md").write_text("# Only Heading\n")
+        md = tmp_path / "x.md"
+        md.write_text("see [t](t.md#other-heading)\n")
+        errors = cdl.check_file(md)
+        assert len(errors) == 1 and "missing anchor" in errors[0]
+
+    def test_valid_anchor_accepted(self, tmp_path):
+        (tmp_path / "t.md").write_text("## The Quantization, Tolerance!\n")
+        md = tmp_path / "x.md"
+        md.write_text("see [t](t.md#the-quantization-tolerance)\n")
+        assert cdl.check_file(md) == []
+
+    def test_dangling_code_path_reported(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("pinned by `tests/test_does_not_exist.py`\n")
+        errors = cdl.check_file(md)
+        assert len(errors) == 1 and "dangling code path" in errors[0]
+
+    def test_non_path_tokens_ignored(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("math `T/2`, attr `A.P_io1/P_io2`, flag "
+                      "`--x/--no-x`, module `energy/meter`\n")
+        assert cdl.check_file(md) == []
+
+    def test_fenced_blocks_stripped(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("```bash\ncat fake/path.py\n```\n")
+        assert cdl.check_file(md) == []

@@ -1,0 +1,66 @@
+"""Parser tests for the training launcher CLI (repro.launch.train).
+
+Mirror of TestServeCLI: boolean flags must be BooleanOptionalAction
+(--x / --no-x pairs), choices must track the solver/process registries,
+and args must map onto the RunSpec the launcher builds.
+"""
+import math
+
+import pytest
+
+from repro.launch.train import build_parser, spec_from_args
+
+
+class TestTrainParser:
+    def test_boolean_flags_have_no_variants(self):
+        p = build_parser()
+        for flag, default in [("reduce", True), ("buddy", True),
+                              ("inject-failures", True),
+                              ("compress", False), ("quiet", False)]:
+            dest = flag.replace("-", "_")
+            assert getattr(p.parse_args([]), dest) is default
+            assert getattr(p.parse_args([f"--{flag}"]), dest) is True
+            assert getattr(p.parse_args([f"--no-{flag}"]), dest) is False
+
+    def test_strategy_choices_include_multilevel(self):
+        p = build_parser()
+        args = p.parse_args(["--strategy", "algo_e_ml"])
+        assert args.strategy == "algo_e_ml"
+        with pytest.raises(SystemExit):
+            p.parse_args(["--strategy", "not_a_strategy"])
+
+    def test_process_choices_track_registry(self):
+        from repro.core.failures import PROCESSES
+        p = build_parser()
+        for name in PROCESSES:
+            if name == "trace":
+                continue             # needs a gaps list, not CLI-expressible
+            assert p.parse_args(["--process", name]).process == name
+
+    def test_defaults_build_a_failure_free_spec(self):
+        spec = spec_from_args(build_parser().parse_args([]))
+        assert math.isinf(spec.mu_s)
+        assert spec.step_s == 1.0 and spec.scaled_time
+
+    def test_args_map_onto_spec(self):
+        argv = ["--strategy", "algo_t_ml", "--mtbf", "20", "--q", "0.15",
+                "--ckpt-cost", "1.5", "--c1", "0.3", "--process", "weibull",
+                "--process-param", "0.7", "--profile", "paper_ml",
+                "--steps", "120", "--no-buddy"]
+        spec = spec_from_args(build_parser().parse_args(argv))
+        assert spec.strategy == "algo_t_ml" and spec.mu_s == 20.0
+        assert spec.q == 0.15 and spec.C_s == 1.5 and spec.C1_s == 0.3
+        assert spec.process == "weibull"
+        assert spec.process_kwargs == {"shape": 0.7}
+        assert spec.profile == "paper_ml" and spec.total_steps == 120
+        assert spec.use_buddy is False
+
+    def test_no_inject_failures_disables_injection(self):
+        spec = spec_from_args(build_parser().parse_args(
+            ["--mtbf", "50", "--no-inject-failures"]))
+        assert not spec.inject
+
+    def test_wall_time_mode(self):
+        spec = spec_from_args(build_parser().parse_args(
+            ["--sim-step-seconds", "0"]))
+        assert spec.step_s is None and not spec.scaled_time

@@ -1,0 +1,133 @@
+"""Predicted-vs-measured validation tier: the analytical model against the
+*executing* fault-tolerant trainer, in scaled virtual time.
+
+Each scenario runs the real stack (jitted train steps, async sharded-store
+checkpoints, buddy replica, policy-driven (T, m)) under an injected failure
+schedule and asserts the measured wall-clock / energy lie within a
+documented tolerance of ``ml_time_final`` / ``ml_energy_final`` at the
+executed operating point (docs/training.md, "Validation recipe").
+
+Tolerances: 12% for exponential injectors, 15% for Weibull (heavier-tailed
+gap distribution -> higher seed variance, plus the renewal process's
+non-exponential stationary age that the model does not capture).  The
+runs here are sized for CI (150 steps x 3 seeds); the deeper 240 x 6
+version with tighter margins is ``benchmarks/validate_runtime.py``.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.ft.run import RunSpec, execute
+
+STEPS = 150
+SEEDS = 3
+TOL_EXP = 0.12
+TOL_WEIBULL = 0.15
+
+_BASE = dict(arch="starcoder2-3b", layers=1, d_model=32, n_heads=2,
+             batch=2, seq=16, total_steps=STEPS, step_s=1.0, omega=0.0)
+_SL = dict(_BASE, mu_s=15.0, C_s=0.5, R_s=0.5, D_s=0.1, use_buddy=False)
+_ML = dict(_BASE, mu_s=15.0, C_s=1.5, R_s=1.5, D_s=0.2, C1_s=0.3,
+           R1_s=0.3, D1_s=0.1, q=0.15, profile="paper_ml")
+_WEIBULL = dict(process="weibull", process_kwargs={"shape": 0.7})
+
+SCENARIOS = {
+    "single_exp": (dict(_SL, strategy="algo_t"), TOL_EXP),
+    "single_weibull": (dict(_SL, strategy="algo_t", **_WEIBULL),
+                       TOL_WEIBULL),
+    "ml_exp": (dict(_ML, strategy="algo_t_ml"), TOL_EXP),
+    "ml_weibull": (dict(_ML, strategy="algo_e_ml", **_WEIBULL),
+                   TOL_WEIBULL),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def run_scenario(name):
+    kw, _ = SCENARIOS[name]
+    reports = [execute(RunSpec(seed=s, **kw)) for s in range(SEEDS)]
+    return reports
+
+
+def _ratios(reports, key):
+    return np.array([r["predicted"][key] for r in reports])
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+class TestPredictedVsMeasured:
+    def test_completes_under_failures(self, name):
+        reports = run_scenario(name)
+        for rep in reports:
+            assert rep["final_step"] == STEPS
+        # the scenario must actually exercise the failure path
+        assert sum(r["n_failures"] for r in reports) >= SEEDS
+
+    def test_wall_time_within_tolerance(self, name):
+        _, tol = SCENARIOS[name]
+        ratios = _ratios(run_scenario(name), "wall_ratio")
+        assert abs(ratios.mean() - 1.0) < tol, \
+            f"{name}: measured/predicted wall {ratios.mean():.3f}"
+
+    def test_energy_within_tolerance(self, name):
+        _, tol = SCENARIOS[name]
+        ratios = _ratios(run_scenario(name), "energy_ratio")
+        assert abs(ratios.mean() - 1.0) < tol, \
+            f"{name}: measured/predicted energy {ratios.mean():.3f}"
+
+
+class TestOperatingPoint:
+    def test_multilevel_policy_chooses_m(self):
+        """The (T, m) solver must pick a deepening cadence > 1 when the
+        buddy level is an order of magnitude cheaper than the PFS."""
+        rep = run_scenario("ml_exp")[0]
+        op = rep["operating_point"]
+        assert op["deep_every"] > 1
+        levels = {c["level"] for c in rep["checkpoints"]}
+        assert levels == {1, 2}          # both levels actually written
+
+    def test_single_level_m_is_one(self):
+        rep = run_scenario("single_exp")[0]
+        assert rep["operating_point"]["deep_every"] == 1
+        assert {c["level"] for c in rep["checkpoints"]} == {2}
+
+    def test_realized_period_matches_solved(self):
+        """k*s + a must track the solved T (the work-share conversion)."""
+        rep = run_scenario("single_exp")[0]
+        op = rep["operating_point"]
+        assert abs(op["period_realized_s"] - op["period_solved_s"]) \
+            <= op["step_s"]
+
+    def test_virtual_costs_reported(self):
+        """Scaled time: the manager reports the scenario's virtual C per
+        level, not the measured write time."""
+        rep = run_scenario("ml_exp")[0]
+        for c in rep["checkpoints"]:
+            expected = 1.5 if c["level"] == 2 else 0.3
+            assert c["C_s"] == expected
+
+    def test_hard_failures_recover_deep(self):
+        """q > 0 must produce hard failures that fall back to the PFS."""
+        reports = run_scenario("ml_exp")
+        n_hard = sum(r["n_hard_failures"] for r in reports)
+        assert n_hard >= 1
+        for rep in reports:
+            assert rep["n_hard_failures"] <= rep["n_failures"]
+
+
+class TestPredictionBlock:
+    def test_prediction_fields(self):
+        rep = run_scenario("single_exp")[0]
+        pred = rep["predicted"]
+        for key in ("wall_s", "energy_j", "wall_ratio", "energy_ratio",
+                    "T_used_s", "m", "T_base_s"):
+            assert key in pred
+        assert pred["T_base_s"] == STEPS * 1.0
+        assert pred["wall_s"] > pred["T_base_s"]
+
+    def test_no_prediction_without_failures(self):
+        spec = RunSpec(arch="starcoder2-3b", layers=1, d_model=32,
+                       n_heads=2, batch=2, seq=16, total_steps=5,
+                       step_s=1.0)          # mu = inf
+        rep = execute(spec)
+        assert rep["predicted"] == {}
+        assert rep["n_failures"] == 0

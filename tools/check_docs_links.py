@@ -1,0 +1,109 @@
+"""Docs link checker: every internal reference must resolve.
+
+Scans ``README.md`` and ``docs/*.md`` (fenced code blocks stripped) for
+
+* markdown links ``[text](target)`` — relative targets must exist, and a
+  ``#anchor`` must match a heading in the target file (GitHub slug rules);
+* backticked code paths like ``tests/test_advisor.py`` — must exist
+  relative to the repo root, ``src/repro/`` (docs refer to modules as
+  ``sim/dispatch.py``), or the markdown file's own directory.
+
+ROADMAP.md is deliberately out of scope: it cites files from *related*
+repos (Levanter's ``tracker/tracker.py``) that live outside this tree.
+
+Exit status 0 when everything resolves, 1 with a per-reference report
+otherwise.  Run from anywhere:
+
+    python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+_FENCE = re.compile(r"```.*?```", re.S)
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_TICK = re.compile(r"`([^`\n]+)`")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+#: backticked tokens worth checking: a real path shape AND a doc/code
+#: extension (or an explicit trailing slash for directories).  This
+#: excludes math (`T/2`), attribute chains (`Params.P_io1/P_io2`), CLI
+#: flags (`--x/--no-x`), and bare module refs (`energy/meter`).
+_PATH_EXT = (".py", ".md", ".yml", ".yaml", ".json", ".csv", ".toml")
+
+
+def doc_files(root: Path = ROOT) -> list[Path]:
+    return [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+
+
+def _slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->dashes."""
+    heading = re.sub(r"[`*_]", "", heading.strip())
+    heading = re.sub(r"[^\w\s-]", "", heading.lower())
+    return re.sub(r"\s+", "-", heading.strip())
+
+
+def _anchors(md: Path) -> set[str]:
+    return {_slug(h) for h in _HEADING.findall(md.read_text())}
+
+
+def _is_path_token(tok: str) -> bool:
+    if "/" not in tok or tok.startswith(("-", "/")):
+        return False
+    if not re.fullmatch(r"[A-Za-z0-9_.\-/]+", tok):
+        return False
+    return tok.endswith("/") or tok.endswith(_PATH_EXT)
+
+
+def _resolve_tick(tok: str, md: Path) -> bool:
+    rel = tok.rstrip("/")
+    return any((base / rel).exists()
+               for base in (ROOT, ROOT / "src" / "repro", md.parent))
+
+
+def check_file(md: Path) -> list[str]:
+    errors = []
+    text = _FENCE.sub("", md.read_text())
+    try:
+        rel = md.relative_to(ROOT)
+    except ValueError:        # file under test outside the repo tree
+        rel = md.name
+
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        if not dest.exists():
+            errors.append(f"{rel}: broken link -> {target}")
+            continue
+        if anchor and dest.suffix == ".md" and anchor not in _anchors(dest):
+            errors.append(f"{rel}: missing anchor -> {target}")
+
+    for tok in _TICK.findall(text):
+        if _is_path_token(tok) and not _resolve_tick(tok, md):
+            errors.append(f"{rel}: dangling code path -> `{tok}`")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for md in doc_files():
+        if not md.exists():
+            errors.append(f"missing doc file: {md.relative_to(ROOT)}")
+            continue
+        errors.extend(check_file(md))
+    if errors:
+        print("\n".join(errors))
+        print(f"FAIL: {len(errors)} unresolved doc reference(s)")
+        return 1
+    n = len(doc_files())
+    print(f"PASS: all internal references resolve across {n} doc files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
