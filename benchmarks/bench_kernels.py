@@ -7,7 +7,7 @@ from ._util import emit, timed
 
 
 def main():
-    from repro.kernels import ops, ref
+    from repro.kernels import ops
 
     key = jax.random.key(0)
     B, S, H, Dh = 2, 512, 4, 128

@@ -453,8 +453,20 @@ def run(write: bool = True):
         "advisor_load_regimes": advisor_load_regimes,
     }
     if write:
+        # Carry forward baseline keys owned by other tools (e.g. the
+        # recompile_budget entry written by `python -m repro.sanitize
+        # --write`) — regenerating the timing baseline must not drop
+        # them.
+        try:
+            with open(CANONICAL) as f:
+                prev = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            prev = {}
+        for k, v in prev.items():
+            payload.setdefault(k, v)
         with open(CANONICAL, "w") as f:
             json.dump(payload, f, indent=2)
+            f.write("\n")
     return payload
 
 

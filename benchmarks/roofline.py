@@ -15,7 +15,6 @@ markdown table for EXPERIMENTS.md.
 from __future__ import annotations
 
 import json
-from pathlib import Path
 
 from ._util import emit, timed, RESULTS
 

@@ -11,7 +11,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import numpy as np
 
-from repro.core import EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7
+from repro.core import EXASCALE_POWER_RHO7
 from repro.core.model import ml_energy_final, ml_time_final
 from repro.sim import (MultilevelParamGrid, ParamGrid, buddy_ratio_grid,
                        evaluate_multilevel_grid, get_scenario,

@@ -443,7 +443,7 @@ class TraceReplay(FailureProcess):
         trace = jnp.asarray(self.gaps, dtype=jnp.float64)
         n = len(self.gaps)
         start = jax.random.randint(key, size[:-1] + (1,), 0, n)
-        idx = (start + jnp.arange(size[-1])) % n
+        idx = (start + jnp.arange(size[-1], dtype=start.dtype)) % n
         scale = (_lead_j(mean, size) / self.mu
                  if (mean is not None and self.rescale) else 1.0)
         return jnp.broadcast_to(trace[idx] * scale, size)
@@ -460,9 +460,9 @@ class TraceReplay(FailureProcess):
         rescale = self.rescale
 
         def fn(key, size, mean, params):
-            tr = jnp.asarray(trace)
+            tr = jnp.asarray(trace, dtype=jnp.float64)
             start = jax.random.randint(key, size[:-1] + (1,), 0, n)
-            idx = (start + jnp.arange(size[-1])) % n
+            idx = (start + jnp.arange(size[-1], dtype=start.dtype)) % n
             # mean arrives pre-resolved (resolve_mean), so with
             # rescale=False it already equals the trace mean and the
             # static 1.0 below is exact, not an approximation.

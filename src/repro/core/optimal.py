@@ -442,7 +442,8 @@ class MCSurrogate:
         gaps = _engine.presample_gaps(self._grid1, self.n_trials, cap,
                                       seed=seed, process=self.process)
         with _engine.enable_x64():
-            self._gaps = _engine.jnp.asarray(gaps)
+            self._gaps = _engine.jnp.asarray(gaps,
+                                             dtype=_engine.jnp.float64)
         self._engine = _engine
         self._first_evals: dict = {}   # initial argmin grid, shared by keys
 

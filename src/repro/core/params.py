@@ -7,7 +7,6 @@ Powers share one power unit (the paper normalizes to milliwatt/node).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 MINUTE = 1.0  # canonical paper unit; runtime converts seconds -> minutes

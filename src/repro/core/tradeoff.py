@@ -14,7 +14,7 @@ parity tests and the sweep benchmark).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Sequence
 
 import numpy as np
 

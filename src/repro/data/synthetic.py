@@ -9,7 +9,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -52,6 +51,7 @@ class SyntheticLM:
     def peek(self, step: Optional[int] = None) -> dict:
         c = self.cfg
         s = self.step if step is None else step
+        # reprolint: disable=RPL001 (host-side data pipeline: the stream is a pure function of (config seed, step), reconstructible at any step for resume)
         rng = np.random.default_rng((c.seed << 20) ^ s)
         toks = self._tokens(rng, (c.batch, c.seq_len + 1))
         batch = {

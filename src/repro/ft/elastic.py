@@ -11,7 +11,6 @@ The checkpoint format is mesh-agnostic (whole logical arrays restored through
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 

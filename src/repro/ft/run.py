@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import tempfile
-from typing import Any, Optional
+from typing import Optional
 
 from ..core import model as core_model
 from ..core.failures import get_process

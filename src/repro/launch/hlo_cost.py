@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import Counter, defaultdict
+from collections import Counter
 from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,

@@ -19,7 +19,6 @@ executed operating point).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 
 from ..core.failures import PROCESSES

@@ -1,0 +1,38 @@
+"""reprolint: contract-enforcing static analysis for the determinism stack.
+
+The repo's headline guarantees — bit-exact no-op perf knobs, the ≤tol
+certified serving contract, 1-4% predicted-vs-measured runtime — rest on
+invariants that used to live only in docstrings: f64 everywhere in the
+model/solver subsystems, threefry-keyed randomness, bounded registered
+caches of compiled callables, no host synchronization inside jitted hot
+paths, no Python control flow on traced values.  ``reprolint`` makes
+those invariants machine-checkable as named, suppressible rules:
+
+RPL001  unseeded / host randomness outside the approved seeded-RNG sites
+RPL002  unbounded caches, or bounded caches invisible to ``cache_stats()``
+RPL003  dtype-contract violations in the f64 subsystems (sim/core/serve)
+RPL004  host synchronization reachable from jitted entry points
+RPL005  Python branching on traced values inside ``lax.scan`` bodies
+RPL006  suppression hygiene (unused or undocumented suppressions)
+
+Run it::
+
+    python -m repro.lint                # whole repo, exit 1 on violations
+    python -m repro.lint src/repro/sim  # specific paths
+    python -m repro.lint --list-suppressions
+
+Suppress a deliberate exception *with a reason* (the reason is mandatory;
+an undocumented suppression is itself a violation)::
+
+    rng = np.random.default_rng(seed)  # reprolint: disable=RPL001 (legacy oracle stream)
+
+The package is pure stdlib (``ast`` only) — no jax import — so the CI
+lint job runs it without installing the numeric stack.  See
+docs/contracts.md for the contract each rule enforces.
+"""
+from .context import Diagnostic, ModuleInfo, RepoContext, Suppression
+from .engine import LintResult, run_lint
+from .rules import ALL_RULES
+
+__all__ = ["Diagnostic", "ModuleInfo", "RepoContext", "Suppression",
+           "LintResult", "run_lint", "ALL_RULES"]

@@ -1,0 +1,71 @@
+"""``python -m repro.lint`` — the reprolint command line."""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Optional, Sequence
+
+from .engine import run_lint
+
+
+def _repo_root(start: Path) -> Path:
+    """Nearest ancestor containing pyproject.toml (else cwd)."""
+    for p in [start] + list(start.parents):
+        if (p / "pyproject.toml").exists():
+            return p
+    return start
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Contract-enforcing static analysis for the repo "
+                    "(rules RPL001-RPL006; see docs/contracts.md).")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files or directories to lint (default: "
+                         "src tests benchmarks examples under the repo "
+                         "root)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detect pyproject.toml)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated RPL codes to report "
+                         "(e.g. RPL003,RPL004)")
+    ap.add_argument("--list-suppressions", action="store_true",
+                    help="print every suppression comment and exit 0")
+    ap.add_argument("--statistics", action="store_true",
+                    help="print per-rule violation counts")
+    args = ap.parse_args(argv)
+
+    root = (args.root or _repo_root(Path.cwd())).resolve()
+    select = args.select.split(",") if args.select else None
+    result = run_lint(root, paths=args.paths or None, select=select)
+
+    if args.list_suppressions:
+        for s in result.suppressions:
+            reason = f" ({s.reason})" if s.reason else "  [NO REASON]"
+            kind = "disable-file" if s.file_level else "disable"
+            print(f"{s.path}:{s.line}: {kind}={','.join(s.codes)}{reason}")
+        print(f"{len(result.suppressions)} suppression(s)")
+        return 0
+
+    for d in result.diagnostics:
+        print(d.render())
+    if args.statistics:
+        counts: dict = {}
+        for d in result.diagnostics:
+            counts[d.code] = counts.get(d.code, 0) + 1
+        for code in sorted(counts):
+            print(f"{code}: {counts[code]}")
+    n = len(result.diagnostics)
+    if n:
+        print(f"reprolint: {n} violation(s), "
+              f"{result.suppressed} suppressed", file=sys.stderr)
+        return 1
+    print(f"reprolint: clean ({result.suppressed} suppressed, "
+          f"{len(result.suppressions)} suppression comment(s))")
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

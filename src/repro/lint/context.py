@@ -1,0 +1,211 @@
+"""File loading, suppression parsing, and per-module AST facts.
+
+A :class:`RepoContext` parses every Python file under the lint roots once
+and exposes :class:`ModuleInfo` objects the rules consume.  Everything
+here is pure stdlib ``ast`` — importing the linted code (and hence jax)
+is deliberately impossible, so the linter runs in the dependency-free CI
+lint job and can never be confused by import-time side effects.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: directories searched when no explicit paths are given (issue contract:
+#: the determinism rules police the library AND its consumers).
+DEFAULT_ROOTS = ("src", "tests", "benchmarks", "examples")
+
+#: path fragments excluded from linting.  The lint fixtures contain
+#: deliberate violations (they are the rules' positive tests) and must
+#: never make the repo-clean gate fail.
+DEFAULT_EXCLUDES = ("__pycache__", "tests/fixtures/lint")
+
+#: suppression comments: kind (``disable`` / ``disable-file``), a
+#: comma-separated code list, and an optional parenthesised reason.
+#: Only real COMMENT tokens are scanned (docstrings showing the syntax
+#: as an example never count).
+_SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*(?P<kind>disable|disable-file)\s*=\s*"
+    r"(?P<codes>RPL\d{3}(?:\s*,\s*RPL\d{3})*)\s*"
+    r"(?:\((?P<reason>.*)\))?")
+
+
+@dataclasses.dataclass
+class Suppression:
+    """One ``# reprolint: disable=...`` comment."""
+
+    path: str                 # repo-relative posix path
+    line: int                 # 1-based line the comment sits on
+    codes: Tuple[str, ...]
+    reason: str               # "" when undocumented (RPL006 flags that)
+    file_level: bool          # disable-file= applies to the whole module
+    used: bool = False        # did it actually mask a diagnostic?
+
+    def covers(self, code: str, line: int) -> bool:
+        if code not in self.codes:
+            return False
+        if self.file_level:
+            return True
+        # Same line, or an own-line comment directly above the violation.
+        return line in (self.line, self.line + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One rule violation at a source location."""
+
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+class ModuleInfo:
+    """Parsed facts about one Python file."""
+
+    def __init__(self, path: Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel                    # repo-relative posix path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=rel)
+        self.module = self._module_name(rel)
+        self.suppressions = self._parse_suppressions()
+        # alias -> absolute module name, for ``import numpy as np`` and
+        # ``from . import dispatch as _dispatch`` alike.
+        self.import_aliases: Dict[str, str] = {}
+        # local name -> (module, original name) for from-imports.
+        self.from_imports: Dict[str, Tuple[str, str]] = {}
+        self._collect_imports()
+        # module-level function defs by name (class methods excluded —
+        # the conservative call graph resolves plain-name calls only).
+        self.top_functions: Dict[str, ast.AST] = {
+            n.name: n for n in self.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        # module-level dict registries whose values are local functions
+        # (the ``_KERNELS = {"step": _run_one, ...}`` pattern): name ->
+        # member function names.
+        self.registries: Dict[str, List[str]] = self._collect_registries()
+
+    # -- construction helpers ------------------------------------------------
+
+    @staticmethod
+    def _module_name(rel: str) -> Optional[str]:
+        """Dotted module name for files under src/ (None elsewhere)."""
+        if not rel.startswith("src/"):
+            return None
+        parts = Path(rel[len("src/"):]).with_suffix("").parts
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def _parse_suppressions(self) -> List[Suppression]:
+        out = []
+        try:
+            tokens = tokenize.generate_tokens(
+                io.StringIO(self.source).readline)
+            comments = [(t.start[0], t.string) for t in tokens
+                        if t.type == tokenize.COMMENT]
+        except tokenize.TokenError:
+            comments = []
+        for i, text in comments:
+            m = _SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            codes = tuple(c.strip() for c in m.group("codes").split(","))
+            out.append(Suppression(
+                path=self.rel, line=i, codes=codes,
+                reason=(m.group("reason") or "").strip(),
+                file_level=m.group("kind") == "disable-file"))
+        return out
+
+    def _collect_imports(self) -> None:
+        pkg_parts = self.module.split(".")[:-1] if self.module else []
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_aliases[a.asname or a.name.split(".")[0]] = \
+                        a.name
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:   # relative: resolve against this package
+                    up = pkg_parts[:len(pkg_parts) - (node.level - 1)]
+                    base = ".".join(up + ([node.module] if node.module
+                                          else []))
+                for a in node.names:
+                    local = a.asname or a.name
+                    # ``from . import dispatch as _dispatch`` binds a
+                    # MODULE; ``from ..core.failures import as_process``
+                    # binds a name inside one.  Record both views — the
+                    # call-graph resolver checks module aliases first.
+                    self.import_aliases.setdefault(
+                        local, f"{base}.{a.name}" if base else a.name)
+                    self.from_imports[local] = (base, a.name)
+
+    def _collect_registries(self) -> Dict[str, List[str]]:
+        out: Dict[str, List[str]] = {}
+        for node in self.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Dict)):
+                continue
+            members = [v.id for v in node.value.values
+                       if isinstance(v, ast.Name)]
+            if members:
+                out[node.targets[0].id] = members
+        return out
+
+
+class RepoContext:
+    """Every linted module, plus cross-module lookup for the call graph."""
+
+    def __init__(self, root: Path, paths: Optional[Iterable[Path]] = None,
+                 excludes: Tuple[str, ...] = DEFAULT_EXCLUDES):
+        self.root = Path(root).resolve()
+        self.excludes = excludes
+        self.modules: List[ModuleInfo] = []
+        self.by_module: Dict[str, ModuleInfo] = {}
+        self.errors: List[Diagnostic] = []
+        for f in sorted(self._files(paths)):
+            rel = f.relative_to(self.root).as_posix()
+            try:
+                info = ModuleInfo(f, rel, f.read_text())
+            except (SyntaxError, UnicodeDecodeError) as e:
+                line = getattr(e, "lineno", 1) or 1
+                self.errors.append(Diagnostic(
+                    rel, line, 0, "RPL999", f"unparseable file: {e}"))
+                continue
+            self.modules.append(info)
+            if info.module:
+                self.by_module[info.module] = info
+
+    def _files(self, paths: Optional[Iterable[Path]]) -> List[Path]:
+        explicit = paths is not None
+        if explicit:
+            roots = [Path(p).resolve() for p in paths]
+        else:
+            roots = [self.root / r for r in DEFAULT_ROOTS]
+        out = []
+        for r in roots:
+            if r.is_file() and r.suffix == ".py":
+                out.append(r)
+                continue
+            for f in sorted(r.rglob("*.py")):
+                rel = f.resolve().relative_to(self.root).as_posix()
+                # Explicit paths bypass the fixture exclusion (that is how
+                # the rule tests lint the fixtures on purpose); nothing
+                # ever lints __pycache__.
+                skip = ("__pycache__",) if explicit else self.excludes
+                if any(x in rel for x in skip):
+                    continue
+                out.append(f.resolve())
+        return out

@@ -1,0 +1,90 @@
+"""Rule execution, suppression application, and RPL006 hygiene."""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from .context import Diagnostic, RepoContext, Suppression
+from .rules import ALL_RULES
+
+
+@dataclasses.dataclass
+class LintResult:
+    diagnostics: List[Diagnostic]     # post-suppression, sorted
+    suppressions: List[Suppression]   # every suppression comment found
+    suppressed: int                   # diagnostics masked by suppressions
+
+    @property
+    def ok(self) -> bool:
+        return not self.diagnostics
+
+    def used_suppressions(self) -> List[Suppression]:
+        return [s for s in self.suppressions if s.used]
+
+
+def run_lint(root: Path, paths: Optional[Iterable[Path]] = None,
+             select: Optional[Sequence[str]] = None,
+             rules: Sequence = ALL_RULES) -> LintResult:
+    """Lint ``root`` (or explicit ``paths``) and apply suppressions.
+
+    ``select`` restricts reporting to the given RPL codes (RPL006 and
+    RPL999 are always implied members of their own selection).
+    """
+    ctx = RepoContext(root, paths=paths)
+    raw: List[Diagnostic] = list(ctx.errors)
+    for rule in rules:
+        raw.extend(rule(ctx))
+    # rules may traverse overlapping node sets (decorator Call vs its
+    # Attribute func); report each location/code once.
+    raw = sorted(set(raw), key=lambda d: (d.path, d.line, d.col, d.code))
+
+    by_path = {info.rel: info.suppressions for info in ctx.modules}
+    kept: List[Diagnostic] = []
+    suppressed = 0
+    for d in raw:
+        masked = False
+        for s in by_path.get(d.path, ()):
+            if s.covers(d.code, d.line):
+                s.used = True
+                masked = True
+        if masked:
+            suppressed += 1
+        else:
+            kept.append(d)
+
+    # RPL006: suppression hygiene.  A suppression must both (a) mask a
+    # real diagnostic and (b) carry a reason — otherwise it is itself a
+    # violation, so the documented-suppression budget polices itself.
+    all_supp = [s for info in ctx.modules for s in info.suppressions]
+    hygiene: List[Diagnostic] = []
+    for s in all_supp:
+        if not s.used:
+            hygiene.append(Diagnostic(
+                s.path, s.line, 0, "RPL006",
+                f"unused suppression for {','.join(s.codes)} — remove it "
+                "(nothing at this site triggers the rule any more)"))
+        if not s.reason:
+            hygiene.append(Diagnostic(
+                s.path, s.line, 0, "RPL006",
+                "suppression without a reason — write "
+                "`# reprolint: disable=RPLxxx (why this is deliberate)`"))
+    # RPL006 findings are themselves suppressible through the same
+    # mechanism (a second suppression on the same line covering RPL006).
+    for d in hygiene:
+        masked = False
+        for s in by_path.get(d.path, ()):
+            if d.code in s.codes and (s.file_level or s.line == d.line):
+                s.used = True
+                masked = True
+        if masked:
+            suppressed += 1
+        else:
+            kept.append(d)
+
+    if select:
+        allowed = set(select)
+        kept = [d for d in kept if d.code in allowed]
+    kept.sort(key=lambda d: (d.path, d.line, d.col, d.code))
+    return LintResult(diagnostics=kept, suppressions=all_supp,
+                      suppressed=suppressed)

@@ -1,0 +1,298 @@
+"""RPL004 — host synchronization reachable from jitted entry points.
+
+Builds a conservative call graph rooted at the repo's jit sites:
+
+* defs decorated with ``@jit`` / ``@jax.jit`` /
+  ``@functools.partial(jax.jit, ...)``,
+* plain names passed to ``jax.jit(f)`` / ``shard_map(f, ...)``,
+* ``build=`` keyword values handed to the dispatch layer
+  (``sim/dispatch.py`` jits them): a Name roots that def, a factory
+  call roots the factory's *nested* defs (the returned closures), and
+  a lambda contributes the calls in its body.
+
+Reachability then closes over plain-name calls (local defs, nested
+defs, from-imports, module-alias attribute calls) and over the
+registry-dict pattern (``_KERNELS = {"step": _run_one, ...}`` — any
+reference to the dict name pulls in every member).  Inside reachable
+function bodies, host-sync operations — ``.item()``, ``.tolist()``,
+``.block_until_ready()``, ``float()``/``int()`` on non-static values,
+``np.asarray``/``np.array`` — are flagged: each one forces a device →
+host transfer (or a trace error) in the middle of a compiled hot path.
+
+Parameters named in a jit's ``static_argnames`` are exempt from the
+``float()``/``int()`` check — they are Python values at trace time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .context import Diagnostic, ModuleInfo, RepoContext
+
+#: (module, function-name) — a node in the call graph.  Nested defs get
+#: a dotted function name ("outer.inner").
+Node = Tuple[str, str]
+
+_JIT_NAMES = {"jax.jit", "jit", "jax.experimental.shard_map.shard_map",
+              "shard_map"}
+
+
+def _resolve(info: ModuleInfo, node: ast.AST) -> Optional[str]:
+    from .rules import resolve
+    return resolve(info, node)
+
+
+def _is_jit_ref(info: ModuleInfo, node: ast.AST) -> bool:
+    r = _resolve(info, node)
+    return r is not None and (r in _JIT_NAMES or r.endswith(".shard_map"))
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    """Constant static_argnames from functools.partial(jax.jit, ...)."""
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            names = set()
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(
+                        sub.value, str):
+                    names.add(sub.value)
+            return names
+    return set()
+
+
+class _Module:
+    """Per-module function table with dotted names for nested defs."""
+
+    def __init__(self, info: ModuleInfo):
+        self.info = info
+        self.functions: Dict[str, ast.AST] = {}
+        self.parent: Dict[str, Optional[str]] = {}
+        self._index(info.tree.body, prefix="")
+
+    def _index(self, body, prefix: str) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                name = f"{prefix}{node.name}"
+                self.functions[name] = node
+                self.parent[name] = prefix[:-1] if prefix else None
+                self._index(node.body, prefix=f"{name}.")
+            elif isinstance(node, (ast.If, ast.Try, ast.With, ast.For,
+                                   ast.While, ast.ClassDef)):
+                # functions defined under module-level control flow (or in
+                # classes) still participate, with a flat name.
+                self._index(node.body, prefix=prefix)
+
+    def children(self, name: str) -> List[str]:
+        dot = f"{name}."
+        return [n for n in self.functions
+                if n.startswith(dot) and "." not in n[len(dot):]]
+
+
+class CallGraph:
+    def __init__(self, ctx: RepoContext):
+        self.ctx = ctx
+        # src modules keyed by dotted name; tests/benchmarks/examples by
+        # repo-relative path (they can still root jits and call into src).
+        self.mods: Dict[str, _Module] = {
+            (info.module or info.rel): _Module(info)
+            for info in ctx.modules}
+        self.static_args: Dict[Node, Set[str]] = {}
+        self.roots = self._find_roots()
+        self.reachable = self._walk(self.roots)
+
+    # -- roots ---------------------------------------------------------------
+
+    def _root_from_expr(self, mod: _Module, scope: str,
+                        expr: ast.AST, roots: Set[Node],
+                        factory_call: bool = False) -> None:
+        """Interpret a value handed to jit/shard_map/build=."""
+        info = mod.info
+        if isinstance(expr, ast.Name):
+            name = self._lookup(mod, scope, expr.id)
+            if name is not None:
+                if factory_call:
+                    owner = self.mods.get(name[0])
+                    if owner is not None:
+                        roots.update((name[0], c)
+                                     for c in owner.children(name[1]))
+                        # the factory body itself runs on host, but the
+                        # closures it returns capture registry members
+                        # (``kernel = _KERNELS[kind]``) — those members
+                        # run in-trace, so they root too.
+                        fbody = owner.functions[name[1]]
+                        oinfo = owner.info
+                        for sub in ast.walk(fbody):
+                            if isinstance(sub, ast.Name):
+                                for m in oinfo.registries.get(sub.id, ()):
+                                    tgt = self._lookup(owner, name[1], m)
+                                    if tgt is not None:
+                                        roots.add(tgt)
+                else:
+                    roots.add(name)
+        elif isinstance(expr, ast.Lambda):
+            # a lambda body cannot contain statements; root the plain-name
+            # functions it calls instead.
+            for sub in ast.walk(expr.body):
+                if isinstance(sub, ast.Call) and isinstance(
+                        sub.func, ast.Name):
+                    self._root_from_expr(mod, scope, sub.func, roots)
+        elif isinstance(expr, ast.Call):
+            # jit(shard_map(f, ...)) unwraps; build=_factory(...) roots the
+            # factory's nested defs (its returned closures).
+            if _is_jit_ref(info, expr.func):
+                if expr.args:
+                    self._root_from_expr(mod, scope, expr.args[0], roots)
+            elif isinstance(expr.func, ast.Name):
+                self._root_from_expr(mod, scope, expr.func, roots,
+                                     factory_call=True)
+
+    def _find_roots(self) -> Set[Node]:
+        roots: Set[Node] = set()
+        for mname, mod in self.mods.items():
+            info = mod.info
+            for fname, fn in mod.functions.items():
+                scope = mod.parent[fname] or ""
+                for dec in fn.decorator_list:
+                    statics: Set[str] = set()
+                    is_jit = _is_jit_ref(info, dec)
+                    if isinstance(dec, ast.Call):
+                        if _is_jit_ref(info, dec.func):
+                            is_jit = True
+                            statics = _static_argnames(dec)
+                        elif (_resolve(info, dec.func)
+                              == "functools.partial" and dec.args
+                              and _is_jit_ref(info, dec.args[0])):
+                            is_jit = True
+                            statics = _static_argnames(dec)
+                    if is_jit:
+                        roots.add((mname, fname))
+                        self.static_args[(mname, fname)] = statics
+            # jit/shard_map/build= call sites, resolved in their
+            # lexical scope: module level plus each function's body
+            # (so ``jax.jit(run_grid)`` inside a maker finds the
+            # nested ``run_grid``).
+            sites = [("", info.tree)] + [
+                (fname, fn) for fname, fn in mod.functions.items()]
+            for scope, tree in sites:
+                for node in ast.walk(tree):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    if _is_jit_ref(info, node.func) and node.args:
+                        self._root_from_expr(mod, scope, node.args[0],
+                                             roots)
+                    for kw in node.keywords:
+                        if kw.arg == "build":
+                            self._root_from_expr(mod, scope, kw.value,
+                                                 roots)
+        return roots
+
+    # -- reachability --------------------------------------------------------
+
+    def _lookup(self, mod: _Module, scope: str, name: str) -> Optional[Node]:
+        """Resolve a plain name in ``scope`` to a call-graph node."""
+        # innermost enclosing def first, then module level
+        prefix = scope
+        while True:
+            cand = f"{prefix}.{name}" if prefix else name
+            if cand in mod.functions:
+                return (mod.info.module or mod.info.rel, cand)
+            if not prefix:
+                break
+            prefix = mod.parent.get(prefix) or ""
+        # from-imports into another linted module
+        tgt = mod.info.from_imports.get(name)
+        if tgt:
+            tmod, tname = tgt
+            other = self.mods.get(tmod)
+            if other and tname in other.functions:
+                return (tmod, tname)
+        return None
+
+    def _walk(self, roots: Set[Node]) -> Set[Node]:
+        seen: Set[Node] = set()
+        work = [r for r in roots]
+        while work:
+            node = work.pop()
+            if node in seen:
+                continue
+            mname, fname = node
+            mod = self.mods.get(mname)
+            if mod is None or fname not in mod.functions:
+                continue
+            seen.add(node)
+            info, fn = mod.info, mod.functions[fname]
+            # nested defs of a reachable function run in-trace (scan
+            # bodies, local closures)
+            work.extend((mname, c) for c in mod.children(fname))
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call):
+                    if isinstance(sub.func, ast.Name):
+                        tgt = self._lookup(mod, fname, sub.func.id)
+                        if tgt:
+                            work.append(tgt)
+                    elif isinstance(sub.func, ast.Attribute) and isinstance(
+                            sub.func.value, ast.Name):
+                        # alias.attr(...) across modules
+                        base = info.import_aliases.get(sub.func.value.id)
+                        other = self.mods.get(base) if base else None
+                        if other and sub.func.attr in other.functions:
+                            work.append((base, sub.func.attr))
+                elif isinstance(sub, ast.Name):
+                    members = info.registries.get(sub.id)
+                    if members:
+                        for m in members:
+                            tgt = self._lookup(mod, "", m)
+                            if tgt:
+                                work.append(tgt)
+        return seen
+
+
+# ---------------------------------------------------------------------------
+# the rule
+# ---------------------------------------------------------------------------
+
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+def rule_rpl004(ctx: RepoContext) -> List[Diagnostic]:
+    graph = CallGraph(ctx)
+    out: List[Diagnostic] = []
+    for mname, fname in sorted(graph.reachable):
+        mod = graph.mods[mname]
+        info, fn = mod.info, mod.functions[fname]
+        statics = graph.static_args.get((mname, fname), set())
+        own_nested = {mod.functions[c] for c in mod.children(fname)}
+        for sub in ast.walk(fn):
+            if sub in own_nested or (
+                    isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and sub is not fn):
+                continue  # nested defs are reported as their own nodes
+            if not isinstance(sub, ast.Call):
+                continue
+            f = sub.func
+            if isinstance(f, ast.Attribute) and f.attr in _SYNC_METHODS:
+                out.append(Diagnostic(
+                    info.rel, sub.lineno, sub.col_offset, "RPL004",
+                    f".{f.attr}() in '{fname}' (reachable from a jitted "
+                    "entry point) forces a device->host sync — keep "
+                    "reductions on device and sync once at the boundary"))
+            elif isinstance(f, ast.Name) and f.id in ("float", "int"):
+                arg = sub.args[0] if sub.args else None
+                if isinstance(arg, ast.Constant):
+                    continue
+                if isinstance(arg, ast.Name) and arg.id in statics:
+                    continue  # static_argnames are Python values at trace
+                out.append(Diagnostic(
+                    info.rel, sub.lineno, sub.col_offset, "RPL004",
+                    f"{f.id}() on a possibly-traced value in '{fname}' "
+                    "(reachable from a jitted entry point) — this is a "
+                    "host sync or a trace error; use jnp casts"))
+            else:
+                r = _resolve(info, f)
+                if r in ("numpy.asarray", "numpy.array"):
+                    out.append(Diagnostic(
+                        info.rel, sub.lineno, sub.col_offset, "RPL004",
+                        f"np.{r.rsplit('.', 1)[-1]}() in '{fname}' "
+                        "(reachable from a jitted entry point) pulls the "
+                        "operand to host memory — use jnp.asarray"))
+    return out

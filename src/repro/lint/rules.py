@@ -1,0 +1,373 @@
+"""The reprolint rules (RPL001–RPL005).
+
+Each rule is a callable ``rule(ctx) -> List[Diagnostic]`` over a parsed
+:class:`~repro.lint.context.RepoContext`.  RPL006 (suppression hygiene)
+is not here — it runs in the engine after suppressions are applied,
+because "unused" is only knowable post-suppression.
+
+All name resolution goes through each module's recorded import aliases,
+so ``import numpy as np`` / ``from jax import numpy as jnp`` /
+``from . import engine as _engine`` all resolve to their canonical
+dotted paths before matching.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .context import Diagnostic, ModuleInfo, RepoContext
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def resolve(info: ModuleInfo, node: ast.AST) -> Optional[str]:
+    """Canonical dotted path with the leading alias expanded.
+
+    ``np.random.seed`` -> ``numpy.random.seed`` when ``np`` was imported
+    as numpy; a from-imported name resolves to ``module.name``.
+    """
+    dotted = dotted_name(node)
+    if dotted is None:
+        return None
+    head, _, rest = dotted.partition(".")
+    if head in info.import_aliases:
+        base = info.import_aliases[head]
+        return f"{base}.{rest}" if rest else base
+    if head in info.from_imports:
+        mod, orig = info.from_imports[head]
+        base = f"{mod}.{orig}" if mod else orig
+        return f"{base}.{rest}" if rest else base
+    return dotted
+
+
+def _diag(info: ModuleInfo, node: ast.AST, code: str, msg: str) -> Diagnostic:
+    return Diagnostic(info.rel, getattr(node, "lineno", 1),
+                      getattr(node, "col_offset", 0), code, msg)
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — unseeded / host randomness
+# ---------------------------------------------------------------------------
+
+#: files allowed to construct *seeded* host RNGs (the approved seeded-RNG
+#: sites from the issue: failure injection, the load generator, and the
+#: engine's host presampling fallbacks).
+RPL001_ALLOWLIST = (
+    "src/repro/ft/failures.py",
+    "src/repro/serve/loadgen.py",
+    "src/repro/sim/engine.py",
+)
+
+#: numpy.random attributes that are seeded-RNG *constructors*, not
+#: global-state draws.
+_NP_RNG_CONSTRUCTORS = {
+    "default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+    "MT19937", "RandomState", "BitGenerator",
+}
+
+#: call targets whose argument position is a *seed* — time.time() inside
+#: one of these is nondeterministic seeding.
+_SEED_SINKS = ("default_rng", "seed", "PRNGKey", "SeedSequence",
+               "RandomState", "key")
+
+
+def _time_call_inside(info: ModuleInfo, node: ast.Call) -> Optional[ast.Call]:
+    for arg in list(node.args) + [kw.value for kw in node.keywords]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Call):
+                r = resolve(info, sub.func)
+                if r in ("time.time", "time.time_ns", "time.monotonic",
+                         "time.monotonic_ns"):
+                    return sub
+    return None
+
+
+def rule_rpl001(ctx: RepoContext) -> List[Diagnostic]:
+    out = []
+    for info in ctx.modules:
+        in_src = info.rel.startswith("src/")
+        allowed_seeded = (not in_src) or info.rel in RPL001_ALLOWLIST
+        for node in ast.walk(info.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            r = resolve(info, node.func)
+            if r is None:
+                continue
+            tail = r.rsplit(".", 1)[-1]
+            if tail in _SEED_SINKS:
+                t = _time_call_inside(info, node)
+                if t is not None:
+                    out.append(_diag(
+                        info, t, "RPL001",
+                        "wall-clock time used as an RNG seed — "
+                        "nondeterministic across runs; thread an explicit "
+                        "seed instead"))
+                    continue
+            if r.startswith("numpy.random."):
+                attr = r[len("numpy.random."):].split(".")[0]
+                if attr not in _NP_RNG_CONSTRUCTORS:
+                    out.append(_diag(
+                        info, node, "RPL001",
+                        f"global-state numpy RNG call np.random.{attr}() — "
+                        "use jax.random with a threaded key, or a seeded "
+                        "np.random.default_rng at an approved site"))
+                elif attr in ("default_rng", "RandomState"):
+                    if not node.args and not node.keywords:
+                        out.append(_diag(
+                            info, node, "RPL001",
+                            f"unseeded np.random.{attr}() draws entropy "
+                            "from the OS — pass an explicit seed"))
+                    elif not allowed_seeded:
+                        out.append(_diag(
+                            info, node, "RPL001",
+                            "seeded host RNG constructed outside the "
+                            "approved sites (ft/failures.py, "
+                            "serve/loadgen.py, sim/engine.py) — library "
+                            "code must use jax.random keys"))
+            elif r.split(".")[0] == "random" and (
+                    "random" in info.import_aliases
+                    or "random" == info.from_imports.get(
+                        r.split(".")[-1], ("",))[0]):
+                out.append(_diag(
+                    info, node, "RPL001",
+                    f"stdlib random call {r}() uses hidden global state — "
+                    "use jax.random with a threaded key"))
+            elif (info.from_imports.get(r.split(".")[0], ("",))[0]
+                  == "random"):
+                out.append(_diag(
+                    info, node, "RPL001",
+                    f"stdlib random call {r}() uses hidden global state — "
+                    "use jax.random with a threaded key"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — unbounded / unregistered caches
+# ---------------------------------------------------------------------------
+
+
+def _is_lru_cache(info: ModuleInfo, node: ast.AST) -> Optional[str]:
+    """Resolve a decorator/call to 'lru_cache' or 'cache', else None."""
+    target = node.func if isinstance(node, ast.Call) else node
+    r = resolve(info, target)
+    if r in ("functools.lru_cache", "lru_cache"):
+        return "lru_cache"
+    if r in ("functools.cache", "cache") and r.startswith("functools"):
+        return "cache"
+    return None
+
+
+def rule_rpl002(ctx: RepoContext) -> List[Diagnostic]:
+    out = []
+    for info in ctx.modules:
+        for node in ast.walk(info.tree):
+            # functools.cache / lru_cache(maxsize=None): unbounded.
+            kind = _is_lru_cache(info, node) if isinstance(
+                node, (ast.Call, ast.Attribute, ast.Name)) else None
+            if kind == "cache":
+                out.append(_diag(
+                    info, node, "RPL002",
+                    "functools.cache is unbounded — use "
+                    "functools.lru_cache with an explicit maxsize"))
+            elif kind == "lru_cache" and isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "maxsize" and isinstance(
+                            kw.value, ast.Constant) and kw.value.value is None:
+                        out.append(_diag(
+                            info, node, "RPL002",
+                            "lru_cache(maxsize=None) is unbounded — compiled"
+                            "-callable caches must be bounded (and visible "
+                            "to cache_stats() where applicable)"))
+            # LRUCache(...) without name=: invisible to cache_stats().
+            if isinstance(node, ast.Call):
+                r = resolve(info, node.func)
+                if r is not None and r.rsplit(".", 1)[-1] == "LRUCache":
+                    if not any(kw.arg == "name" for kw in node.keywords):
+                        out.append(_diag(
+                            info, node, "RPL002",
+                            "LRUCache constructed without name= — it will "
+                            "not register with the cache_stats() registry"))
+        # module-level dict caches (`_FOO_CACHE = {}` and friends).
+        for stmt in info.tree.body:
+            target = None
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)):
+                target, value = stmt.targets[0], stmt.value
+            elif (isinstance(stmt, ast.AnnAssign)
+                  and isinstance(stmt.target, ast.Name)
+                  and stmt.value is not None):
+                target, value = stmt.target, stmt.value
+            if target is None or "cache" not in target.id.lower():
+                continue
+            is_dict = isinstance(value, ast.Dict) or (
+                isinstance(value, ast.Call)
+                and resolve(info, value.func) in ("dict", "builtins.dict"))
+            if is_dict and info.rel.startswith("src/"):
+                out.append(_diag(
+                    info, stmt, "RPL002",
+                    f"module-level dict cache '{target.id}' is unbounded "
+                    "and invisible to cache_stats() — use "
+                    "repro.sim.dispatch.LRUCache(maxsize, name=...)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL003 — dtype contract in the f64 subsystems
+# ---------------------------------------------------------------------------
+
+RPL003_SUBSYSTEMS = ("src/repro/sim/", "src/repro/core/", "src/repro/serve/")
+
+#: constructors whose dtype must be explicit in the f64 subsystems, with
+#: the positional index a dtype may legally occupy.
+_DTYPE_CTORS = {"zeros": 1, "ones": 1, "arange": 3, "asarray": 1}
+
+
+def _is_jnp_path(resolved: str, ctor: str) -> bool:
+    return (resolved == f"jax.numpy.{ctor}"
+            or resolved.endswith(f".jnp.{ctor}")
+            or resolved == f"jnp.{ctor}")
+
+
+def rule_rpl003(ctx: RepoContext) -> List[Diagnostic]:
+    out = []
+    for info in ctx.modules:
+        if not info.rel.startswith(RPL003_SUBSYSTEMS):
+            continue
+        for node in ast.walk(info.tree):
+            if isinstance(node, ast.Call):
+                r = resolve(info, node.func)
+                if r is None:
+                    continue
+                ctor = r.rsplit(".", 1)[-1]
+                if ctor in _DTYPE_CTORS and _is_jnp_path(r, ctor):
+                    has_kw = any(kw.arg == "dtype" for kw in node.keywords)
+                    has_pos = len(node.args) > _DTYPE_CTORS[ctor]
+                    if not (has_kw or has_pos):
+                        out.append(_diag(
+                            info, node, "RPL003",
+                            f"jnp.{ctor}() without an explicit dtype in an "
+                            "f64 subsystem — pass dtype=jnp.float64 (or the "
+                            "intended integer/bool dtype)"))
+            if (isinstance(node, ast.Attribute) and node.attr == "float32"
+                    and resolve(info, node) is not None
+                    and resolve(info, node).split(".")[0] in (
+                        "jax", "numpy", "jnp", "np")):
+                out.append(_diag(
+                    info, node, "RPL003",
+                    "float32 dtype in an f64 subsystem — the model/solver "
+                    "stack is f64-everywhere (docs/contracts.md)"))
+            if isinstance(node, ast.Constant) and node.value == "float32":
+                out.append(_diag(
+                    info, node, "RPL003",
+                    "'float32' dtype string in an f64 subsystem"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RPL005 — Python branching on traced values inside scan bodies
+# ---------------------------------------------------------------------------
+
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size"}
+_STATIC_FUNCS = {"len", "isinstance", "type"}
+
+
+def _dynamic_ref(node: ast.AST, tainted: set) -> bool:
+    """Does ``node`` touch a tainted name outside static accessors?"""
+    if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+        return False
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in _STATIC_FUNCS:
+            return False
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    return any(_dynamic_ref(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+def _taint(fn: ast.AST) -> set:
+    """Parameters of a scan body plus names derived from them."""
+    args = fn.args
+    tainted = {a.arg for a in (
+        args.posonlyargs + args.args + args.kwonlyargs)}
+    for a in (args.vararg, args.kwarg):
+        if a is not None:
+            tainted.add(a.arg)
+    for _ in range(2):  # tiny fixed-point for chained assignments
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and _dynamic_ref(
+                    node.value, tainted):
+                for t in node.targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+    return tainted
+
+
+def _scan_bodies(info: ModuleInfo) -> List[Tuple[ast.AST, ast.AST]]:
+    """(scan-call, body FunctionDef) pairs resolvable in this module."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(info.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, []).append(node)
+    out = []
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        r = resolve(info, node.func)
+        if r not in ("jax.lax.scan", "lax.scan"):
+            continue
+        if not node.args:
+            continue
+        body = node.args[0]
+        if isinstance(body, ast.Call):  # functools.partial(step, ...)
+            body = body.args[0] if body.args else None
+        if isinstance(body, ast.Name) and body.id in defs:
+            for d in defs[body.id]:
+                out.append((node, d))
+    return out
+
+
+def rule_rpl005(ctx: RepoContext) -> List[Diagnostic]:
+    out = []
+    for info in ctx.modules:
+        seen = set()
+        for _, body in _scan_bodies(info):
+            if id(body) in seen:
+                continue
+            seen.add(id(body))
+            tainted = _taint(body)
+            for node in ast.walk(body):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)) and node is not body:
+                    continue  # nested defs judged via their own scan calls
+                if isinstance(node, (ast.If, ast.While)) and _dynamic_ref(
+                        node.test, tainted):
+                    kw = "while" if isinstance(node, ast.While) else "if"
+                    out.append(_diag(
+                        info, node, "RPL005",
+                        f"Python `{kw}` on a traced value inside the scan "
+                        f"body '{body.name}' — tracing freezes one branch; "
+                        "use jnp.where / lax.cond / lax.select"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+from .hotpath import rule_rpl004  # noqa: E402  (cycle-free, kept adjacent)
+
+ALL_RULES: Sequence = (rule_rpl001, rule_rpl002, rule_rpl003,
+                       rule_rpl004, rule_rpl005)

@@ -21,8 +21,7 @@ Layout decisions (TPU/GSPMD, see DESIGN.md):
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

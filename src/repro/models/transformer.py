@@ -14,9 +14,7 @@ positions; the cache sequence axis carries the logical name ``kv_seq_mp``
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

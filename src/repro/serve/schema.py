@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 from ..core.params import (CheckpointParams, MultilevelCheckpointParams,
                            MultilevelPowerParams, PowerParams)

@@ -112,6 +112,7 @@ class CacheStats:
 
 
 #: name -> LRUCache for every cache constructed with a ``name``.
+# reprolint: disable=RPL002 (this IS the cache_stats() registry: it holds weak references to the bounded LRUCaches themselves, one per name, not compiled callables)
 _CACHE_REGISTRY: dict = {}
 
 
@@ -247,7 +248,7 @@ def effective_devices(config: Optional[DispatchConfig] = None) -> int:
     return max(1, n)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=32)
 def sweep_mesh(n_devices: int) -> Mesh:
     """The 1-D ``("sweep",)`` mesh over the first ``n_devices`` devices."""
     return Mesh(np.array(jax.devices()[:n_devices]), (SWEEP_AXIS,))
@@ -395,6 +396,7 @@ def run(key, build, args, in_axes: Sequence[Optional[int]], out_axes,
         # CRN schedule must not round-trip through the host per chunk).
         const = [None if ax is not None
                  else (a if isinstance(a, jnp.ndarray)
+                       # reprolint: disable=RPL003 (deliberately dtype-preserving: broadcast args arrive as f64 grids, int32 m-candidates, or bool masks, and the chunker must not recast any of them)
                        else jnp.asarray(np.asarray(a)))
                  for a, ax in zip(args, in_axes)]
         treedef = None

@@ -566,7 +566,7 @@ def presample_gaps_device(grid: ParamGrid, n_trials: int, capacity: int,
     fn = _DEVICE_SAMPLERS.get(tok)
     with enable_x64():
         key = jax.random.PRNGKey(int(seed))
-        mean = jnp.asarray(flat.mu)[:, None, None]
+        mean = jnp.asarray(flat.mu, dtype=jnp.float64)[:, None, None]
         if fn is None:
             fn = jax.jit(lambda k, m: proc.sample_gaps(k, size, mean=m))
             out = fn(key, mean)     # NotImplementedError escapes un-cached
@@ -1328,12 +1328,20 @@ def simulate_trajectories_ml(T, m, grid: MultilevelParamGrid,
     n_steps = 1 << (max(int(n_steps), 1) - 1).bit_length()
 
     with enable_x64():
+        f64 = jnp.float64
         out = _runner_ml(int(n_steps))(
-            jnp.asarray(T_arr), jnp.asarray(m_arr), jnp.asarray(flat.C1),
-            jnp.asarray(flat.C2), jnp.asarray(flat.R1),
-            jnp.asarray(flat.R2), jnp.asarray(flat.D1),
-            jnp.asarray(flat.D2), jnp.asarray(flat.omega),
-            jnp.asarray(Tb_arr), jnp.asarray(gaps), jnp.asarray(hard))
+            jnp.asarray(T_arr, dtype=f64),
+            jnp.asarray(m_arr, dtype=jnp.int32),
+            jnp.asarray(flat.C1, dtype=f64),
+            jnp.asarray(flat.C2, dtype=f64),
+            jnp.asarray(flat.R1, dtype=f64),
+            jnp.asarray(flat.R2, dtype=f64),
+            jnp.asarray(flat.D1, dtype=f64),
+            jnp.asarray(flat.D2, dtype=f64),
+            jnp.asarray(flat.omega, dtype=f64),
+            jnp.asarray(Tb_arr, dtype=f64),
+            jnp.asarray(gaps, dtype=f64),
+            jnp.asarray(hard, dtype=jnp.bool_))
         out = {k: np.asarray(v) for k, v in out.items()}
 
     shp = grid.shape + (n_trials,)

@@ -308,7 +308,7 @@ def _evaluate_core(P, T_base):
     # The three numeric argmins (AlgoT fallback, AlgoE guard, MSK) share ONE
     # golden-section loop over a stacked leading axis: the loop is sequential
     # and dispatch-bound on small grids, so fusing it is a ~3x win there.
-    sel = jnp.arange(3).reshape((3,) + (1,) * lo.ndim)
+    sel = jnp.arange(3, dtype=jnp.int32).reshape((3,) + (1,) * lo.ndim)
 
     def objective(t):
         return jnp.where(sel == 0, time_final_batched(t, p, T_base),
@@ -602,7 +602,7 @@ def _evaluate_ml_core(P, T_base, m_values, m_max=None):
     # The per-m time and energy numeric argmins share ONE golden-section
     # loop over a stacked leading axis (same dispatch-bound rationale as
     # the single-level _evaluate_core).
-    sel = jnp.arange(2).reshape((2, 1, 1))
+    sel = jnp.arange(2, dtype=jnp.int32).reshape((2, 1, 1))
 
     def objective(t):
         return jnp.where(sel == 0, ml_time_final_batched(t, mv, p, T_base),
@@ -633,7 +633,7 @@ def _evaluate_ml_core(P, T_base, m_values, m_max=None):
             "omega": p["omega"], "P_static": p["P_static"],
             "P_cal": p["P_cal"], "P_io": p["P_io2"], "P_down": p["P_down"]}
     lo_s, hi_s, valid_s = _bracket(p_sl)
-    sel_s = jnp.arange(2).reshape((2, 1))
+    sel_s = jnp.arange(2, dtype=jnp.int32).reshape((2, 1))
 
     def objective_s(t):
         return jnp.where(sel_s == 0, time_final_batched(t, p_sl, T_base),
@@ -871,7 +871,8 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
     gaps = _engine.presample_gaps(flat, n_trials, cap, seed=seed,
                                   process=process)
     with enable_x64():
-        gaps = jnp.asarray(gaps)      # device-resident once, reused below
+        # device-resident once, reused below
+        gaps = jnp.asarray(gaps, dtype=jnp.float64)
 
     # Coarse-to-fine localization of both argmins (batched over the grid).
     frac = np.linspace(0.0, 1.0, n_candidates)[:, None]

@@ -1,0 +1,13 @@
+# reprolint: disable-file=RPL002 (fixture: whole-file waiver form)
+"""disable-file= covers every RPL002 site in the module."""
+import functools
+
+
+@functools.cache
+def memo(x):
+    return x
+
+
+@functools.lru_cache(maxsize=None)
+def memo_none(x):
+    return x

@@ -1,0 +1,7 @@
+"""A suppression without a reason: masks its diagnostic but earns RPL006."""
+import functools
+
+
+@functools.cache  # reprolint: disable=RPL002
+def memo(x):
+    return x

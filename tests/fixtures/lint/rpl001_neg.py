@@ -1,0 +1,13 @@
+"""RPL001 negative fixture: explicit seeds, threaded keys, generator
+methods.  Clean under a tests/ path; under a synthetic src/ path the
+seeded constructor becomes the one "outside approved sites" violation.
+"""
+import jax
+import numpy as np
+
+
+def draws(seed):
+    rng = np.random.default_rng(1234)
+    key = jax.random.PRNGKey(seed)
+    vals = rng.normal(size=3)
+    return key, vals

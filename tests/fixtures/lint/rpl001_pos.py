@@ -1,0 +1,14 @@
+"""RPL001 positive fixture: four nondeterministic-randomness sites."""
+import random
+import time
+
+import jax
+import numpy as np
+
+
+def draws():
+    rng = np.random.default_rng()                  # unseeded: OS entropy
+    noise = np.random.normal(size=3)               # global-state numpy RNG
+    key = jax.random.PRNGKey(int(time.time()))     # wall-clock seed
+    jitter = random.random()                       # stdlib global state
+    return rng, noise, key, jitter

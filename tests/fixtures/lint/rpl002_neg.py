@@ -1,0 +1,12 @@
+"""RPL002 negative fixture: bounded, registered caches."""
+import functools
+
+from repro.sim.dispatch import LRUCache
+
+
+@functools.lru_cache(maxsize=64)
+def memo_bounded(x):
+    return x * x
+
+
+NAMED = LRUCache(maxsize=8, name="fixture_cache")

@@ -1,0 +1,20 @@
+"""RPL002 positive fixture: three unbounded/unregistered caches, plus a
+module-level dict cache that only counts under a src/ path."""
+import functools
+
+from repro.sim.dispatch import LRUCache
+
+
+@functools.cache
+def memo_unbounded(x):
+    return x * x
+
+
+@functools.lru_cache(maxsize=None)
+def memo_none(x):
+    return x + 1
+
+
+ANON = LRUCache(maxsize=8)
+
+_RESULT_CACHE = {}

@@ -1,0 +1,10 @@
+"""RPL003 negative fixture: every constructor carries an explicit dtype."""
+import jax.numpy as jnp
+
+
+def make(n):
+    a = jnp.zeros(n, dtype=jnp.float64)
+    b = jnp.arange(4, dtype=jnp.int32)
+    c = jnp.asarray([1.0, 2.0], dtype=jnp.float64)
+    d = jnp.ones((2, 2), dtype=jnp.bool_)
+    return a, b, c, d

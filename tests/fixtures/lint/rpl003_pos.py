@@ -1,0 +1,12 @@
+"""RPL003 positive fixture (linted under a synthetic src/repro/sim/
+path): dtype-less constructors and float32 in the f64 subsystems."""
+import jax.numpy as jnp
+
+
+def make(n):
+    a = jnp.zeros(n)
+    b = jnp.arange(4)
+    c = jnp.asarray([1.0, 2.0])
+    d = jnp.ones(3, jnp.float32)
+    e = "float32"
+    return a, b, c, d, e

@@ -1,0 +1,15 @@
+"""RPL004 negative fixture: static-argname casts are trace-time Python,
+and host syncs in functions no jit can reach are fine."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def good_step(x, n):
+    return jnp.sum(x) * float(n)
+
+
+def host_report(x):
+    return x.item()

@@ -1,0 +1,23 @@
+"""RPL004 positive fixture: host syncs inside jit-reachable functions —
+three directly in a jitted def, one in a helper reached through the
+call graph."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_step(x):
+    total = jnp.sum(x)
+    host = total.item()
+    arr = np.asarray(x)
+    return float(total) + host, arr
+
+
+def helper(y):
+    return y.tolist()
+
+
+@jax.jit
+def calls_helper(y):
+    return helper(y)

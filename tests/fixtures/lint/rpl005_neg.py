@@ -1,0 +1,13 @@
+"""RPL005 negative fixture: static shape checks and traced-value
+branching through jnp.where are both fine in a scan body."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def sweep(xs):
+    def body(carry, x):
+        if x.shape == ():
+            carry = carry + jnp.where(x > 0, x, 0.0)
+        return carry, carry
+
+    return lax.scan(body, jnp.zeros((), dtype=jnp.float64), xs)

@@ -1,0 +1,15 @@
+"""RPL005 positive fixture: Python control flow on traced values inside
+a lax.scan body."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def sweep(xs):
+    def body(carry, x):
+        if x > 0:
+            carry = carry + x
+        while carry > 10:
+            carry = carry - 1
+        return carry, carry
+
+    return lax.scan(body, jnp.zeros((), dtype=jnp.float64), xs)

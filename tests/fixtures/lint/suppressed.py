@@ -1,0 +1,18 @@
+"""Suppression syntax fixture: a same-line suppression, an own-line
+suppression, and an unused one that RPL006 must flag."""
+import functools
+from functools import lru_cache
+
+
+@functools.cache  # reprolint: disable=RPL002 (fixture: documented same-line form)
+def memo(x):
+    return x
+
+
+# reprolint: disable=RPL002 (fixture: own-line form covers the next line)
+memo_none = lru_cache(maxsize=None)
+
+
+# reprolint: disable=RPL001 (nothing here triggers RPL001 - RPL006 must fire)
+def nothing():
+    return 0

@@ -1,10 +1,7 @@
 """Checkpoint runtime + fault-tolerance tests: atomicity, corruption
 fallback, buddy recovery, compression, bit-exact resume, elasticity,
 watchdog, energy accounting."""
-import json
-import threading
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -12,10 +9,9 @@ import numpy as np
 import pytest
 
 from repro.ckpt import (ShardedStore, StoreConfig, CheckpointManager,
-                        ManagerConfig, BuddyReplica)
+                        ManagerConfig)
 from repro.configs import get_config, reduced
 from repro.core.failures import get_process
-from repro.core.params import PowerParams
 from repro.core.policy import CheckpointPolicy, PolicyConfig
 from repro.data import for_arch
 from repro.energy import EnergyMeter, Phase, PAPER_EXASCALE_PROFILE
@@ -397,6 +393,7 @@ class TestFaultTolerantTrainer:
         t_fail = _trainer(tmp_path / "fail", tiny_rig, mu_s=8.0, seed=2,
                           q=1.0)
         rep_f = t_fail.run()
+        assert rep_f["final_step"] == rep_c["final_step"]
         assert rep_f["n_failures"] >= 1
         assert rep_f["n_hard_failures"] == rep_f["n_failures"]
         sources = [e["source"] for e in t_fail.log

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (
     CheckpointParams, PowerParams, EXASCALE_POWER_RHO55, EXASCALE_POWER_RHO7,
-    fig12_checkpoint, fig3_checkpoint,
+    fig12_checkpoint,
     time_final, time_fault_free, time_lost_per_failure, phase_times,
     energy_final, energy_breakdown, K_dE_dT,
     t_opt_time, t_opt_time_numeric, t_opt_energy, t_opt_energy_numeric,

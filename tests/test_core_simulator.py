@@ -1,10 +1,8 @@
 """Monte-Carlo simulator vs closed-form expectations, and policy behaviour."""
-import math
-
 import numpy as np
 import pytest
 
-from repro.core import (CheckpointParams, PowerParams, EXASCALE_POWER_RHO55,
+from repro.core import (CheckpointParams, EXASCALE_POWER_RHO55,
                         simulate, simulate_once, t_opt_time, t_opt_energy,
                         CheckpointPolicy, PolicyConfig)
 from repro.core import model

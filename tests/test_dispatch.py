@@ -364,6 +364,7 @@ print(json.dumps({"n_devices": jax.device_count(),
 
 class TestLRUCaches:
     def test_lru_evicts_least_recently_used(self):
+        # reprolint: disable=RPL002 (anonymous on purpose: this probes raw eviction order without polluting the global cache_stats() registry)
         lru = dsp.LRUCache(2)
         lru.put("a", 1)
         lru.put("b", 2)

@@ -7,7 +7,7 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import (CheckpointParams, PowerParams, EXASCALE_POWER_RHO55,
+from repro.core import (CheckpointParams, EXASCALE_POWER_RHO55,
                         Exponential, LogNormal, TraceReplay, Weibull,
                         as_process, get_process, fig12_checkpoint,
                         simulate_once, t_opt_time)

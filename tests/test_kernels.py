@@ -7,7 +7,6 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention as fa_raw
-from repro.kernels.mlstm_scan import mlstm_scan as ml_raw
 from repro.kernels.quant_blockwise import quantize, dequantize
 from repro.kernels.rglru_scan import rglru_scan as rg_raw
 

@@ -10,8 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ALL_ARCHS, reduced, get_config, list_configs
-from repro.configs.base import SHAPES
-from repro.models import build, input_specs
+from repro.models import build
 from repro.optim import AdamWConfig, init_state
 
 ARCH_NAMES = [c.name for c in ALL_ARCHS]
@@ -191,7 +190,6 @@ def test_head_padding_is_exact():
     p1 = m1.init(jax.random.key(0))
 
     # copy the real-head slices from padded params into an unpadded tree
-    import jax.tree_util as jtu
     p0_spec = m0.param_spec()
 
     def crop(spec, arr):

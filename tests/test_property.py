@@ -17,7 +17,7 @@ from repro.core import (CheckpointParams, PowerParams, energy_final,
                         fig12_checkpoint, simulate_once,
                         EXASCALE_POWER_RHO55)
 from repro.core.optimal import derived_coefficients
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 SETTINGS = dict(max_examples=40, deadline=None,
                 suppress_health_check=[HealthCheck.too_slow])

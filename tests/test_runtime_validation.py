@@ -42,7 +42,7 @@ SCENARIOS = {
 }
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=16)
 def run_scenario(name):
     kw, _ = SCENARIOS[name]
     reports = [execute(RunSpec(seed=s, **kw)) for s in range(SEEDS)]

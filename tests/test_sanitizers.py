@@ -1,0 +1,79 @@
+"""Compile/leak sanitizer tier (marker: ``sanitizer``).
+
+Runs the canonical fig2 / multilevel / advisor sweeps under
+``jax.checking_leaks`` and under a compile counter gated by the
+recompile budget committed in ``BENCH_sweep.json`` — see
+docs/contracts.md ("Sanitizer tier").  CI runs this file on its own via
+``pytest -m sanitizer``; it also runs in the default suite.
+
+The negative control proves the gate has teeth: a deliberately
+shape-unbucketed sweep (one jit specialization per distinct input
+length) must breach the committed budget and raise.
+"""
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import sanitize  # noqa: E402
+
+pytestmark = pytest.mark.sanitizer
+
+WORKLOADS = sorted(sanitize.CANONICAL_WORKLOADS)
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_leak_clean(name):
+    """No traced value escapes its trace on the canonical paths."""
+    sanitize.run_leak_checked(sanitize.CANONICAL_WORKLOADS[name])
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_recompile_budget(name):
+    budgets = sanitize.load_budgets()
+    if not budgets or name not in budgets:
+        pytest.skip(f"no committed recompile budget for {name} — run "
+                    "`python -m repro.sanitize --write`")
+    measured = sanitize.measure_workload(sanitize.CANONICAL_WORKLOADS[name])
+    sanitize.recompile_gate(name, measured, budgets)   # raises on breach
+    assert measured <= budgets[name]["budget"]
+
+
+def test_budget_schema():
+    budgets = sanitize.load_budgets()
+    if not budgets:
+        pytest.skip("no committed recompile budget")
+    for name in WORKLOADS:
+        entry = budgets[name]
+        assert entry["measured"] <= entry["budget"]
+        # slack formula: committed budget = measured + max(4, 25%)
+        assert entry["budget"] == entry["measured"] + max(
+            4, -(-entry["measured"] // 4))
+
+
+def _unbucketed_sweep():
+    """The seed-era anti-pattern: a fresh shape per grid point, so jit
+    specializes once per point instead of once per bucket."""
+    import jax.numpy as jnp
+
+    @jax.jit
+    def point(x):
+        return jnp.sum(x * 2.0)
+
+    for n in (3, 5, 7, 11, 13, 17, 19, 23):
+        point(jnp.zeros((n,))).block_until_ready()
+
+
+def test_unbucketed_sweep_breaches_budget():
+    budgets = sanitize.load_budgets()
+    if not budgets or "fig2_small" not in budgets:
+        pytest.skip("no committed recompile budget")
+    measured = sanitize.measure_workload(_unbucketed_sweep)
+    assert measured >= 8, "expected one compile per distinct shape"
+    with pytest.raises(sanitize.RecompileBudgetError):
+        sanitize.recompile_gate("fig2_small", measured, budgets)
+
+
+def test_gate_is_noop_without_committed_budget(tmp_path):
+    missing = tmp_path / "nothing.json"
+    assert sanitize.load_budgets(missing) is None
+    sanitize.recompile_gate("fig2_small", 10 ** 6, path=missing)

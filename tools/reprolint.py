@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Shim: run reprolint without installing the package.
+
+Equivalent to ``PYTHONPATH=src python -m repro.lint`` from the repo
+root; kept next to the other repo tools so CI and pre-commit hooks can
+invoke a stable path.
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.lint.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
