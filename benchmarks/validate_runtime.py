@@ -54,13 +54,23 @@ SCENARIOS = [
     ("ml_algo_t_exp", dict(_ML, strategy="algo_t_ml")),
     ("ml_algo_t_weibull", dict(_ML, strategy="algo_t_ml", **_WEIBULL)),
     ("ml_algo_e_exp", dict(_ML, strategy="algo_e_ml")),
+    # Async deep flush (VELOC): omega2 sweeps the in-flight share of the
+    # deep write from fully synchronous to fully overlapped; failures
+    # inside the flush window abort the write and roll back a
+    # generation, and the model's per-level w2 terms must price it.
+    # (omega2=0.0 duplicates ml_algo_t_exp by construction and anchors
+    # the sweep.)
+    ("ml_async_w2_00", dict(_ML, strategy="algo_t_ml", omega2=0.0)),
+    ("ml_async_w2_05", dict(_ML, strategy="algo_t_ml", omega2=0.5)),
+    ("ml_async_w2_09", dict(_ML, strategy="algo_t_ml", omega2=0.9)),
+    ("ml_async_w2_10", dict(_ML, strategy="algo_t_ml", omega2=1.0)),
 ]
 
 
 def run_scenario(name: str, kw: dict, n_seeds: int = N_SEEDS) -> dict:
     from repro.ft.run import RunSpec, execute
 
-    wall_r, energy_r, n_failures, ms = [], [], [], []
+    wall_r, energy_r, n_failures, ms, aborts = [], [], [], [], []
     for seed in range(n_seeds):
         rep = execute(RunSpec(seed=seed, **kw))
         pred = rep["predicted"]
@@ -68,10 +78,12 @@ def run_scenario(name: str, kw: dict, n_seeds: int = N_SEEDS) -> dict:
         energy_r.append(pred["energy_ratio"])
         n_failures.append(rep["n_failures"])
         ms.append(pred["m"])
+        aborts.append(rep["flush_aborts"])
     return {"scenario": name, "strategy": kw["strategy"],
             "process": kw.get("process", "exponential"),
             "n_seeds": n_seeds,
             "mean_failures": float(np.mean(n_failures)),
+            "mean_flush_aborts": float(np.mean(aborts)),
             "m": int(ms[0]),
             "wall_ratio": float(np.mean(wall_r)),
             "wall_ratio_sd": float(np.std(wall_r)),

@@ -1,2 +1,4 @@
-from .store import ShardedStore, StoreConfig
-from .manager import CheckpointManager, ManagerConfig, BuddyReplica
+from .store import (ShardedStore, StoreConfig, FaultPlan, FlushAborted,
+                    TransientIOError, FAULT_POINTS)
+from .manager import (CheckpointManager, ManagerConfig, BuddyReplica,
+                      FlushController)

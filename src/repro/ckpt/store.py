@@ -10,6 +10,20 @@ A checkpoint is valid iff its manifest exists and every shard checksum
 matches.  Two generations are retained; ``latest()`` falls back one
 generation when validation fails (torn writes, injected corruption).
 
+Interruptible writes: ``save`` streams the shard payload in chunks and
+checks an optional ``abort`` event between chunks, so an in-flight deep
+flush can be cancelled mid-write by the failure path (it raises
+:class:`FlushAborted`; the torn generation it leaves behind has no
+manifest, is invisible to ``latest()``, and is reclaimed by ``_gc`` /
+``invalidate``).
+
+Fault injection: a :class:`FaultPlan` attached as ``store.fault_plan``
+scripts one IO failure mode at one named fault point — a stall, a torn
+write after N bytes, silent checksum corruption, a burst of retryable
+:class:`TransientIOError`, or a hard ``IOError``.  The checkpoint
+manager's flush controller consults the same plan at its own points
+(``buddy_push``, ``retry_backoff``, ``snapshot``).
+
 Optional int8 blockwise compression (``compress=True``) uses the
 ``quant_blockwise`` kernel — ~4x smaller payloads for f32 state, directly
 shrinking the paper's C parameter (lossy: bounded by absmax/127 per block;
@@ -18,7 +32,9 @@ applied to every leaf EXCEPT ones whose path matches ``no_compress``).
 from __future__ import annotations
 
 import dataclasses
+import io
 import json
+import threading
 import time
 import zlib
 from pathlib import Path
@@ -28,6 +44,89 @@ import jax
 import numpy as np
 
 from ..kernels import ops as kops
+
+
+class FlushAborted(RuntimeError):
+    """An in-flight write was cancelled via its ``abort`` event (the
+    failure-interrupt path of an asynchronous deep flush)."""
+
+
+class TransientIOError(IOError):
+    """Injected retryable IO failure (``FaultPlan(kind="transient")``);
+    the flush controller's bounded retry loop absorbs these."""
+
+
+#: the named points a :class:`FaultPlan` can arm.  The first four live in
+#: ``ShardedStore.save``; the manager consults the rest.
+FAULT_POINTS = ("snapshot", "shard_write", "shard_rename",
+                "manifest_commit", "buddy_push", "retry_backoff")
+
+#: shard payload streaming quantum — abort/fault checks happen between
+#: chunks, bounding how stale an interrupt can get mid-write.
+_CHUNK = 1 << 16
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One scripted IO fault: ``kind`` at ``fail_at``, ``max_triggers``
+    times (transient bursts are bounded by ``transient_errors`` instead).
+
+    Kinds: ``"error"`` raises a hard ``IOError``; ``"transient"`` raises
+    :class:`TransientIOError` for the next ``transient_errors`` visits;
+    ``"stall"`` sleeps ``stall_s`` (abort-interruptible); ``"torn"``
+    truncates the shard write after ``torn_after_bytes``; ``"corrupt"``
+    flips a byte of the committed shard after its checksum is recorded.
+    """
+
+    fail_at: str = "shard_write"
+    kind: str = "error"
+    stall_s: float = 0.05
+    torn_after_bytes: int = 256
+    transient_errors: int = 1
+    max_triggers: int = 1
+    fired: int = 0
+
+    _KINDS = ("error", "transient", "stall", "torn", "corrupt")
+
+    def __post_init__(self):
+        if self.fail_at not in FAULT_POINTS:
+            raise ValueError(f"fail_at must be one of {FAULT_POINTS}, "
+                             f"got {self.fail_at!r}")
+        if self.kind not in self._KINDS:
+            raise ValueError(f"kind must be one of {self._KINDS}, "
+                             f"got {self.kind!r}")
+
+    def take(self, point: str,
+             abort: Optional[threading.Event] = None) -> Optional["FaultPlan"]:
+        """Consult the plan at a fault point.
+
+        Returns ``None`` when the plan does not fire here (wrong point or
+        budget exhausted); raises for the error kinds; returns ``self``
+        for the caller-cooperative kinds (``torn``/``corrupt``) and after
+        a completed ``stall``.
+        """
+        if point != self.fail_at:
+            return None
+        if self.kind == "transient":
+            if self.transient_errors <= 0:
+                return None
+            self.transient_errors -= 1
+            self.fired += 1
+            raise TransientIOError(
+                f"injected transient IO failure at {point}")
+        if self.fired >= self.max_triggers:
+            return None
+        self.fired += 1
+        if self.kind == "error":
+            raise IOError(f"injected IO failure at {point}")
+        if self.kind == "stall":
+            if abort is not None:
+                if abort.wait(self.stall_s):
+                    raise FlushAborted(
+                        f"aborted during injected stall at {point}")
+            else:
+                time.sleep(self.stall_s)
+        return self
 
 
 def _flatten(tree) -> list:
@@ -57,11 +156,29 @@ class ShardedStore:
         self.root = Path(config.root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.n_shards = n_shards
+        #: mutable injection hook; set a :class:`FaultPlan` to script the
+        #: next IO failure, clear to heal the store.
+        self.fault_plan: Optional[FaultPlan] = None
+
+    def fault(self, point: str,
+              abort: Optional[threading.Event] = None
+              ) -> Optional[FaultPlan]:
+        """Consult the injection plan at a named fault point (no-op
+        without one) — also called by the manager for its points."""
+        if self.fault_plan is None:
+            return None
+        return self.fault_plan.take(point, abort=abort)
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, *, shard_id: int = 0,
-             extra_meta: Optional[dict] = None) -> dict:
-        """Write one generation (blocking).  Returns timing/size metadata."""
+             extra_meta: Optional[dict] = None,
+             abort: Optional[threading.Event] = None) -> dict:
+        """Write one generation (blocking).  Returns timing/size metadata.
+
+        ``abort``: optional event checked between payload chunks; when it
+        fires mid-write the save raises :class:`FlushAborted`, leaving at
+        most an uncommitted (manifest-less) generation behind.
+        """
         t0 = time.perf_counter()
         leaves, treedef = jax.tree.flatten(tree)
         gen = self.root / f"step_{step:09d}"
@@ -85,8 +202,29 @@ class ShardedStore:
 
         shard_path = gen / f"shard_{shard_id:05d}.npz"
         tmp = shard_path.with_suffix(".npz.tmp")
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        payload = buf.getvalue()
+
+        fired = self.fault("shard_write", abort)
+        torn_at = (fired.torn_after_bytes
+                   if fired is not None and fired.kind == "torn" else None)
         with open(tmp, "wb") as f:
-            np.savez(f, **arrays)
+            written = 0
+            for off in range(0, len(payload), _CHUNK):
+                if abort is not None and abort.is_set():
+                    raise FlushAborted(
+                        f"flush of step {step} aborted mid-write "
+                        f"({written}/{len(payload)} bytes)")
+                chunk = payload[off:off + _CHUNK]
+                if torn_at is not None and written + len(chunk) > torn_at:
+                    f.write(chunk[:max(0, torn_at - written)])
+                    f.flush()
+                    raise IOError(f"injected torn write after "
+                                  f"{torn_at} bytes")
+                f.write(chunk)
+                written += len(chunk)
+        self.fault("shard_rename", abort)
         tmp.rename(shard_path)
 
         checksum = _crc(np.frombuffer(shard_path.read_bytes(),
@@ -100,9 +238,20 @@ class ShardedStore:
                                        "crc32": checksum}},
             "extra": extra_meta or {},
         }
+        if abort is not None and abort.is_set():
+            raise FlushAborted(f"flush of step {step} aborted before commit")
+        fired = self.fault("manifest_commit", abort)
         mtmp = gen / "manifest.json.tmp"
         mtmp.write_text(json.dumps(manifest))
         mtmp.rename(gen / "manifest.json")       # commit point
+        if fired is not None and fired.kind == "corrupt":
+            # flip one byte AFTER the checksum was recorded: the
+            # generation commits but fails CRC validation (the silent-
+            # corruption model ``latest()`` must fall back across).
+            with open(shard_path, "r+b") as f:
+                b = f.read(1)
+                f.seek(0)
+                f.write(bytes([b[0] ^ 0xFF]))
 
         self._gc()
         dt = time.perf_counter() - t0
@@ -168,11 +317,36 @@ class ShardedStore:
         return jax.tree.unflatten(treedef, out), manifest["step"]
 
     # --------------------------------------------------------------------- gc
+    def invalidate(self, step: int) -> bool:
+        """Delete the (possibly torn) generation of ``step`` — the
+        discard half of a failure-interrupted flush.  Returns whether a
+        generation directory existed."""
+        gen = self.root / f"step_{step:09d}"
+        if not gen.exists():
+            return False
+        self._rmgen(gen)
+        return True
+
+    @staticmethod
+    def _rmgen(gen: Path):
+        for p in sorted(gen.glob("**/*"), reverse=True):
+            p.unlink()
+        gen.rmdir()
+
     def _gc(self):
         gens = self.generations()
-        # keep the newest `retain` COMMITTED generations
+        # keep the newest `retain` COMMITTED generations ...
         committed = [g for g in gens if (g / "manifest.json").exists()]
-        for g in committed[:-self.cfg.retain]:
-            for p in sorted(g.glob("**/*"), reverse=True):
-                p.unlink()
-            g.rmdir()
+        drop = set(committed[:-self.cfg.retain])
+        if committed:
+            # ... and reclaim UNCOMMITTED generations strictly older than
+            # the newest committed one: those are torn leftovers of
+            # aborted/failed flushes that will never commit.  Newer
+            # uncommitted directories may be a flush in flight — kept.
+            # (step_%09d zero-padding makes name order step order.)
+            newest = committed[-1].name
+            seen = set(committed)
+            drop.update(g for g in gens
+                        if g not in seen and g.name < newest)
+        for g in sorted(drop):
+            self._rmgen(g)

@@ -195,7 +195,7 @@ def K_dE_dT(T, ckpt: CheckpointParams, power: PowerParams,
 # checkpoint (R1, lost work ~ T/2), a hard failure the last deep one
 # (R2, lost work ~ m*T/2 plus the re-executed intermediate buddy writes).
 #
-# With a_m = (1-omega)*C_mean, b_m = 1 - E[fixed loss]/mu and
+# With a_m = E[(1-w_k) C_k], b_m = 1 - E[fixed loss]/mu and
 # mu_m = mu/(1+q(m-1)), the expected makespan keeps the paper's form
 #
 #     T_final(T, m) = T_base * T / ((T - a_m)(b_m - T/(2 mu_m)))
@@ -204,6 +204,20 @@ def K_dE_dT(T, ckpt: CheckpointParams, power: PowerParams,
 # quadratic in T (verified by interpolation, exactly like the single-level
 # path).  All formulas reduce bit-for-bit to the single-level model for
 # degenerate levels (C1=C2, R1=R2, D1=D2) at m=1 — see params docstring.
+#
+# Async flush (per-level overlap, VELOC semantics): omega1/omega2 split the
+# shared overlap factor per level.  The deep write's flush-in-flight
+# interval — wall length C2 at compute rate w2, commit at the END of the
+# interval — only moves constants: a_m mixes the per-level critical-path
+# shares, the hazard-during-flush loss E[w_k C_k] replaces omega*C_mean in
+# b_m, and the W coefficients pick up the per-level overlapped quadratic
+# S2_omega.  The T-dependence (const + T + 1/T inside W) is unchanged, so
+# the rational normal form — and with it both closed-form solvers —
+# survives the async term for exponential failures.  It does NOT survive
+# non-exponential hazards; those route through the CRN MC-surrogate
+# solvers (``optimal.t_opt_time_mc`` / ``t_opt_energy_mc``), same as the
+# shared-omega model.  With omega1 == omega2 every expression below
+# evaluates the exact shared-omega formula (bit-for-bit).
 
 
 class MultilevelPhaseTimes(NamedTuple):
@@ -231,19 +245,20 @@ def ml_phase_times(T, m: int, ck: MultilevelCheckpointParams,
     m = int(m)
     C1, R1, D1 = ck.C1, ck.R1, ck.D1
     C2, R2, D2 = ck.C2, ck.R2, ck.D2
-    mu, q, omega = ck.mu, ck.q, ck.omega
-    Cb = ck.C_mean(m)
+    mu, q = ck.mu, ck.q
+    w1, w2 = ck.w1, ck.w2
     a = ck.a(m)
 
     Tf = ml_time_final(T, m, ck, T_base)
     nf = Tf / mu
 
     # Re-executed work per failure.  E[C_k^2] over period types:
-    S2 = ((m - 1) * C1**2 + C2**2) / m
-    # mean-over-types of the in-period lost work (paper's E_w generalized):
-    Ew = (T**2 - S2) / (2.0 * T) + omega * S2 / (2.0 * T)
-    w_soft = omega * Cb + Ew
-    w_hard = omega * C2 + (m - 1) * (T - (1.0 - omega) * C1) / 2.0 + Ew
+    S2 = ck.S2(m)
+    # mean-over-types of the in-period lost work (paper's E_w generalized);
+    # the overlapped share S2_omega is the hazard-during-flush quadratic:
+    Ew = (T**2 - S2) / (2.0 * T) + ck.S2_omega(m) / (2.0 * T)
+    w_soft = ck.C_omega_mean(m) + Ew
+    w_hard = w2 * C2 + (m - 1) * (T - (1.0 - w1) * C1) / 2.0 + Ew
     T_cal = T_base + nf * (w_soft + q * (w_hard - w_soft))
 
     # Fault-free checkpoint I/O, split per level.
@@ -296,18 +311,18 @@ def _ml_W_coefficients(m: int, ck: MultilevelCheckpointParams,
     + J*Tb/(T - a_m) — the rational normal form of ``ml_energy_final``."""
     C1, R1, D1 = ck.C1, ck.R1, ck.D1
     C2, R2, D2 = ck.C2, ck.R2, ck.D2
-    q, omega = ck.q, ck.omega
-    Cb = ck.C_mean(m)
+    q, w1, w2 = ck.q, ck.w1, ck.w2
+    Cw = ck.C_omega_mean(m)
     Pc, P1, P2, Pd = power.P_cal, power.P_io1, power.P_io2, power.P_down
-    S2 = ((m - 1) * C1**2 + C2**2) / m
+    S2 = ck.S2(m)
 
-    W0 = (Pc * (omega * Cb + q * (omega * C2 - omega * Cb
-                                  - (m - 1) * (1.0 - omega) * C1 / 2.0))
+    W0 = (Pc * (Cw + q * (w2 * C2 - Cw
+                          - (m - 1) * (1.0 - w1) * C1 / 2.0))
           + P1 * ((1.0 - q) * R1 + q * (m - 1) * C1 / 2.0)
           + P2 * q * R2
           + Pd * (D1 + q * (D2 - D1)))
     W1 = Pc * (1.0 + q * (m - 1)) / 2.0
-    Wm = (Pc * (omega - 1.0) * S2 / 2.0
+    Wm = (Pc * (ck.S2_omega(m) - S2) / 2.0
           + P1 * (m - 1) * C1**2 / (2.0 * m)
           + P2 * C2**2 / (2.0 * m))
     J = P1 * (m - 1) * C1 / m + P2 * C2 / m

@@ -286,7 +286,11 @@ def t_opt_time_multilevel(ck: MultilevelCheckpointParams,
     """Jointly time-optimal (T, m): per-m closed form, argmin over m.
 
     T_final(T, m) keeps the paper's rational form with (a_m, b_m, mu_m), so
-    Eq. (1) survives per m: T*(m) = sqrt(2 a_m b_m mu_m).
+    Eq. (1) survives per m: T*(m) = sqrt(2 a_m b_m mu_m).  The async-flush
+    extension (per-level ``omega1``/``omega2``, hazard-during-flush) only
+    changes the *constants* a_m and b_m, never the rational shape, so the
+    same closed form prices asynchronous deep writes exactly — only
+    non-exponential hazards need the MC-surrogate solvers below.
     """
     best = None
     for m in range(1, m_max + 1):

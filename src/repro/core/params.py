@@ -167,11 +167,22 @@ class MultilevelCheckpointParams:
     mu         : platform MTBF (all failures, both kinds).
     q          : P[failure also loses the level-1 copy] in [0, 1].
     omega      : shared checkpoint overlap factor (work rate during a write).
+    omega1     : buddy-write overlap factor; None -> ``omega``.
+    omega2     : deep-flush overlap factor; None -> ``omega``.  This is the
+                 VELOC knob: the PFS write occupies a *flush-in-flight*
+                 interval of wall length C2 during which compute progresses
+                 at rate ``omega2`` and the in-flight generation is NOT yet
+                 committed — a failure inside the window loses it and rolls
+                 back to the previous surviving level.  ``omega2 -> 1``
+                 removes the flush from the critical path entirely while
+                 keeping the hazard-during-flush loss term.
 
     ``m`` is a *decision variable* (like T), not a parameter: the per-``m``
     derived quantities below are methods.  With degenerate levels
     (C1 == C2, R1 == R2, D1 == D2) and ``m = 1`` every formula reduces
-    bit-for-bit to the single-level :class:`CheckpointParams` model.
+    bit-for-bit to the single-level :class:`CheckpointParams` model; with
+    ``omega1 == omega2`` every formula reduces bit-for-bit to the shared-
+    omega form (the per-level branches re-use the exact old expressions).
     """
 
     C1: float
@@ -183,10 +194,16 @@ class MultilevelCheckpointParams:
     mu: float
     q: float = 0.1
     omega: float = 0.0
+    omega1: Optional[float] = None
+    omega2: Optional[float] = None
 
     def __post_init__(self) -> None:
         if not (0.0 <= self.omega <= 1.0):
             raise ValueError(f"omega must be in [0,1], got {self.omega}")
+        for name in ("omega1", "omega2"):
+            w = getattr(self, name)
+            if w is not None and not (0.0 <= w <= 1.0):
+                raise ValueError(f"{name} must be in [0,1], got {w}")
         if not (0.0 <= self.q <= 1.0):
             raise ValueError(f"q must be in [0,1], got {self.q}")
         for name in ("C1", "R1", "C2", "R2", "D1", "D2"):
@@ -195,24 +212,75 @@ class MultilevelCheckpointParams:
         if self.mu <= 0:
             raise ValueError("mu must be > 0")
 
+    # -- per-level overlap ---------------------------------------------------
+    @property
+    def w1(self) -> float:
+        """Effective buddy-write overlap (omega1, defaulting to omega)."""
+        return self.omega if self.omega1 is None else self.omega1
+
+    @property
+    def w2(self) -> float:
+        """Effective deep-flush overlap (omega2, defaulting to omega)."""
+        return self.omega if self.omega2 is None else self.omega2
+
+    @property
+    def _shared_omega(self) -> bool:
+        """True when both levels share one overlap factor — the formulas
+        below then use the exact pre-async expressions (bit-for-bit)."""
+        return self.w1 == self.w2
+
     # -- per-m derived quantities (multilevel analogue of §3.1) --------------
     def C_mean(self, m: int) -> float:
         """Mean checkpoint cost per period: ((m-1) C1 + C2) / m."""
         return ((m - 1) * self.C1 + self.C2) / m
 
+    def C_omega_mean(self, m: int) -> float:
+        """Mean *overlapped* checkpoint cost per period,
+        ((m-1) w1 C1 + w2 C2) / m — the work done during a write that is
+        unprotected until the write commits (flush-in-flight loss)."""
+        if self._shared_omega:
+            return self.w1 * self.C_mean(m)
+        return ((m - 1) * self.w1 * self.C1 + self.w2 * self.C2) / m
+
     def a(self, m: int) -> float:
-        """a_m = (1-omega) * C_mean(m): work lost to checkpoint jitter."""
-        return (1.0 - self.omega) * self.C_mean(m)
+        """a_m = mean critical-path share of the per-period checkpoint:
+        ((m-1)(1-w1) C1 + (1-w2) C2) / m."""
+        if self._shared_omega:
+            return (1.0 - self.w1) * self.C_mean(m)
+        return ((m - 1) * (1.0 - self.w1) * self.C1
+                + (1.0 - self.w2) * self.C2) / m
+
+    def flush_window(self, m: int) -> float:
+        """Wall length of the deep flush-in-flight interval beyond its
+        critical-path stall: ``w2 * C2`` (0 for a fully blocking write).
+        A failure landing inside it loses the in-flight deep generation."""
+        del m  # per-superperiod window; independent of m
+        return self.w2 * self.C2
 
     def expected_fixed_loss(self, m: int) -> float:
-        """E[D + R + omega*C_lag per failure], mixing soft/hard with q.
+        """E[D + R + w*C_lag per failure], mixing soft/hard with q.
 
         Written as ``soft + q*(hard - soft)`` so degenerate levels reduce
         exactly (the difference is exactly 0.0, no (1-q)x + qx rounding).
+        The ``w*C`` terms are the hazard-during-flush loss: work performed
+        while the previous write was in flight is uncommitted until the
+        write ends, so a failure re-executes it.
         """
-        soft = self.D1 + self.R1 + self.omega * self.C_mean(m)
-        hard = self.D2 + self.R2 + self.omega * self.C2
+        soft = self.D1 + self.R1 + self.C_omega_mean(m)
+        hard = self.D2 + self.R2 + self.w2 * self.C2
         return soft + self.q * (hard - soft)
+
+    def S2(self, m: int) -> float:
+        """E[C_k^2] over the period types: ((m-1) C1^2 + C2^2) / m."""
+        return ((m - 1) * self.C1**2 + self.C2**2) / m
+
+    def S2_omega(self, m: int) -> float:
+        """E[w_k C_k^2] over the period types (the overlapped share of the
+        quadratic in-flight I/O loss): ((m-1) w1 C1^2 + w2 C2^2) / m."""
+        if self._shared_omega:
+            return self.w1 * self.S2(m)
+        return ((m - 1) * self.w1 * self.C1**2
+                + self.w2 * self.C2**2) / m
 
     def b(self, m: int) -> float:
         """b_m = 1 - expected_fixed_loss(m) / mu."""
@@ -234,9 +302,17 @@ class MultilevelCheckpointParams:
 
     # -- conversions ---------------------------------------------------------
     def single_level(self) -> CheckpointParams:
-        """The PFS-only comparator: every checkpoint deep, no buddy."""
+        """The PFS-only comparator: every checkpoint deep, no buddy (the
+        deep level's overlap factor applies — w2 == omega when unset)."""
         return CheckpointParams(C=self.C2, R=self.R2, D=self.D2, mu=self.mu,
-                                omega=self.omega)
+                                omega=self.w2)
+
+    def buddy_only(self) -> CheckpointParams:
+        """The degraded-tier comparator: PFS unavailable, every checkpoint
+        a buddy write (C1/R1/D1 at the buddy overlap).  The policy re-solves
+        on this while the deep store is down."""
+        return CheckpointParams(C=self.C1, R=self.R1, D=self.D1, mu=self.mu,
+                                omega=self.w1)
 
     @classmethod
     def from_single(cls, ckpt: CheckpointParams, *,

@@ -65,6 +65,10 @@ class PolicyConfig:
     D_s: float = 6.0
     mu_s: float = 24 * 3600.0         # platform MTBF prior
     omega: float = 0.5
+    #: deep-flush overlap prior (VELOC async flush); None -> the shared
+    #: ``omega`` applies to both levels.  Only read by the *_ml
+    #: strategies, as ``MultilevelCheckpointParams.omega2``.
+    omega2: Optional[float] = None
     # Multilevel (buddy, level-1) priors — only read by the *_ml strategies:
     C1_s: float = 6.0
     R1_s: float = 6.0
@@ -101,7 +105,10 @@ class CheckpointPolicy:
         self._step_time = _Ewma(alpha=0.1)
         self._failure_gaps: list[float] = []
         self._last_failure_t: Optional[float] = None
-        # (param values, strategy, T, m) of the last solve
+        #: deep (PFS) tier health, driven by the checkpoint manager's
+        #: degrade/heal FSM; False re-solves at the buddy-only tier.
+        self._deep_available = True
+        # (param values, (strategy, deep_available), T, m) of last solve
         self._cached: Optional[tuple] = None
 
     # ---- measurement intake ------------------------------------------------
@@ -172,7 +179,31 @@ class CheckpointPolicy:
             D1=self._D1.get(d1), D2=self._D.get(cfg.D_s),
             mu=self.mu_estimate_s, q=cfg.q,
             omega=self._omega.get(cfg.omega),
+            omega2=cfg.omega2,
         )
+
+    def overlap_for(self, level: int) -> float:
+        """The effective overlap factor of a level-``level`` write: the
+        buddy's w1 / the deep flush's w2 under the *_ml strategies, the
+        shared omega otherwise — what the trainer uses to split a write
+        into its critical-path stall and its in-flight flush window."""
+        if self.is_multilevel:
+            ck = self.checkpoint_params_ml()
+            return ck.w1 if level <= 1 else ck.w2
+        return self.checkpoint_params().omega
+
+    # ---- deep-tier health (driven by the manager's degrade/heal FSM) -------
+    @property
+    def deep_available(self) -> bool:
+        return self._deep_available
+
+    def set_deep_available(self, available: bool) -> None:
+        """Flip the deep (PFS) tier's availability.  While unavailable the
+        *_ml strategies re-solve the buddy-only single-level problem, so
+        the period re-anchors at the degraded tier (and back on heal)."""
+        if bool(available) != self._deep_available:
+            self._deep_available = bool(available)
+            self._cached = None
 
     # ---- decision ----------------------------------------------------------
     def _param_values(self) -> tuple:
@@ -185,6 +216,18 @@ class CheckpointPolicy:
 
     def _solve(self) -> tuple[float, int]:
         cfg = self.config
+        if self.is_multilevel and not self._deep_available:
+            # Degraded tier: the deep store is down, every checkpoint is
+            # buddy-only — solve the single-level problem at the buddy's
+            # (C1, R1, D1, w1) and its I/O power.
+            ck = self.checkpoint_params_ml().buddy_only()
+            if cfg.strategy == "algo_e_ml":
+                mp = self.ml_power
+                buddy_power = PowerParams(P_static=mp.P_static,
+                                          P_cal=mp.P_cal, P_io=mp.P_io1,
+                                          P_down=mp.P_down)
+                return optimal.t_opt_energy(ck, buddy_power), 1
+            return optimal.t_opt_time(ck), 1
         if cfg.strategy == "algo_t_ml":
             T, m = optimal.t_opt_time_multilevel(self.checkpoint_params_ml(),
                                                  m_max=cfg.m_max)
@@ -205,16 +248,17 @@ class CheckpointPolicy:
         if not math.isfinite(self.mu_estimate_s):   # no failures expected
             return float("inf"), 1
         vals = self._param_values()
+        key = (cfg.strategy, self._deep_available)
         if self._cached is not None:
-            ovals, ostrat, operiod, om = self._cached
+            ovals, okey, operiod, om = self._cached
 
             def drift(new, old):
                 return abs(new - old) > cfg.drift_threshold * max(old, 1e-9)
-            if (ostrat == cfg.strategy and len(vals) == len(ovals)
+            if (okey == key and len(vals) == len(ovals)
                     and not any(drift(n, o) for n, o in zip(vals, ovals))):
                 return operiod, om
         T, m = self._solve()
-        self._cached = (vals, cfg.strategy, T, m)
+        self._cached = (vals, key, T, m)
         return T, m
 
     def period_seconds(self) -> float:
@@ -281,7 +325,8 @@ class CheckpointPolicy:
         if self.is_multilevel:
             mlck = self.checkpoint_params_ml()
             out.update({"C1_s": mlck.C1, "R1_s": mlck.R1, "D1_s": mlck.D1,
-                        "q": mlck.q})
+                        "q": mlck.q, "omega2": mlck.w2,
+                        "deep_available": self._deep_available})
             try:
                 tt, mt = optimal.t_opt_time_multilevel(
                     mlck, m_max=self.config.m_max)

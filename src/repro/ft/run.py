@@ -32,6 +32,7 @@ from ..ckpt import CheckpointManager, ManagerConfig, ShardedStore, StoreConfig
 from .failures import FailureInjector, FailureModel
 from .tracker import Tracker
 from .trainer import FaultTolerantTrainer, TrainerConfig
+from .watchdog import StepTimeWatchdog, WatchdogConfig
 
 PROFILES = {"paper": PAPER_EXASCALE_PROFILE,
             "paper_ml": PAPER_EXASCALE_ML_PROFILE,
@@ -78,6 +79,11 @@ class RunSpec:
     D1_s: Optional[float] = None
     q: float = 0.0                    # P[failure also loses the buddy]
     omega: float = 0.0                # checkpoint overlap factor
+    #: deep-flush overlap (VELOC async flush); None -> shared ``omega``.
+    #: At omega2 > 0 the deep write stays in flight for ``omega2 * C``
+    #: after its stall — a failure inside that window aborts the flush
+    #: and rolls back to the previous surviving generation.
+    omega2: Optional[float] = None
     process: str = "exponential"      # core.failures.PROCESSES name
     process_kwargs: dict = dataclasses.field(default_factory=dict)
 
@@ -110,7 +116,7 @@ class RunSpec:
         C1, R1, D1 = self.level1()
         return MultilevelCheckpointParams(
             C1=C1, R1=R1, D1=D1, C2=self.C_s, R2=self.R_s, D2=self.D_s,
-            mu=self.mu_s, q=self.q, omega=self.omega)
+            mu=self.mu_s, q=self.q, omega=self.omega, omega2=self.omega2)
 
 
 def build(spec: RunSpec, tracker: Optional[Tracker] = None,
@@ -140,7 +146,7 @@ def build(spec: RunSpec, tracker: Optional[Tracker] = None,
                      fixed_period_s=spec.fixed_period_s,
                      C_s=spec.C_s, R_s=spec.R_s, D_s=spec.D_s,
                      C1_s=C1, R1_s=R1, D1_s=D1, q=spec.q,
-                     mu_s=spec.mu_s, omega=spec.omega,
+                     mu_s=spec.mu_s, omega=spec.omega, omega2=spec.omega2,
                      mu_from_observations=spec.mu_from_observations),
         profile.power_params(), ml_power=profile.ml_power_params())
 
@@ -167,10 +173,13 @@ def build(spec: RunSpec, tracker: Optional[Tracker] = None,
 
     data = for_arch(cfg, batch=spec.batch, seq_len=spec.seq, seed=spec.seed)
     step_fn = jax.jit(model.make_train_step(ocfg))
+    # Straggler watchdog + manager alarms both surface through the
+    # trainer's Tracker (events: "straggler", "alarm") and run report.
+    watchdog = StepTimeWatchdog(WatchdogConfig())
     return FaultTolerantTrainer(
         train_step=step_fn, state=(params, opt), data=data, policy=policy,
         manager=manager, meter=EnergyMeter(profile), failures=injector,
-        tracker=tracker,
+        tracker=tracker, watchdog=watchdog,
         config=TrainerConfig(total_steps=spec.total_steps,
                              sim_seconds_per_step=spec.step_s,
                              checkpoint_at_start=spec.checkpoint_at_start,

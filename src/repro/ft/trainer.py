@@ -61,7 +61,7 @@ class FaultTolerantTrainer:
                  failures: FailureInjector,
                  watchdog: Optional[StepTimeWatchdog] = None,
                  tracker: Optional[Tracker] = None,
-                 config: TrainerConfig = TrainerConfig()):
+                 config: Optional[TrainerConfig] = None):
         self.train_step = train_step
         self.state = state          # (params, opt_state)
         self.data = data
@@ -70,13 +70,31 @@ class FaultTolerantTrainer:
         self.meter = meter
         self.failures = failures
         self.watchdog = watchdog or StepTimeWatchdog()
+        if self.watchdog.on_straggler is None:
+            self.watchdog.on_straggler = self._on_straggler
         self.tracker = tracker or NullTracker()
-        self.cfg = config
+        # NOTE: built per instance — a dataclass default argument would be
+        # one shared TrainerConfig across trainers.
+        self.cfg = config if config is not None else TrainerConfig()
+        if getattr(self.manager, "on_alarm", False) is None:
+            self.manager.on_alarm = self._on_alarm
         # virtual clock (seconds since run start)
         self.now = 0.0
         self.step = 0
         self.log: list = []
         self.n_rollbacks = 0
+        self.n_flush_aborts = 0
+        #: in-flight deep/buddy flush of the newest checkpoint: committed
+        #: only once the virtual clock passes ``commit_at`` — a failure
+        #: inside the window loses the generation (the model's
+        #: hazard-during-flush).
+        self._pending_flush: Optional[dict] = None
+
+    def _on_straggler(self, event: dict) -> None:
+        self.tracker.log({"kind": "straggler", "t": self.now, **event})
+
+    def _on_alarm(self, alarm: dict) -> None:
+        self.tracker.log({"kind": "alarm", "t": self.now, **alarm})
 
     # ---------------------------------------------------------------- helpers
     def _full_state(self) -> dict:
@@ -91,6 +109,17 @@ class FaultTolerantTrainer:
     def _handle_failure(self):
         self.n_rollbacks += 1
         self.policy.observe_failure(self.now)
+        # A failure inside the flush window interrupts the in-flight
+        # write: abort the flush thread, reject the torn generation, and
+        # revert the buddy — restore then falls back to the previous
+        # surviving generation/level (the model's flush-window loss).
+        pend, self._pending_flush = self._pending_flush, None
+        if pend is not None and self.now < pend["commit_at"]:
+            self.manager.discard_in_flight(pend["step"], pend["level"])
+            self.n_flush_aborts += 1
+            self.tracker.log({"kind": "flush_aborted", "t": self.now,
+                              "step": pend["step"],
+                              "level": pend["level"]})
         hard = self.failures.last_was_hard
         if hard:
             self.manager.drop_buddy()
@@ -135,6 +164,9 @@ class FaultTolerantTrainer:
 
         losses = []
         while self.step < cfg.total_steps:
+            pend = self._pending_flush
+            if pend is not None and self.now >= pend["commit_at"]:
+                self._pending_flush = None     # flush window closed: committed
             if self.failures.check(self.now):
                 self._handle_failure()
                 continue
@@ -173,7 +205,7 @@ class FaultTolerantTrainer:
             # level 1 = buddy-only on the every-m-th cadence)
             level = self.manager.due(self.step)
             if level:
-                omega = self.policy.checkpoint_params().omega
+                omega = self.policy.overlap_for(level)
                 C_est = self.manager.expected_cost(level) or 0.0
                 phase = (Phase.CHECKPOINT_IO if level >= 2
                          else Phase.CHECKPOINT_IO_BUDDY)
@@ -187,13 +219,30 @@ class FaultTolerantTrainer:
                                       "t": self.now, "step": self.step,
                                       "level": level})
                     continue
-                self.manager.checkpoint(self.step, self._full_state())
-                last = self.manager.last_checkpoint()
-                C = last["C_s"] if last else C_est
+                level = self.manager.checkpoint(self.step,
+                                                self._full_state())
+                omega = self.policy.overlap_for(level)
+                phase = (Phase.CHECKPOINT_IO if level >= 2
+                         else Phase.CHECKPOINT_IO_BUDDY)
+                virt = self.manager.expected_virtual_cost(level)
+                if virt is not None:
+                    # scaled-time world: charge the scenario's cost and
+                    # leave the flush IN FLIGHT for omega*C more wall —
+                    # a failure inside that window aborts it.
+                    C = virt
+                else:
+                    # measured mode: drain the write and read its cost
+                    # (the pre-async behavior).
+                    last = self.manager.last_checkpoint()
+                    C = last["C_s"] if last else C_est
                 # non-blocking: only (1-omega)*C hits the wall; the I/O
                 # device is busy the full C (rest overlaps later compute)
                 self._advance(C * (1.0 - omega), phase)
                 self.meter.add(phase, C * omega, advances_wall=False)
+                if virt is not None and omega > 0.0:
+                    self._pending_flush = {"step": self.step,
+                                           "level": level,
+                                           "commit_at": self.now + C * omega}
                 self.tracker.log({"kind": "checkpoint", "t": self.now,
                                   "step": self.step, "level": level,
                                   "C_s": C})
@@ -214,6 +263,12 @@ class FaultTolerantTrainer:
             "operating_point": self.policy.operating_point(
                 self.manager.deep_every()),
             "straggler_events": len(self.watchdog.events),
+            "straggler_escalations": sum(1 for e in self.watchdog.events
+                                         if e.get("escalate")),
+            "flush_aborts": self.n_flush_aborts,
+            "flush_errors": len(getattr(self.manager, "flush_errors", ())),
+            "pfs_degraded": getattr(self.manager, "degraded", False),
+            "alarms": list(getattr(self.manager, "alarms", ())),
             "checkpoints": list(self.manager.stats),
         }
         self.tracker.log({"kind": "summary", "t": self.now,

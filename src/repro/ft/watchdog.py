@@ -20,9 +20,11 @@ class WatchdogConfig:
 
 
 class StepTimeWatchdog:
-    def __init__(self, config: WatchdogConfig = WatchdogConfig(),
+    def __init__(self, config: Optional[WatchdogConfig] = None,
                  on_straggler: Optional[Callable[[dict], None]] = None):
-        self.cfg = config
+        # NOTE: built per instance — a dataclass default argument would be
+        # one shared WatchdogConfig across watchdogs.
+        self.cfg = config if config is not None else WatchdogConfig()
         self.on_straggler = on_straggler
         self.mean: Optional[float] = None
         self.var: float = 0.0

@@ -8,7 +8,12 @@ Builds a conservative call graph rooted at the repo's jit sites:
 * ``build=`` keyword values handed to the dispatch layer
   (``sim/dispatch.py`` jits them): a Name roots that def, a factory
   call roots the factory's *nested* defs (the returned closures), and
-  a lambda contributes the calls in its body.
+  a lambda contributes the calls in its body,
+* ``target=`` keyword values handed to ``threading.Thread`` (the ckpt
+  flush controller and the serve worker spawn these): the worker body
+  runs concurrently with traced steps, so a host sync inside it is the
+  same device-contention bug as in a jitted body.  ``self.X`` targets
+  resolve against the flat class-method index.
 
 Reachability then closes over plain-name calls (local defs, nested
 defs, from-imports, module-alias attribute calls) and over the
@@ -45,6 +50,11 @@ def _resolve(info: ModuleInfo, node: ast.AST) -> Optional[str]:
 def _is_jit_ref(info: ModuleInfo, node: ast.AST) -> bool:
     r = _resolve(info, node)
     return r is not None and (r in _JIT_NAMES or r.endswith(".shard_map"))
+
+
+def _is_thread_ref(info: ModuleInfo, node: ast.AST) -> bool:
+    r = _resolve(info, node)
+    return r is not None and (r == "Thread" or r.endswith(".Thread"))
 
 
 def _static_argnames(call: ast.Call) -> Set[str]:
@@ -146,6 +156,19 @@ class CallGraph:
                 self._root_from_expr(mod, scope, expr.func, roots,
                                      factory_call=True)
 
+    def _root_thread_target(self, mod: _Module, scope: str,
+                            expr: ast.AST, roots: Set[Node]) -> None:
+        """Root a ``threading.Thread(target=...)`` worker body.  The
+        common repo shape is ``target=self._run`` — class methods are
+        indexed flat, so the bare attribute name resolves directly."""
+        if (isinstance(expr, ast.Attribute)
+                and isinstance(expr.value, ast.Name)
+                and expr.value.id == "self"
+                and expr.attr in mod.functions):
+            roots.add((mod.info.module or mod.info.rel, expr.attr))
+        else:
+            self._root_from_expr(mod, scope, expr, roots)
+
     def _find_roots(self) -> Set[Node]:
         roots: Set[Node] = set()
         for mname, mod in self.mods.items():
@@ -184,6 +207,10 @@ class CallGraph:
                         if kw.arg == "build":
                             self._root_from_expr(mod, scope, kw.value,
                                                  roots)
+                        elif (kw.arg == "target"
+                              and _is_thread_ref(info, node.func)):
+                            self._root_thread_target(mod, scope, kw.value,
+                                                     roots)
         return roots
 
     # -- reachability --------------------------------------------------------

@@ -39,7 +39,8 @@ from .schema import DEFAULT_MAX_DEEP_EVERY, AdviceRequest
 _SINGLE_FIELDS = ("C", "R", "D", "mu", "omega", "P_static", "P_cal",
                   "P_io", "P_down")
 _ML_FIELDS = ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "omega", "q",
-              "P_static", "P_cal", "P_io1", "P_io2", "P_down")
+              "P_static", "P_cal", "P_io1", "P_io2", "P_down",
+              "omega1", "omega2")
 
 
 def _single_row(req: AdviceRequest) -> Tuple[float, ...]:
@@ -51,7 +52,8 @@ def _single_row(req: AdviceRequest) -> Tuple[float, ...]:
 def _ml_row(req: AdviceRequest) -> Tuple[float, ...]:
     t1, t2 = req.tiers
     return (t1.C, t1.R, t1.D, t2.C, t2.R, t2.D, req.mu, req.omega, t1.q,
-            req.P_static, req.P_cal, t1.P_io, t2.P_io, req.P_down)
+            req.P_static, req.P_cal, t1.P_io, t2.P_io, req.P_down,
+            req.omega, req.w2)
 
 
 def single_grid(reqs: Sequence[AdviceRequest]) -> ParamGrid:

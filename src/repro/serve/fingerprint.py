@@ -124,6 +124,8 @@ def quantize_request(req: AdviceRequest, q: Quantization) -> AdviceRequest:
         mu=_qlog(req.mu, q.rel),
         tiers=tuple(_qtier(t, q) for t in req.tiers),
         omega=_qlin(req.omega, q.absolute),
+        omega2=(None if req.omega2 is None
+                else _qlin(req.omega2, q.absolute)),
         P_static=_qlog(req.P_static, q.rel),
         P_cal=_qlog(req.P_cal, q.rel),
         P_down=_qlog(req.P_down, q.rel),
@@ -149,7 +151,9 @@ def quantized_key(qr: AdviceRequest) -> Tuple:
     key = ("2l" if qr.is_multilevel else "1l", qr.mu, tiers, qr.omega,
            qr.P_static, qr.P_cal, qr.P_down, qr.process, qr.process_param)
     if qr.is_multilevel:
-        key = key + (qr.max_deep_every,)
+        # the effective deep-flush overlap enters the solve, so it enters
+        # the key (w2 == omega for requests without an async split).
+        key = key + (qr.max_deep_every, qr.w2)
     return key
 
 
@@ -164,7 +168,7 @@ def exact_fingerprint(req: AdviceRequest) -> Tuple:
            req.omega, req.P_static, req.P_cal, req.P_down, req.process,
            req.process_param)
     if req.is_multilevel:
-        key = key + (req.max_deep_every,)
+        key = key + (req.max_deep_every, req.w2)
     return key
 
 
@@ -177,7 +181,10 @@ _SINGLE_LOG_FIELDS = ("C", "R", "D", "mu", "P_static", "P_cal", "P_io",
 _SINGLE_LIN_FIELDS = ("omega",)
 _ML_LOG_FIELDS = ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "P_static",
                   "P_cal", "P_io1", "P_io2", "P_down")
-_ML_LIN_FIELDS = ("omega", "q")
+# the objectives read the per-level overlaps, not the shared ``omega``
+# (omega1 carries the buddy overlap, omega2 the deep flush), so those are
+# the axes the certificate must sweep.
+_ML_LIN_FIELDS = ("omega1", "omega2", "q")
 
 
 def _log_span(objective, fields: dict, q: Quantization, log_fields,

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 from ..core.params import (CheckpointParams, MultilevelCheckpointParams,
                            MultilevelPowerParams, PowerParams)
@@ -97,6 +97,9 @@ class AdviceRequest:
     mu: float
     tiers: Tuple[StoreTier, ...]
     omega: float = 0.5
+    #: deep-flush overlap factor of a two-tier request (VELOC async
+    #: flush); None -> the shared ``omega`` applies to both tiers.
+    omega2: Optional[float] = None
     P_static: float = 10.0
     P_cal: float = 10.0
     P_down: float = 0.0
@@ -118,6 +121,9 @@ class AdviceRequest:
             raise ValueError(f"mu must be > 0, got {self.mu!r}")
         if not (0.0 <= self.omega <= 1.0):
             raise ValueError(f"omega must be in [0,1], got {self.omega!r}")
+        if self.omega2 is not None and not (0.0 <= self.omega2 <= 1.0):
+            raise ValueError(f"omega2 must be in [0,1] or None, "
+                             f"got {self.omega2!r}")
         if not (math.isfinite(self.T_base) and self.T_base > 0.0):
             raise ValueError(f"T_base must be > 0, got {self.T_base!r}")
         if self.P_static <= 0.0:
@@ -146,6 +152,12 @@ class AdviceRequest:
     def deep(self) -> StoreTier:
         return self.tiers[-1]
 
+    @property
+    def w2(self) -> float:
+        """Effective deep-flush overlap (``omega2``, defaulting to
+        ``omega`` — mirrors ``MultilevelCheckpointParams.w2``)."""
+        return self.omega if self.omega2 is None else self.omega2
+
     # -- conversions to the core parameter objects ---------------------------
     def single_params(self) -> Tuple[CheckpointParams, PowerParams]:
         """The (ckpt, power) pair of a one-tier request."""
@@ -161,7 +173,8 @@ class AdviceRequest:
         t1, t2 = self.tiers
         return (MultilevelCheckpointParams(
                     C1=t1.C, R1=t1.R, D1=t1.D, C2=t2.C, R2=t2.R, D2=t2.D,
-                    mu=self.mu, q=t1.q, omega=self.omega),
+                    mu=self.mu, q=t1.q, omega=self.omega,
+                    omega2=self.omega2),
                 MultilevelPowerParams(P_static=self.P_static,
                                       P_cal=self.P_cal, P_io1=t1.P_io,
                                       P_io2=t2.P_io, P_down=self.P_down))
@@ -184,7 +197,8 @@ class AdviceRequest:
                                deep_name: str = "pfs",
                                **kwargs) -> "AdviceRequest":
         """Two-tier request from the core multilevel parameter objects."""
-        return cls(mu=ckpt.mu, omega=ckpt.omega,
+        return cls(mu=ckpt.mu, omega=ckpt.w1,
+                   omega2=None if ckpt.w2 == ckpt.w1 else ckpt.w2,
                    tiers=(StoreTier(name=fast_name, C=ckpt.C1, R=ckpt.R1,
                                     D=ckpt.D1, P_io=power.P_io1, q=ckpt.q),
                           StoreTier(name=deep_name, C=ckpt.C2, R=ckpt.R2,

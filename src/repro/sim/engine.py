@@ -1077,10 +1077,19 @@ class MultilevelTrajectoryBatch:
     gaps_exhausted: np.ndarray
 
 
-def _run_one_ml(T, m, C1, C2, R1, R2, D1, D2, omega, T_base,
+def _run_one_ml(T, m, C1, C2, R1, R2, D1, D2, omega1, omega2, T_base,
                 gaps, hard, n_steps):
     """One two-level trajectory; ``hard[i]`` is the level-loss flag of the
-    i-th failure.  Mirrors ``_run_one`` branch-for-branch."""
+    i-th failure.  Mirrors ``_run_one`` branch-for-branch.
+
+    ``omega1``/``omega2`` are the per-level overlap rates (buddy write /
+    deep flush).  The commit-at-end-of-checkpoint-phase semantics below
+    ARE the hazard-during-flush model: work performed at rate ``omega2``
+    during a deep write belongs to an uncommitted in-flight generation, so
+    a failure inside the flush window rolls back to the previous surviving
+    level and re-executes it.  With ``omega1 == omega2`` the select is
+    value-transparent and the pre-async trajectories are reproduced
+    bit-for-bit."""
     f64 = gaps.dtype
     n_gaps = gaps.shape[0]
     C_first = jnp.where(m > 1, C1, C2)      # period 0 is deep only when m=1
@@ -1114,7 +1123,8 @@ def _run_one_ml(T, m, C1, C2, R1, R2, D1, D2, omega, T_base,
         is_deep = k == m - 1
         Ck = jnp.where(is_deep, C2, C1)
         in_ckpt = phase == CHECKPOINT
-        rate = jnp.where(in_ckpt, omega, 1.0)
+        omega_k = jnp.where(is_deep, omega2, omega1)
+        rate = jnp.where(in_ckpt, omega_k, 1.0)
         t_done = jnp.where(rate > 0.0,
                            (T_base - live) / jnp.where(rate > 0.0, rate, 1.0),
                            jnp.inf)
@@ -1209,14 +1219,15 @@ def _run_one_ml(T, m, C1, C2, R1, R2, D1, D2, omega, T_base,
 
 
 def _make_runner_ml(n_steps: int):
-    def run_grid(T, m, C1, C2, R1, R2, D1, D2, omega, T_base, gaps, hard):
-        def one(t, mm, c1, c2, r1, r2, d1, d2, o, tb, g, h):
-            return _run_one_ml(t, mm, c1, c2, r1, r2, d1, d2, o, tb, g, h,
-                               n_steps)
-        over_trials = jax.vmap(one, in_axes=(None,) * 10 + (0, 0))
-        over_grid = jax.vmap(over_trials, in_axes=(0,) * 10 + (0, 0))
-        return over_grid(T, m, C1, C2, R1, R2, D1, D2, omega, T_base,
-                         gaps, hard)
+    def run_grid(T, m, C1, C2, R1, R2, D1, D2, omega1, omega2, T_base,
+                 gaps, hard):
+        def one(t, mm, c1, c2, r1, r2, d1, d2, o1, o2, tb, g, h):
+            return _run_one_ml(t, mm, c1, c2, r1, r2, d1, d2, o1, o2, tb,
+                               g, h, n_steps)
+        over_trials = jax.vmap(one, in_axes=(None,) * 11 + (0, 0))
+        over_grid = jax.vmap(over_trials, in_axes=(0,) * 11 + (0, 0))
+        return over_grid(T, m, C1, C2, R1, R2, D1, D2, omega1, omega2,
+                         T_base, gaps, hard)
     return jax.jit(run_grid)
 
 
@@ -1309,7 +1320,7 @@ def simulate_trajectories_ml(T, m, grid: MultilevelParamGrid,
         raise ValueError("deep-checkpoint cadence m must be >= 1")
     if np.any(T_arr < np.maximum(flat.C1, flat.C2)):
         raise ValueError("period too short: T must cover the checkpoint")
-    if np.any(T_arr <= (1.0 - flat.omega) * flat.C_mean(m_arr)):
+    if np.any(T_arr <= flat.a(m_arr)):
         raise ValueError("period too short: no work progress per period")
 
     if gaps is None or hard is None:
@@ -1338,7 +1349,8 @@ def simulate_trajectories_ml(T, m, grid: MultilevelParamGrid,
             jnp.asarray(flat.R2, dtype=f64),
             jnp.asarray(flat.D1, dtype=f64),
             jnp.asarray(flat.D2, dtype=f64),
-            jnp.asarray(flat.omega, dtype=f64),
+            jnp.asarray(flat.omega1, dtype=f64),
+            jnp.asarray(flat.omega2, dtype=f64),
             jnp.asarray(Tb_arr, dtype=f64),
             jnp.asarray(gaps, dtype=f64),
             jnp.asarray(hard, dtype=jnp.bool_))

@@ -435,7 +435,8 @@ def arch_grid(archs: Sequence[str] | None = None, **kwargs) -> ParamGrid:
 # ---------------------------------------------------------------------------
 
 _ML_FIELDS = ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "omega", "q",
-              "P_static", "P_cal", "P_io1", "P_io2", "P_down")
+              "P_static", "P_cal", "P_io1", "P_io2", "P_down",
+              "omega1", "omega2")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -445,6 +446,10 @@ class MultilevelParamGrid:
     Same plumbing as :class:`ParamGrid`, with per-level (C_k, R_k, D_k,
     P_io_k) fields plus the buddy-loss probability ``q``.  ``m`` stays a
     decision variable handled by the solvers/engine, not a grid field.
+    ``omega1``/``omega2`` are the per-level overlap factors (buddy write /
+    deep flush); either defaults to ``omega`` when omitted, and wherever
+    they are equal the derived quantities evaluate the exact shared-omega
+    expressions (bit-for-bit with the pre-async grid).
     """
 
     C1: np.ndarray
@@ -461,8 +466,14 @@ class MultilevelParamGrid:
     P_io1: np.ndarray
     P_io2: np.ndarray
     P_down: np.ndarray
+    omega1: Optional[np.ndarray] = None
+    omega2: Optional[np.ndarray] = None
 
     def __post_init__(self):
+        if self.omega1 is None:
+            object.__setattr__(self, "omega1", self.omega)
+        if self.omega2 is None:
+            object.__setattr__(self, "omega2", self.omega)
         arrs = np.broadcast_arrays(*(np.asarray(getattr(self, f),
                                                 dtype=np.float64)
                                      for f in _ML_FIELDS))
@@ -493,12 +504,24 @@ class MultilevelParamGrid:
     def C_mean(self, m) -> np.ndarray:
         return ((m - 1) * self.C1 + self.C2) / m
 
+    def _shared_omega(self) -> np.ndarray:
+        return self.omega1 == self.omega2
+
+    def C_omega_mean(self, m) -> np.ndarray:
+        per = ((m - 1) * self.omega1 * self.C1
+               + self.omega2 * self.C2) / m
+        return np.where(self._shared_omega(),
+                        self.omega1 * self.C_mean(m), per)
+
     def a(self, m) -> np.ndarray:
-        return (1.0 - self.omega) * self.C_mean(m)
+        per = ((m - 1) * (1.0 - self.omega1) * self.C1
+               + (1.0 - self.omega2) * self.C2) / m
+        return np.where(self._shared_omega(),
+                        (1.0 - self.omega1) * self.C_mean(m), per)
 
     def b(self, m) -> np.ndarray:
-        soft = self.D1 + self.R1 + self.omega * self.C_mean(m)
-        hard = self.D2 + self.R2 + self.omega * self.C2
+        soft = self.D1 + self.R1 + self.C_omega_mean(m)
+        hard = self.D2 + self.R2 + self.omega2 * self.C2
         return 1.0 - (soft + self.q * (hard - soft)) / self.mu
 
     def mu_eff(self, m) -> np.ndarray:
@@ -519,7 +542,9 @@ class MultilevelParamGrid:
             C2=float(self.C2[idx]), R2=float(self.R2[idx]),
             D1=float(self.D1[idx]), D2=float(self.D2[idx]),
             mu=float(self.mu[idx]), q=float(self.q[idx]),
-            omega=float(self.omega[idx]))
+            omega=float(self.omega[idx]),
+            omega1=float(self.omega1[idx]),
+            omega2=float(self.omega2[idx]))
 
     def power_at(self, idx) -> MultilevelPowerParams:
         return MultilevelPowerParams(
@@ -535,7 +560,7 @@ class MultilevelParamGrid:
                    R2=ckpt.R2, D2=ckpt.D2, mu=ckpt.mu, omega=ckpt.omega,
                    q=ckpt.q, P_static=power.P_static, P_cal=power.P_cal,
                    P_io1=power.P_io1, P_io2=power.P_io2,
-                   P_down=power.P_down)
+                   P_down=power.P_down, omega1=ckpt.w1, omega2=ckpt.w2)
 
     @classmethod
     def from_single_level(cls, grid: ParamGrid,
@@ -548,9 +573,10 @@ class MultilevelParamGrid:
                    P_io1=grid.P_io, P_io2=grid.P_io, P_down=grid.P_down)
 
     def single_level(self) -> ParamGrid:
-        """The PFS-only comparator grid (C=C2, R=R2, D=D2, P_io=P_io2)."""
+        """The PFS-only comparator grid (C=C2, R=R2, D=D2, P_io=P_io2,
+        at the deep level's overlap factor)."""
         return ParamGrid(C=self.C2, R=self.R2, D=self.D2, mu=self.mu,
-                         omega=self.omega, P_static=self.P_static,
+                         omega=self.omega2, P_static=self.P_static,
                          P_cal=self.P_cal, P_io=self.P_io2,
                          P_down=self.P_down)
 
@@ -562,6 +588,8 @@ def multilevel_grid_from_scenarios(
     return MultilevelParamGrid(
         **{f: [getattr(s.ckpt, f) for s in scens]
            for f in ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "omega", "q")},
+        omega1=[s.ckpt.w1 for s in scens],
+        omega2=[s.ckpt.w2 for s in scens],
         **{f: [getattr(s.power, f) for s in scens]
            for f in ("P_static", "P_cal", "P_io1", "P_io2", "P_down")})
 

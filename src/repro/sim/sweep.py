@@ -375,12 +375,52 @@ def evaluate_grid(grid: ParamGrid, T_base: float = 1.0,
 # names; m: a float array broadcasting against them (the solvers put the
 # candidate cadences on a leading axis and argmin over it).
 
+def _where(cond, a, b):
+    """Namespace-dispatching ``where``: jnp only when an operand is a jax
+    value (traced or device), numpy otherwise.  The ``ml_*_batched``
+    entry points are also called EAGERLY on host scalars (the serve
+    layer's certificate sweeps); an unconditional ``jnp.where`` there
+    would pull the whole expression onto the jax eager path and compile
+    one tiny program per arithmetic op (caught by the sanitizer tier's
+    recompile budget)."""
+    import jax
+    if any(isinstance(x, jax.Array) for x in (cond, a, b)):
+        return jnp.where(cond, a, b)
+    return np.where(cond, a, b)
+
+
+def _ml_omega_terms(p, m):
+    """(w1, w2, Cw, S2, S2w): per-level overlap aggregates.
+
+    Where the two overlap factors coincide the shared-omega expressions
+    are evaluated verbatim (bit-for-bit with both the pre-async batched
+    forms and the scalar ``MultilevelCheckpointParams`` branches).
+    ``omega1``/``omega2`` fall back to the shared ``omega`` when a plain
+    param dict omits them (the public ``ml_*_batched`` entry points
+    accept both spellings).
+    """
+    C1, C2 = p["C1"], p["C2"]
+    w1 = p.get("omega1", p["omega"])
+    w2 = p.get("omega2", p["omega"])
+    shared = w1 == w2
+    Cb = ((m - 1.0) * C1 + C2) / m
+    S2 = ((m - 1.0) * C1**2 + C2**2) / m
+    Cw = _where(shared, w1 * Cb,
+                ((m - 1.0) * w1 * C1 + w2 * C2) / m)
+    S2w = _where(shared, w1 * S2,
+                 ((m - 1.0) * w1 * C1**2 + w2 * C2**2) / m)
+    return w1, w2, Cw, S2, S2w
+
+
 def _ml_derived(p, m):
     """(C_mean, a_m, b_m, mu_m) of the multilevel §3.1 analogue."""
     Cb = ((m - 1.0) * p["C1"] + p["C2"]) / m
-    a = (1.0 - p["omega"]) * Cb
-    soft = p["D1"] + p["R1"] + p["omega"] * Cb
-    hard = p["D2"] + p["R2"] + p["omega"] * p["C2"]
+    w1, w2, Cw, _, _ = _ml_omega_terms(p, m)
+    a = _where(w1 == w2, (1.0 - w1) * Cb,
+               ((m - 1.0) * (1.0 - w1) * p["C1"]
+                + (1.0 - w2) * p["C2"]) / m)
+    soft = p["D1"] + p["R1"] + Cw
+    hard = p["D2"] + p["R2"] + w2 * p["C2"]
     b = 1.0 - (soft + p["q"] * (hard - soft)) / p["mu"]
     mu_m = p["mu"] / (1.0 + p["q"] * (m - 1.0))
     return Cb, a, b, mu_m
@@ -396,15 +436,15 @@ def ml_energy_final_batched(T, m, p, T_base=1.0):
     """Two-level E_final with per-level I/O powers, elementwise."""
     C1, R1, D1 = p["C1"], p["R1"], p["D1"]
     C2, R2, D2 = p["C2"], p["R2"], p["D2"]
-    q, omega = p["q"], p["omega"]
+    q = p["q"]
     Cb, a, b, mu_m = _ml_derived(p, m)
+    w1, w2, Cw, S2, S2w = _ml_omega_terms(p, m)
 
     Tf = T_base * T / ((T - a) * (b - T / (2.0 * mu_m)))
     nf = Tf / p["mu"]
-    S2 = ((m - 1.0) * C1**2 + C2**2) / m
-    Ew = (T**2 - S2) / (2.0 * T) + omega * S2 / (2.0 * T)
-    w_soft = omega * Cb + Ew
-    w_hard = omega * C2 + (m - 1.0) * (T - (1.0 - omega) * C1) / 2.0 + Ew
+    Ew = (T**2 - S2) / (2.0 * T) + S2w / (2.0 * T)
+    w_soft = Cw + Ew
+    w_hard = w2 * C2 + (m - 1.0) * (T - (1.0 - w1) * C1) / 2.0 + Ew
     T_cal = T_base + nf * (w_soft + q * (w_hard - w_soft))
 
     ck_io1 = T_base * ((m - 1.0) * C1 / m) / (T - a)
@@ -433,18 +473,18 @@ def _ml_bracket(p, m):
 def _ml_energy_prime_batched(T, m, p, T_base=1.0):
     """Analytic two-level dE/dT (W normal form, mirrors core.model)."""
     C1, C2 = p["C1"], p["C2"]
-    q, omega = p["q"], p["omega"]
+    q = p["q"]
     Pc, P1, P2, Pd = p["P_cal"], p["P_io1"], p["P_io2"], p["P_down"]
     Cb, a, b, mu_m = _ml_derived(p, m)
-    S2 = ((m - 1.0) * C1**2 + C2**2) / m
+    w1, w2, Cw, S2, S2w = _ml_omega_terms(p, m)
 
-    W0 = (Pc * (omega * Cb + q * (omega * C2 - omega * Cb
-                                  - (m - 1.0) * (1.0 - omega) * C1 / 2.0))
+    W0 = (Pc * (Cw + q * (w2 * C2 - Cw
+                          - (m - 1.0) * (1.0 - w1) * C1 / 2.0))
           + P1 * ((1.0 - q) * p["R1"] + q * (m - 1.0) * C1 / 2.0)
           + P2 * q * p["R2"]
           + Pd * (p["D1"] + q * (p["D2"] - p["D1"])))
     W1 = Pc * (1.0 + q * (m - 1.0)) / 2.0
-    Wm = (Pc * (omega - 1.0) * S2 / 2.0
+    Wm = (Pc * (S2w - S2) / 2.0
           + P1 * (m - 1.0) * C1**2 / (2.0 * m)
           + P2 * C2**2 / (2.0 * m))
     J = P1 * (m - 1.0) * C1 / m + P2 * C2 / m
@@ -578,7 +618,8 @@ class MultilevelGridResult:
 
 
 _ML_FIELD_ORDER = ("C1", "R1", "D1", "C2", "R2", "D2", "mu", "omega", "q",
-                   "P_static", "P_cal", "P_io1", "P_io2", "P_down")
+                   "P_static", "P_cal", "P_io1", "P_io2", "P_down",
+                   "omega1", "omega2")
 _ML_OUT_ORDER = ("T_time", "m_time", "T_energy", "m_energy",
                  "Tf_time", "Tf_energy", "E_time", "E_energy",
                  "time_ratio", "energy_ratio",
@@ -586,7 +627,7 @@ _ML_OUT_ORDER = ("T_time", "m_time", "T_energy", "m_energy",
 
 
 def _evaluate_ml_core(P, T_base, m_values, m_max=None):
-    # P: one stacked (14, N) array; m_values: static tuple of cadences
+    # P: one stacked (16, N) array; m_values: static tuple of cadences
     # (closed over by the dispatch build — one compiled program per
     # distinct tuple, exactly like the old static_argnums jit).
     # m_max: optional traced (N,) per-point cadence cap — candidates with
@@ -628,9 +669,10 @@ def _evaluate_ml_core(P, T_base, m_values, m_max=None):
     Tf_energy = ml_time_final_batched(T_energy, m_energy, p, T_base)
     E_time = ml_energy_final_batched(T_time, m_time, p, T_base)
 
-    # PFS-only single-level comparator on the same grid (C2/R2/D2/P_io2).
+    # PFS-only single-level comparator on the same grid (C2/R2/D2/P_io2,
+    # at the deep level's overlap factor — mirrors grid.single_level()).
     p_sl = {"C": p["C2"], "R": p["R2"], "D": p["D2"], "mu": p["mu"],
-            "omega": p["omega"], "P_static": p["P_static"],
+            "omega": p["omega2"], "P_static": p["P_static"],
             "P_cal": p["P_cal"], "P_io": p["P_io2"], "P_down": p["P_down"]}
     lo_s, hi_s, valid_s = _bracket(p_sl)
     sel_s = jnp.arange(2, dtype=jnp.int32).reshape((2, 1))

@@ -1,0 +1,16 @@
+"""RPL004 thread-target negative: clean worker bodies stay silent, and a
+``target=`` keyword on a non-Thread callee does not root anything."""
+import threading
+
+
+def _tick(n):
+    return n + 1
+
+
+def _host_probe(x):
+    return x.item()                 # unreachable: only a non-Thread target
+
+
+def launch(pool, n):
+    threading.Thread(target=_tick, args=(n,), daemon=True).start()
+    pool.submit(target=_host_probe)

@@ -1,0 +1,24 @@
+"""RPL004 thread-target fixture: worker bodies handed to
+``threading.Thread(target=...)`` are call-graph roots — both a plain
+function and the ``target=self._method`` class shape."""
+import threading
+
+import numpy as np
+
+
+def _flush_body(buf):
+    return np.asarray(buf)          # host pull inside the worker
+
+
+class _Controller:
+    def _drain(self, x):
+        return x.item()             # device->host sync in the worker
+
+    def start(self, x):
+        t = threading.Thread(target=self._drain, args=(x,), daemon=True)
+        t.start()
+        return t
+
+
+def spawn(buf):
+    return threading.Thread(target=_flush_body, args=(buf,), daemon=True)

@@ -276,6 +276,38 @@ class TestWatchdog:
             w.observe(i, 1.0 + 0.01 * rng.standard_normal())
         assert w.events == []
 
+    def test_warmup_spike_absorbed_not_flagged(self):
+        """Before min_samples the statistics are too green to trust: the
+        spike is not flagged and it updates the baseline."""
+        from repro.ft import WatchdogConfig
+        w = StepTimeWatchdog(WatchdogConfig(min_samples=8))
+        for i in range(3):
+            w.observe(i, 1.0)
+        assert not w.observe(3, 5.0)
+        assert w.events == []
+        assert w.mean > 1.0
+
+    def test_escalation_resets_after_normal_step(self):
+        from repro.ft import WatchdogConfig
+        w = StepTimeWatchdog(WatchdogConfig(consecutive_to_escalate=3))
+        for i in range(10):
+            w.observe(i, 1.0)
+        w.observe(10, 5.0)
+        w.observe(11, 5.0)
+        assert not w.events[-1]["escalate"]   # only 2 consecutive
+        w.observe(12, 1.0)                    # recovery resets the streak
+        w.observe(13, 5.0)
+        assert not w.events[-1]["escalate"]
+
+    def test_on_straggler_callback(self):
+        seen = []
+        w = StepTimeWatchdog(on_straggler=seen.append)
+        for i in range(10):
+            w.observe(i, 1.0)
+        w.observe(10, 5.0)
+        assert len(seen) == 1
+        assert seen[0]["step"] == 10 and seen[0]["duration_s"] == 5.0
+
 
 # ---------------------------------------------------------------------------
 # Elastic plan
@@ -332,6 +364,27 @@ def _trainer(tmp, rig, mu_s, seed=0, steps=20, strategy="algo_t",
 
 
 class TestFaultTolerantTrainer:
+    def test_watchdog_wired_to_tracker_and_report(self, tmp_path, tiny_rig):
+        """The trainer binds the watchdog's callback to its tracker and
+        surfaces event counts in the report."""
+        from repro.ft import MemoryTracker
+        t = _trainer(tmp_path, tiny_rig, mu_s=float("inf"), steps=6)
+        t.tracker = MemoryTracker()
+        # warm the baseline, then push a straggler burst through the
+        # trainer-bound callback (sim step time is constant, so the run
+        # itself never flags)
+        for i in range(10):
+            t.watchdog.observe(i, 1.0)
+        for i in range(3):
+            t.watchdog.observe(10 + i, 6.0)
+        rep = t.run()
+        stragglers = t.tracker.of_kind("straggler")
+        assert len(stragglers) == 3
+        assert stragglers[-1]["escalate"]
+        assert rep["straggler_events"] == 3
+        assert rep["straggler_escalations"] == 1
+        assert t.tracker.of_kind("step")      # step stream flows too
+
     def test_failures_do_not_change_result(self, tmp_path, tiny_rig):
         """Kill-anywhere property: final params identical with/without
         injected failures."""

@@ -1,0 +1,488 @@
+"""IO fault-injection tier (marker: ``faultinject``).
+
+Exercises the failure-interruptible async checkpoint stack end to end:
+
+* :class:`FaultPlan` semantics (stall / torn / corrupt / transient / hard
+  error, trigger budgets, named fault points);
+* store-level consequences — torn generations stay invisible and get
+  garbage-collected, corrupted generations fail CRC validation and
+  ``latest()`` falls back, aborted writes raise :class:`FlushAborted`;
+* the :class:`FlushController` retry/backoff/abort machinery;
+* the parametrized FAULT-POINT SWEEP: a fault scripted at every point of
+  the write pipeline (snapshot, mid-shard-write, between shard rename
+  and manifest commit, during the buddy push, during retry backoff)
+  while failures are injected — the restored state must always be a
+  valid committed generation and the run must end bit-identical to the
+  no-fault baseline (rollback identity);
+* graceful degradation: a persistently failing PFS flips the manager to
+  buddy-only (alarm + policy re-solve at the degraded tier) until the
+  store heals, and the run still completes bit-identically.
+
+CI runs this file on its own via ``pytest -m faultinject``; it also runs
+in the default suite.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import (CheckpointManager, FaultPlan, FlushAborted,
+                        FlushController, ManagerConfig, ShardedStore,
+                        StoreConfig, TransientIOError)
+from repro.configs import get_config, reduced
+from repro.core.policy import CheckpointPolicy, PolicyConfig
+from repro.data import for_arch
+from repro.energy import EnergyMeter, PAPER_EXASCALE_PROFILE
+from repro.ft import (FailureInjector, FailureModel, FaultTolerantTrainer,
+                      TrainerConfig)
+from repro.models import build
+from repro.optim import adamw
+
+pytestmark = pytest.mark.faultinject
+
+PW = PAPER_EXASCALE_PROFILE.power_params()
+
+
+def small_tree(seed=0):
+    k = jax.random.key(seed)
+    return {"a": jax.random.normal(k, (256, 64)),
+            "b": jax.numpy.arange(7, dtype=jax.numpy.int32)}
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_rejects_unknown_point_and_kind(self):
+        with pytest.raises(ValueError):
+            FaultPlan(fail_at="nonsense")
+        with pytest.raises(ValueError):
+            FaultPlan(kind="nonsense")
+
+    def test_wrong_point_is_noop(self):
+        plan = FaultPlan(fail_at="manifest_commit", kind="error")
+        assert plan.take("shard_write") is None
+        assert plan.fired == 0
+
+    def test_error_honors_trigger_budget(self):
+        plan = FaultPlan(fail_at="shard_write", kind="error", max_triggers=2)
+        for _ in range(2):
+            with pytest.raises(IOError):
+                plan.take("shard_write")
+        assert plan.take("shard_write") is None       # budget spent
+        assert plan.fired == 2
+
+    def test_transient_burst_then_clean(self):
+        plan = FaultPlan(fail_at="shard_write", kind="transient",
+                         transient_errors=3)
+        for _ in range(3):
+            with pytest.raises(TransientIOError):
+                plan.take("shard_write")
+        assert plan.take("shard_write") is None
+
+    def test_stall_interruptible_by_abort(self):
+        plan = FaultPlan(fail_at="shard_write", kind="stall", stall_s=30.0)
+        abort = threading.Event()
+        abort.set()
+        with pytest.raises(FlushAborted):
+            plan.take("shard_write", abort=abort)
+
+
+# ---------------------------------------------------------------------------
+# Store under injection
+# ---------------------------------------------------------------------------
+
+class TestStoreInjection:
+    def test_torn_write_leaves_uncommitted_generation(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        tree = small_tree()
+        store.save(1, tree)
+        store.fault_plan = FaultPlan(fail_at="shard_write", kind="torn",
+                                     torn_after_bytes=128)
+        with pytest.raises(IOError):
+            store.save(2, tree)
+        # the torn generation has no manifest -> invisible to latest()
+        out, step = store.restore(tree)
+        assert step == 1
+        torn = store.root / "step_000000002"
+        assert torn.exists() and not (torn / "manifest.json").exists()
+        # the next committed save garbage-collects the torn leftover
+        store.fault_plan = None
+        store.save(3, tree)
+        assert not torn.exists()
+
+    def test_gc_keeps_newer_uncommitted_generation(self, tmp_path):
+        """An uncommitted generation NEWER than the newest committed one
+        may be a flush in flight — _gc must not reclaim it."""
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        tree = small_tree()
+        store.save(1, tree)
+        inflight = store.root / "step_000000009"
+        inflight.mkdir()
+        (inflight / "shard_00000.npz.tmp").write_bytes(b"partial")
+        store.save(2, tree)                    # triggers _gc
+        assert inflight.exists()
+
+    def test_corruption_commits_but_fails_validation(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        tree = small_tree()
+        store.save(1, tree)
+        store.fault_plan = FaultPlan(fail_at="manifest_commit",
+                                     kind="corrupt")
+        store.save(2, tree)                    # commits, then flips a byte
+        gen2 = store.root / "step_000000002"
+        assert (gen2 / "manifest.json").exists()
+        assert not store.validate(gen2)
+        out, step = store.restore(tree)
+        assert step == 1                       # fell back across it
+
+    def test_abort_event_interrupts_save(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        abort = threading.Event()
+        abort.set()
+        with pytest.raises(FlushAborted):
+            store.save(5, small_tree(), abort=abort)
+        assert store.latest() is None
+        assert store.invalidate(5)             # torn leftover reclaimed
+        assert store.generations() == []
+
+    def test_invalidate_missing_generation(self, tmp_path):
+        store = ShardedStore(StoreConfig(root=str(tmp_path)))
+        assert not store.invalidate(42)
+
+
+# ---------------------------------------------------------------------------
+# FlushController
+# ---------------------------------------------------------------------------
+
+def _controller_rig(tmp_path, **cfg):
+    store = ShardedStore(StoreConfig(root=str(tmp_path)))
+    ctl = FlushController(store, **cfg)
+    outcomes = []
+    return store, ctl, outcomes, (
+        lambda step, outcome, payload: outcomes.append(outcome))
+
+
+class TestFlushController:
+    def test_transient_errors_absorbed_by_retry(self, tmp_path):
+        store, ctl, outcomes, done = _controller_rig(tmp_path, retries=2,
+                                                     backoff_s=0.001)
+        store.fault_plan = FaultPlan(fail_at="shard_write",
+                                     kind="transient", transient_errors=2)
+        tree = small_tree()
+        ctl.run_sync(1, lambda abort: store.save(1, tree, abort=abort),
+                     done)
+        assert outcomes == ["ok"]
+        assert store.validate(store.latest())
+
+    def test_retry_budget_exhausted_fails(self, tmp_path):
+        store, ctl, outcomes, done = _controller_rig(tmp_path, retries=1,
+                                                     backoff_s=0.001)
+        store.fault_plan = FaultPlan(fail_at="shard_write",
+                                     kind="transient", transient_errors=5)
+        tree = small_tree()
+        ctl.run_sync(1, lambda abort: store.save(1, tree, abort=abort),
+                     done)
+        assert outcomes == ["failed"]
+        assert store.latest() is None
+
+    def test_abort_interrupts_backoff(self, tmp_path):
+        store, ctl, outcomes, done = _controller_rig(tmp_path, retries=3,
+                                                     backoff_s=60.0)
+        store.fault_plan = FaultPlan(fail_at="shard_write",
+                                     kind="transient", transient_errors=5)
+        tree = small_tree()
+        ctl.submit(1, lambda abort: store.save(1, tree, abort=abort), done)
+        assert ctl.abort()                     # interrupt the 60 s backoff
+        assert outcomes == ["aborted"]
+
+    def test_injected_fault_during_retry_backoff(self, tmp_path):
+        store, ctl, outcomes, done = _controller_rig(tmp_path, retries=3,
+                                                     backoff_s=0.001)
+        store.fault_plan = FaultPlan(fail_at="retry_backoff", kind="error")
+        tree = small_tree()
+
+        def write(abort):
+            raise TransientIOError("first attempt fails")
+        ctl.run_sync(1, write, done)
+        assert outcomes == ["failed"]
+
+
+# ---------------------------------------------------------------------------
+# Manager: discard_in_flight + degraded mode (unit level)
+# ---------------------------------------------------------------------------
+
+def _policy(strategy="fixed", period=10.0, **kw):
+    return CheckpointPolicy(PolicyConfig(strategy=strategy,
+                                         fixed_period_s=period, **kw), PW)
+
+
+class TestManagerFaults:
+    def test_discard_in_flight_rejects_raced_commit(self, tmp_path):
+        """Even a flush that won the real-time race to commit must be
+        rejected when the virtual clock says it was interrupted."""
+        mgr = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path))),
+                                _policy(),
+                                ManagerConfig(async_write=False))
+        t1, t2 = small_tree(1), small_tree(2)
+        mgr.checkpoint(1, t1)
+        mgr.checkpoint(2, t2)                  # committed in real time
+        mgr.discard_in_flight(2, level=2)      # ... but virtually lost
+        out, step, source = mgr.restore(t1)
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(t1["a"]))
+
+    def test_buddy_revert_falls_back_one_generation(self, tmp_path):
+        mgr = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path))),
+                                _policy(),
+                                ManagerConfig(async_write=False,
+                                              pfs_every=2))
+        t1, t2 = small_tree(1), small_tree(2)
+        mgr.checkpoint(1, t1)                  # deep (+ buddy)
+        mgr.checkpoint(2, t2)                  # buddy-only
+        mgr.discard_in_flight(2, level=1)      # failure in buddy window
+        out, step, source = mgr.restore(t1)
+        assert (step, source) == (1, "store")  # tie prefers the store
+
+    def test_degrades_after_consecutive_failures_then_heals(self, tmp_path):
+        store = ShardedStore(StoreConfig(str(tmp_path)))
+        alarms = []
+        # period 0 -> due() every step (min_period_steps clamps to 1)
+        mgr = CheckpointManager(
+            store, _policy(period=0.0),
+            ManagerConfig(async_write=False, pfs_every=1,
+                          flush_retries=0, degrade_after=2, heal_every=2),
+            on_alarm=alarms.append)
+        tree = small_tree()
+        store.fault_plan = FaultPlan(fail_at="shard_write", kind="error",
+                                     max_triggers=2)
+        assert mgr.checkpoint(1, tree) == 2    # fails (1/2)
+        assert mgr.checkpoint(2, tree) == 2    # fails (2/2) -> degraded
+        assert mgr.degraded
+        assert [a["kind"] for a in alarms] == ["pfs_degraded"]
+        assert not mgr.policy.deep_available
+        # degraded: scheduled deep writes downgrade to buddy-only...
+        assert mgr.due(3) == 1
+        assert mgr.checkpoint(3, tree) == 1
+        # ... except the heal probe, which succeeds (budget exhausted)
+        assert mgr.due(4) == 2
+        assert mgr.checkpoint(4, tree) == 2
+        assert not mgr.degraded
+        assert [a["kind"] for a in alarms] == ["pfs_degraded", "pfs_healed"]
+        assert mgr.policy.deep_available
+        assert store.validate(store.latest())
+
+    def test_aborts_do_not_count_toward_degradation(self, tmp_path):
+        mgr = CheckpointManager(
+            ShardedStore(StoreConfig(str(tmp_path))), _policy(),
+            ManagerConfig(async_write=False, degrade_after=1))
+        tree = small_tree()
+        for step in (1, 2, 3):
+            mgr.checkpoint(step, tree)
+            mgr.discard_in_flight(step, level=2)
+        assert not mgr.degraded and mgr.alarms == []
+
+
+class TestPolicyDegradedSolve:
+    def test_buddy_only_resolve_and_restore(self):
+        from repro.core import optimal
+        from repro.energy import PAPER_EXASCALE_ML_PROFILE
+        prof = PAPER_EXASCALE_ML_PROFILE
+        pol = CheckpointPolicy(
+            PolicyConfig(strategy="algo_t_ml", C_s=1.5, R_s=1.5, D_s=0.2,
+                         C1_s=0.3, R1_s=0.3, D1_s=0.1, q=0.15, mu_s=15.0,
+                         omega=0.0, mu_from_observations=False),
+            prof.power_params(), ml_power=prof.ml_power_params())
+        T_full, m_full = pol.period_seconds(), pol.deep_every()
+        assert m_full >= 1
+        pol.set_deep_available(False)
+        assert pol.deep_every() == 1
+        ck = pol.checkpoint_params_ml().buddy_only()
+        assert pol.period_seconds() == pytest.approx(optimal.t_opt_time(ck))
+        pol.set_deep_available(True)
+        assert (pol.period_seconds(), pol.deep_every()) == (T_full, m_full)
+
+    def test_overlap_for_levels(self):
+        pol = CheckpointPolicy(
+            PolicyConfig(strategy="algo_t_ml", omega=0.2, omega2=0.9,
+                         mu_from_observations=False), PW)
+        assert pol.overlap_for(1) == pytest.approx(0.2)
+        assert pol.overlap_for(2) == pytest.approx(0.9)
+        single = CheckpointPolicy(PolicyConfig(strategy="algo_t",
+                                               omega=0.4), PW)
+        assert single.overlap_for(2) == pytest.approx(0.4)
+
+
+# ---------------------------------------------------------------------------
+# Fault-point sweep: rollback identity under scripted IO faults
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_rig():
+    cfg = reduced(get_config("starcoder2-3b"))
+    m = build(cfg)
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=1)
+    step_fn = jax.jit(m.make_train_step(ocfg))
+    return cfg, m, ocfg, step_fn
+
+
+def _trainer(tmp, rig, mu_s, seed=0, steps=16, fault_plan=None,
+             manager_kw=None, omega2=None):
+    cfg, m, ocfg, step_fn = rig
+    params = m.init(jax.random.key(0))
+    opt = adamw.init_state(params, ocfg)
+    data = for_arch(cfg, batch=4, seq_len=64, seed=1)
+    pol = CheckpointPolicy(PolicyConfig(strategy="algo_t", C_s=0.05,
+                                        R_s=0.05, D_s=0.1, mu_s=mu_s,
+                                        omega=0.5, omega2=omega2), PW)
+    store = ShardedStore(StoreConfig(root=str(tmp)))
+    store.fault_plan = fault_plan
+    mgr = CheckpointManager(store, pol,
+                            ManagerConfig(pfs_every=2, flush_backoff_s=0.001,
+                                          **(manager_kw or {})))
+    meter = EnergyMeter(PAPER_EXASCALE_PROFILE)
+    inj = FailureInjector(FailureModel(mu_s=mu_s, downtime_s=0.1, seed=seed))
+    return FaultTolerantTrainer(
+        train_step=step_fn, state=(params, opt), data=data, policy=pol,
+        manager=mgr, meter=meter, failures=inj,
+        config=TrainerConfig(total_steps=steps, sim_seconds_per_step=1.0))
+
+
+class _Chain:
+    """Several FaultPlans consulted in sequence (duck-typed for
+    ``store.fault_plan``) — lets a scripted fault reach points that only
+    exist downstream of another failure (``retry_backoff``)."""
+
+    def __init__(self, *plans):
+        self.plans = plans
+
+    @property
+    def fired(self):
+        return sum(p.fired for p in self.plans)
+
+    def take(self, point, abort=None):
+        out = None
+        for p in self.plans:
+            r = p.take(point, abort=abort)
+            out = out if r is None else r
+        return out
+
+
+def _plan_for(point, kind):
+    if point == "retry_backoff":
+        # the backoff point only exists after a failed write attempt:
+        # chain one transient shard-write failure in front of it.
+        return _Chain(
+            FaultPlan(fail_at="shard_write", kind="transient",
+                      transient_errors=1),
+            FaultPlan(fail_at=point, kind=kind, max_triggers=2))
+    return FaultPlan(fail_at=point, kind=kind, max_triggers=2,
+                     transient_errors=2, stall_s=0.005,
+                     torn_after_bytes=512)
+
+
+SWEEP_POINTS = [
+    ("snapshot", "stall"),
+    ("shard_write", "torn"),
+    ("shard_write", "transient"),
+    ("shard_rename", "error"),
+    ("manifest_commit", "error"),
+    ("manifest_commit", "corrupt"),
+    ("buddy_push", "error"),
+    ("retry_backoff", "error"),
+]
+
+
+class TestFaultPointSweep:
+    @pytest.fixture(scope="class")
+    def baseline(self, tiny_rig, tmp_path_factory):
+        t = _trainer(tmp_path_factory.mktemp("clean"), tiny_rig,
+                     mu_s=float("inf"))
+        rep = t.run()
+        return t, rep
+
+    @pytest.mark.parametrize("point,kind", SWEEP_POINTS,
+                             ids=[f"{p}-{k}" for p, k in SWEEP_POINTS])
+    def test_rollback_identity_with_fault(self, tiny_rig, tmp_path,
+                                          baseline, point, kind):
+        """A scripted IO fault at any pipeline point, under injected
+        failures, must leave every restore on a valid committed
+        generation and end bit-identical to the no-failure baseline."""
+        t_clean, rep_c = baseline
+        plan = _plan_for(point, kind)
+        t = _trainer(tmp_path, tiny_rig, mu_s=5.0, seed=3, fault_plan=plan)
+        rep = t.run()
+        assert rep["n_failures"] >= 1
+        assert plan.fired >= 1                 # the fault actually fired
+        assert rep["final_step"] == rep_c["final_step"]
+        for a, b in zip(jax.tree.leaves(t_clean.state[0]),
+                        jax.tree.leaves(t.state[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # every surviving committed generation must validate (torn and
+        # corrupt generations are invisible or rejected, never restored)
+        store = t.manager.store
+        for gen in store.generations():
+            if (gen / "manifest.json").exists() and kind != "corrupt":
+                assert store.validate(gen)
+        if store.latest() is not None:
+            assert store.validate(store.latest())
+
+
+class TestDegradedModeEndToEnd:
+    def test_degrade_alarm_resolve_heal(self, tiny_rig, tmp_path):
+        """Persistently failing PFS: the run must complete buddy-only
+        under a degradation alarm, re-solve the policy at the degraded
+        tier, then heal once the store recovers — bit-identical to the
+        clean baseline throughout."""
+        t_clean = _trainer(tmp_path / "clean", tiny_rig, mu_s=float("inf"),
+                           steps=24)
+        rep_c = t_clean.run()
+        plan = FaultPlan(fail_at="shard_write", kind="error",
+                         max_triggers=4)
+        t = _trainer(tmp_path / "fault", tiny_rig, mu_s=6.0, seed=1,
+                     steps=24, fault_plan=plan,
+                     manager_kw=dict(flush_retries=0, degrade_after=2,
+                                     heal_every=2))
+        rep = t.run()
+        kinds = [a["kind"] for a in rep["alarms"]]
+        assert "pfs_degraded" in kinds
+        assert rep["flush_errors"] >= 2
+        # the store eventually healed (fault budget exhausted by probes)
+        assert "pfs_healed" in kinds
+        assert not rep["pfs_degraded"]
+        assert t.policy.deep_available
+        # degraded stretches wrote buddy-only checkpoints
+        assert 1 in {c["level"] for c in rep["checkpoints"]}
+        assert rep["final_step"] == rep_c["final_step"]
+        for a, b in zip(jax.tree.leaves(t_clean.state[0]),
+                        jax.tree.leaves(t.state[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Shared-mutable-default regressions (the config aliasing bug class)
+# ---------------------------------------------------------------------------
+
+class TestPerInstanceConfigs:
+    def test_manager_configs_not_shared(self, tmp_path):
+        m1 = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path / "a"))),
+                               _policy())
+        m2 = CheckpointManager(ShardedStore(StoreConfig(str(tmp_path / "b"))),
+                               _policy())
+        m1.cfg.pfs_every = 7
+        assert m2.cfg.pfs_every != 7
+
+    def test_watchdog_configs_not_shared(self):
+        from repro.ft import StepTimeWatchdog
+        w1, w2 = StepTimeWatchdog(), StepTimeWatchdog()
+        w1.cfg.sigma_threshold = 99.0
+        assert w2.cfg.sigma_threshold != 99.0
+
+    def test_trainer_configs_not_shared(self, tiny_rig, tmp_path):
+        t1 = _trainer(tmp_path / "a", tiny_rig, mu_s=float("inf"))
+        t2 = _trainer(tmp_path / "b", tiny_rig, mu_s=float("inf"))
+        t1.cfg.total_steps = 999
+        assert t2.cfg.total_steps != 999

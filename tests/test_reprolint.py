@@ -139,6 +139,17 @@ class TestRPL004:
                 "good_step"} <= reachable
         assert "host_report" not in reachable
 
+    def test_thread_targets_are_roots(self):
+        """Worker bodies handed to threading.Thread(target=...) are
+        rooted — plain-function and ``target=self._method`` shapes."""
+        diags = rule_rpl004(_Ctx([_info("rpl004_thread_pos.py")]))
+        assert _codes(diags) == ["RPL004"] * 2
+        msgs = " ".join(d.message for d in diags)
+        assert "_flush_body" in msgs and "_drain" in msgs
+
+    def test_non_thread_target_keyword_not_rooted(self):
+        assert rule_rpl004(_Ctx([_info("rpl004_thread_neg.py")])) == []
+
 
 # ---------------------------------------------------------------------------
 # RPL005 — Python branching in scan bodies

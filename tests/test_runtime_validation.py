@@ -39,6 +39,15 @@ SCENARIOS = {
     "ml_exp": (dict(_ML, strategy="algo_t_ml"), TOL_EXP),
     "ml_weibull": (dict(_ML, strategy="algo_e_ml", **_WEIBULL),
                    TOL_WEIBULL),
+    # Async-flush tier (VELOC): the deep write overlaps omega2 of its
+    # cost; a failure inside the in-flight window aborts the flush and
+    # rolls back to the previous surviving generation — both the runtime
+    # (FlushController/discard_in_flight) and the model (per-level w2
+    # terms) must price that identically.
+    "ml_async_half": (dict(_ML, strategy="algo_t_ml", omega2=0.5),
+                      TOL_EXP),
+    "ml_async_deep": (dict(_ML, strategy="algo_t_ml", omega2=0.9),
+                      TOL_EXP),
 }
 
 
@@ -112,6 +121,30 @@ class TestOperatingPoint:
         assert n_hard >= 1
         for rep in reports:
             assert rep["n_hard_failures"] <= rep["n_failures"]
+
+
+class TestAsyncFlush:
+    def test_flush_window_aborts_happen(self):
+        """With omega2 = 0.9 the deep write spends 90% of its cost in
+        flight; the fixed failure schedules must interrupt at least one
+        flush across the seeds (deterministic given the seeds)."""
+        reports = run_scenario("ml_async_deep")
+        assert sum(r["flush_aborts"] for r in reports) >= 1
+        for rep in reports:
+            assert rep["final_step"] == STEPS    # aborts never lose the run
+
+    def test_no_aborts_without_overlap(self):
+        """omega = omega2 = 0: every write commits at the end of its
+        stall, so there is no in-flight window to interrupt."""
+        reports = run_scenario("ml_exp")
+        assert all(r["flush_aborts"] == 0 for r in reports)
+
+    def test_aborts_do_not_degrade(self):
+        """Failure-interrupt aborts are not store faults: they must not
+        trip the consecutive-failure degradation alarm."""
+        for rep in run_scenario("ml_async_deep"):
+            assert not rep["pfs_degraded"]
+            assert rep["alarms"] == []
 
 
 class TestPredictionBlock:
