@@ -1,14 +1,30 @@
 """Kernel microbenchmarks (interpret mode on CPU: correctness-path timing;
-the CSV also reports achieved compression ratios / arithmetic sanity)."""
+the CSV also reports achieved compression ratios / arithmetic sanity).
+
+Besides the stdout rows, every run writes the same rows to
+``benchmarks/results/bench_kernels.csv`` (ungated — CI uploads the
+results dir as an artifact, so per-machine kernel timings ride along
+without gating anything on interpret-mode absolute numbers).
+"""
 import jax
 import jax.numpy as jnp
 
-from ._util import emit, timed
+from ._util import RESULTS, emit, timed
+
+
+def _emit_row(rows, name, us, derived):
+    rows.append((name, us, derived))
+    emit(name, us, derived)
 
 
 def main():
-    from repro.kernels import ops
+    import numpy as np
 
+    from repro.kernels import ops
+    from repro.kernels.event_sweep import event_sweep
+    from repro.sim.engine import enable_x64
+
+    rows = []
     key = jax.random.key(0)
     B, S, H, Dh = 2, 512, 4, 128
     q = jax.random.normal(key, (B, S, H, Dh), jnp.bfloat16)
@@ -18,30 +34,55 @@ def main():
     out, us = timed(lambda: jax.block_until_ready(ops.flash_attention(
         q, k, v, mode="causal", force_interpret=True)))
     flops = 4 * B * H * S * S * Dh / 2
-    emit("flash_attention_512_interp", us, f"{flops/ (us/1e6) / 1e9:.2f} GFLOP/s-equiv")
+    _emit_row(rows, "flash_attention_512_interp", us,
+              f"{flops / (us / 1e6) / 1e9:.2f} GFLOP/s-equiv")
 
     a = jax.nn.sigmoid(jax.random.normal(key, (4, 1024, 256)))
     b = jax.random.normal(jax.random.key(3), (4, 1024, 256))
     h0 = jnp.zeros((4, 256))
     out, us = timed(lambda: jax.block_until_ready(
         ops.rglru_scan(a, b, h0, force_interpret=True)))
-    emit("rglru_scan_4x1024x256_interp", us,
-         f"{a.size * 4 / (us/1e6) / 1e9:.3f} GB/s-equiv")
+    _emit_row(rows, "rglru_scan_4x1024x256_interp", us,
+              f"{a.size * 4 / (us / 1e6) / 1e9:.3f} GB/s-equiv")
 
     qm = jax.random.normal(key, (2, 2, 512, 128)) * 128 ** -0.5
     km = jax.random.normal(jax.random.key(4), (2, 2, 512, 128)) * 128 ** -0.5
     vm = jax.random.normal(jax.random.key(5), (2, 2, 512, 128))
     li = jax.random.normal(jax.random.key(6), (2, 2, 512))
-    lf = jax.nn.log_sigmoid(jax.random.normal(jax.random.key(7), (2, 2, 512)) + 2)
+    lf = jax.nn.log_sigmoid(
+        jax.random.normal(jax.random.key(7), (2, 2, 512)) + 2)
     out, us = timed(lambda: jax.block_until_ready(
         ops.mlstm_scan(qm, km, vm, li, lf, chunk=128, force_interpret=True)))
-    emit("mlstm_scan_2x2x512_interp", us, "chunkwise=128")
+    _emit_row(rows, "mlstm_scan_2x2x512_interp", us, "chunkwise=128")
 
     x = jax.random.normal(key, (1024, 1024))
     (qq, ss, pad), us = timed(lambda: ops.quantize_array(
         x, force_interpret=True))
     ratio = (qq.nbytes + ss.nbytes) / x.nbytes
-    emit("quant_blockwise_1Melem_interp", us, f"payload_ratio={ratio:.3f}")
+    _emit_row(rows, "quant_blockwise_1Melem_interp", us,
+              f"payload_ratio={ratio:.3f}")
+
+    # The event-sweep kernel at the canonical engine tile (deterministic
+    # synthetic gaps — raw kernel timing, no engine dispatch on top; the
+    # gated engine-level comparison lives in bench_sweep).
+    Bq, N, F = 16, 128, 32
+    with enable_x64():
+        gaps = jnp.asarray(
+            np.linspace(5.0, 400.0, Bq * N * F).reshape(Bq, N, F))
+        col = jnp.asarray(np.full(Bq, 60.0))
+        args = (col, col * 0.1, col * 0.05, col * 0.01,
+                jnp.zeros_like(col), col * 25.0, gaps)
+        run = jax.jit(lambda *a: event_sweep(*a, n_steps=F + 1)["wall_time"])
+        jax.block_until_ready(run(*args))           # compile outside timing
+        out, us = timed(lambda: jax.block_until_ready(run(*args)))
+        _emit_row(rows, "event_sweep_16x128_interp", us,
+                  f"{gaps.nbytes / (us / 1e6) / 1e9:.3f} GB/s-equiv")
+
+    csv = RESULTS / "bench_kernels.csv"
+    with open(csv, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        for name, us, derived in rows:
+            f.write(f"{name},{us:.1f},{derived}\n")
 
 
 if __name__ == "__main__":

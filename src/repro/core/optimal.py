@@ -405,12 +405,13 @@ class MCSurrogate:
     def __init__(self, ckpt: CheckpointParams, power: PowerParams,
                  process: Optional[FailureProcess] = None,
                  T_base: Optional[float] = None, n_trials: int = 160,
-                 seed: int = 0, engine_kind: str = "event",
+                 seed: int = 0, engine_kind: Optional[str] = None,
                  dispatch=None):
         from ..sim import engine as _engine
         from ..sim.scenarios import ParamGrid
         self.ckpt, self.power = ckpt, power
         self.process = as_process(process)
+        engine_kind = _engine.resolve_engine_kind(engine_kind)
         self.engine_kind = engine_kind
         #: sim.dispatch.DispatchConfig routing every engine call (None =
         #: environment defaults); with several local devices the candidate
@@ -435,7 +436,7 @@ class MCSurrogate:
         cap = _engine.default_fail_capacity(probes, self._grid1,
                                             self.T_base,
                                             process=self.process)
-        self._n_steps = (None if engine_kind == "event" else
+        self._n_steps = (None if engine_kind in _engine._EVENT_LIKE else
                          _engine.default_step_budget(
                              probes, self._grid1, self.T_base,
                              process=self.process))
@@ -501,7 +502,7 @@ def t_opt_time_mc(ckpt: CheckpointParams,
                   process: Optional[FailureProcess] = None,
                   power: Optional[PowerParams] = None,
                   T_base: Optional[float] = None, n_trials: int = 160,
-                  seed: int = 0, engine_kind: str = "event",
+                  seed: int = 0, engine_kind: Optional[str] = None,
                   dispatch=None) -> float:
     """Time-optimal period under an arbitrary failure process (MC surrogate).
 
@@ -517,7 +518,7 @@ def t_opt_time_mc(ckpt: CheckpointParams,
 def t_opt_energy_mc(ckpt: CheckpointParams, power: PowerParams,
                     process: Optional[FailureProcess] = None,
                     T_base: Optional[float] = None, n_trials: int = 160,
-                    seed: int = 0, engine_kind: str = "event",
+                    seed: int = 0, engine_kind: Optional[str] = None,
                     dispatch=None) -> float:
     """Energy-optimal period under an arbitrary failure process."""
     return MCSurrogate(ckpt, power, process, T_base, n_trials, seed,
@@ -529,7 +530,7 @@ def mc_evaluate_periods(Ts: Sequence[float], ckpt: CheckpointParams,
                         power: PowerParams,
                         process: Optional[FailureProcess] = None,
                         T_base: Optional[float] = None, n_trials: int = 160,
-                        seed: int = 0, engine_kind: str = "event",
+                        seed: int = 0, engine_kind: Optional[str] = None,
                         dispatch=None) -> dict:
     """Mean wall time / energy at each candidate period under ``process``
     (one CRN schedule set shared by all candidates — fair comparisons)."""

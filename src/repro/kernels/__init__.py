@@ -5,8 +5,13 @@
   mlstm_scan      — chunkwise-parallel mLSTM matrix memory (xLSTM)
   quant_blockwise — int8 blockwise (de)quantization for checkpoint/grad
                     compression (shrinks the paper's C parameter)
+  event_sweep     — the sim engine's event-level MC loop as a blocked
+                    (points x trials) kernel with all-done early exit
+                    (``engine_kind="pallas"``; oracle = the lax.scan
+                    engine itself, pinned bit-for-bit in f64)
 
 Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper in
-``ops.py``.
+``ops.py``; ``event_sweep`` lives in its own module and is reached through
+``sim.engine.simulate_trajectories(engine_kind="pallas")``.
 """
 from . import ops, ref

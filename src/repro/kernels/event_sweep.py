@@ -1,0 +1,249 @@
+"""Pallas kernel for the event-level MC sweep (``engine_kind="pallas"``).
+
+The sim engine's fast path (``sim/engine.py::_run_one_event``) is a
+``lax.scan`` with one iteration per FAILURE, double-vmapped over
+(grid points x trials).  This kernel is the accelerator-native port:
+
+* grid = ``(points/bp, trials/bt)`` blocks; each block owns its
+  ``(bp, bt)`` tile of trajectory state in registers/VMEM and streams the
+  failure-gap schedule ``(bp, bt, F)`` through VMEM, one gap slab per
+  loop iteration via a dynamic slice on the capacity axis.
+* the closed-form between-failure arithmetic is kept TERM-FOR-TERM from
+  ``_run_one_event`` (same expressions, same parenthesization, same
+  select ordering), so in f64 the kernel is bit-identical to the scan —
+  the dyadic-schedule parity tests assert exactly that.
+* the gap index needs no per-lane gather: an ACTIVE (not-done) lane at
+  loop iteration ``i`` has seen exactly ``i`` failures (any earlier
+  completion freezes the lane through the done-select), so
+  ``n_fail == i`` and one uniform slab load per iteration serves every
+  active lane; done lanes read a stale slab and discard it in the same
+  select the scan kernel uses.
+* unlike the fixed-length scan, the loop is a ``while_loop`` that exits
+  as soon as every lane in the block is done.  Post-completion
+  iterations are identities under the done-select, so the exit is
+  bit-exact — it only skips the power-of-two padding tail the scan
+  kernel burns through, which is where the speedup on CPU interpret
+  mode comes from (BENCH_sweep.json ``pallas_event_engine``).
+
+Precision follows the engine's :class:`~repro.sim.precision
+.PrecisionPolicy`: under ``f64`` the state updates are the scan
+kernel's verbatim; under a compensated policy every running-sum state
+(wall, committed, work, io, down) becomes a Neumaier pair ``(s, c)``
+(``sim/precision.py::comp_add``), branch contributions are formed as
+increments and selected BEFORE accumulation, and the remaining-work
+read uses the corrected ``committed + c`` — the parity gates in
+tests/test_pallas_engine.py bound the result against the f64 oracle.
+
+On CPU the wrapper falls back to ``pallas_call(..., interpret=True)``
+(traced to plain XLA ops, jit-compatible) so tier-1 parity runs
+everywhere; on TPU it lowers to Mosaic.  The full capacity axis rides
+in one block — at the default tile ``8 x 128`` lanes an f32 schedule
+budget of F = 4096 gaps is ~16 MiB of VMEM; shrink ``block_trials``
+for fatter schedules.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..sim.precision import comp_add
+
+#: work-completion slack — MUST match sim/engine.py::_EPS term-for-term.
+_EPS = 1e-12
+
+
+def _interpret(force: bool | None) -> bool:
+    if force is not None:
+        return force
+    return jax.default_backend() != "tpu"
+
+
+def _event_kernel(T_ref, C_ref, R_ref, D_ref, O_ref, TB_ref, gaps_ref,
+                  wall_ref, work_ref, io_ref, down_ref, nfail_ref,
+                  nckpt_ref, trunc_ref, ginf_ref, *, n_steps: int,
+                  n_gaps: int, compensated: bool):
+    f = gaps_ref.dtype
+    zero = jnp.zeros((), f)
+    one = jnp.ones((), f)
+    bp, bt = wall_ref.shape
+
+    T = T_ref[...]                       # (bp, 1) — broadcasts over trials
+    C = C_ref[...]
+    R = R_ref[...]
+    D = D_ref[...]
+    omega = O_ref[...]
+    T_base = TB_ref[...]
+    Tc = T - C                           # compute-segment length
+    w = T - (one - omega) * C            # work committed per full period
+    omega_safe = jnp.where(omega > zero, omega, one)
+
+    fz = jnp.zeros((bp, bt), f)
+    iz = jnp.zeros((bp, bt), jnp.int32)
+    bz = jnp.zeros((bp, bt), jnp.bool_)
+    # state = (i, wall, committed, work_exec, io_time, down_time,
+    #          n_fail, n_ckpt, used_inf, done [, 5 Neumaier c-terms])
+    state = (jnp.zeros((), jnp.int32), fz, fz, fz, fz, fz, iz, iz, bz, bz)
+    if compensated:
+        state = state + (fz, fz, fz, fz, fz)
+
+    def cond(state):
+        return (state[0] < n_steps) & jnp.logical_not(jnp.all(state[9]))
+
+    def body(state):
+        (i, wall, committed, work_exec, io_time, down_time,
+         n_fail, n_ckpt, used_inf, done) = state[:10]
+        if compensated:
+            c_wall, c_comm, c_work, c_io, c_down = state[10:]
+
+        # Uniform slab read: active lanes have n_fail == i (see module
+        # docstring), so one dynamic slice on the capacity axis replaces
+        # the scan kernel's per-lane gather; past-the-schedule reads are
+        # inf == "no more failures", flagging exhaustion.
+        in_range = i < n_gaps
+        gi = jnp.minimum(i, n_gaps - 1)
+        slab = pl.load(gaps_ref, (slice(None), slice(None),
+                                  pl.dslice(gi, 1)))[:, :, 0]
+        g = jnp.where(in_range, slab, jnp.asarray(jnp.inf, f))
+
+        # ---- closed-form completion time from this segment start ----
+        # (verbatim from sim/engine.py::_run_one_event)
+        committed_true = committed + c_comm if compensated else committed
+        rem = T_base - committed_true
+        j = jnp.maximum(jnp.floor((rem - _EPS) / w), zero)
+        r = rem - j * w
+        rr = r - Tc
+        t_in = jnp.where(rr > zero, Tc + rr / omega_safe, r)
+        t_fin = j * T + t_in
+        complete = t_fin < g
+
+        # ---- branch B geometry: failure at s = g after segment start ----
+        s = jnp.where(jnp.isfinite(g), g, zero)
+        k = jnp.floor(s / T)
+        k = jnp.where((k > zero) & (k * T >= s), k - one, k)
+        u = s - k * T
+        uc = u - Tc
+
+        def sel(a_val, b_val):
+            return jnp.where(complete, a_val, b_val)
+
+        keep = lambda old, upd: jnp.where(done, old, upd)
+
+        if not compensated:
+            wall_a = wall + t_fin
+            work_a = work_exec + rem
+            io_a = io_time + j * C + jnp.maximum(rr, zero) / omega_safe
+            work_b = work_exec + k * w + jnp.where(uc > zero,
+                                                   Tc + omega * uc, u)
+            io_b = io_time + k * C + jnp.maximum(uc, zero) + R
+            wall_b = (wall + s) + D + R
+            committed_b = jnp.where(k >= one,
+                                    committed + (k - one) * w + Tc,
+                                    committed)
+            new = (sel(wall_a, wall_b),
+                   sel(committed, committed_b),
+                   sel(work_a, work_b),
+                   sel(io_a, io_b),
+                   sel(down_time, down_time + D),
+                   sel(n_fail, n_fail + 1).astype(jnp.int32),
+                   (n_ckpt + sel(j, k).astype(jnp.int32)).astype(jnp.int32),
+                   jnp.logical_or(used_inf, ~in_range),
+                   jnp.logical_or(done, complete))
+            return (i + 1,) + tuple(
+                keep(o, u_) for o, u_ in zip(state[1:10], new))
+
+        # Compensated policy: form each branch's CONTRIBUTION, select it,
+        # then fold it into the Neumaier pair; the done-select freezes
+        # both pair members, preserving the s + c invariant lane-by-lane.
+        inc_wall = sel(t_fin, s + D + R)
+        inc_comm = sel(zero, jnp.where(k >= one, (k - one) * w + Tc, zero))
+        inc_work = sel(rem, k * w + jnp.where(uc > zero,
+                                              Tc + omega * uc, u))
+        inc_io = sel(j * C + jnp.maximum(rr, zero) / omega_safe,
+                     k * C + jnp.maximum(uc, zero) + R)
+        inc_down = sel(zero, D)
+        pairs = [comp_add(s_, c_, x_) for s_, c_, x_ in (
+            (wall, c_wall, inc_wall), (committed, c_comm, inc_comm),
+            (work_exec, c_work, inc_work), (io_time, c_io, inc_io),
+            (down_time, c_down, inc_down))]
+        new = tuple(p[0] for p in pairs) + (
+            sel(n_fail, n_fail + 1).astype(jnp.int32),
+            (n_ckpt + sel(j, k).astype(jnp.int32)).astype(jnp.int32),
+            jnp.logical_or(used_inf, ~in_range),
+            jnp.logical_or(done, complete))
+        new_c = tuple(p[1] for p in pairs)
+        return ((i + 1,)
+                + tuple(keep(o, u_) for o, u_ in zip(state[1:10], new))
+                + tuple(keep(o, u_) for o, u_ in zip(state[10:], new_c)))
+
+    state = lax.while_loop(cond, body, state)
+    (_, wall, committed, work_exec, io_time, down_time,
+     n_fail, n_ckpt, used_inf, done) = state[:10]
+    if compensated:
+        c_wall, c_comm, c_work, c_io, c_down = state[10:]
+        wall = wall + c_wall
+        work_exec = work_exec + c_work
+        io_time = io_time + c_io
+        down_time = down_time + c_down
+    wall_ref[...] = wall
+    work_ref[...] = work_exec
+    io_ref[...] = io_time
+    down_ref[...] = down_time
+    nfail_ref[...] = n_fail
+    nckpt_ref[...] = n_ckpt
+    trunc_ref[...] = ~done
+    ginf_ref[...] = used_inf
+
+
+def event_sweep(T, C, R, D, omega, T_base, gaps, *, n_steps: int,
+                dtype="float64", compensated: bool = False,
+                block_points: int = 8, block_trials: int = 128,
+                force_interpret: bool | None = None) -> dict:
+    """Run the event kernel over a ``(B,) x (B, N, F)`` workload.
+
+    ``T``/``C``/``R``/``D``/``omega``/``T_base``: per-grid-point scalars,
+    shape ``(B,)``; ``gaps``: failure schedules ``(B, N, F)``.  Returns
+    the engine's per-trajectory output dict, shape ``(B, N)`` per key
+    (floats delivered in f64 like the scan kernels, whatever the compute
+    ``dtype``; cast back happens under the caller's x64 context).
+
+    Inputs are padded to block multiples by edge replication — replica
+    lanes complete exactly like the originals, so the all-done early
+    exit still fires; their outputs are sliced off.
+    """
+    dt = jnp.dtype(dtype)
+    gaps = jnp.asarray(gaps, dt)
+    B, N, F = gaps.shape
+    bp = min(int(block_points), B)  # reprolint: disable=RPL004 (keyword-only static Python int by contract — block shapes must be concrete to build the pallas grid)
+    bt = min(int(block_trials), N)  # reprolint: disable=RPL004 (keyword-only static Python int by contract — block shapes must be concrete to build the pallas grid)
+    Bp = -(-B // bp) * bp
+    Np = -(-N // bt) * bt
+    col = lambda x: jnp.pad(jnp.asarray(x, dt).reshape(B, 1),
+                            ((0, Bp - B), (0, 0)), mode="edge")
+    gaps = jnp.pad(gaps, ((0, Bp - B), (0, Np - N), (0, 0)), mode="edge")
+
+    kernel = functools.partial(_event_kernel, n_steps=int(n_steps),  # reprolint: disable=RPL004 (static loop bound — the while_loop's worst-case trip count is baked into the kernel)
+                               n_gaps=F, compensated=bool(compensated))
+    pspec = pl.BlockSpec((bp, 1), lambda i, j: (i, 0))
+    ospec = pl.BlockSpec((bp, bt), lambda i, j: (i, j))
+    oshape = lambda d: jax.ShapeDtypeStruct((Bp, Np), d)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(Bp // bp, Np // bt),
+        in_specs=[pspec] * 6 + [pl.BlockSpec((bp, bt, F),
+                                             lambda i, j: (i, j, 0))],
+        out_specs=[ospec] * 8,
+        out_shape=[oshape(dt)] * 4 + [oshape(jnp.int32)] * 2
+                  + [oshape(jnp.bool_)] * 2,
+        interpret=_interpret(force_interpret),
+    )(col(T), col(C), col(R), col(D), col(omega), col(T_base), gaps)
+    wall, work, io, down, n_fail, n_ckpt, trunc, ginf = (
+        o[:B, :N] for o in outs)
+    as_f64 = lambda x: jnp.asarray(x, jnp.float64)
+    return {"wall_time": as_f64(wall), "work_executed": as_f64(work),
+            "io_time": as_f64(io), "down_time": as_f64(down),
+            "n_failures": n_fail, "n_checkpoints": n_ckpt,
+            "truncated": trunc, "gaps_exhausted": ginf}

@@ -354,3 +354,18 @@ def analyze(txt: str) -> CostVec:
         return cost
 
     return walk(entry)
+
+
+def analyze_compiled(fn, *args, **kwargs) -> CostVec:
+    """Walk the optimized HLO of ``fn`` compiled for ``*args``.
+
+    Convenience wrapper for live programs (the roofline bench points it at
+    the sweep/engine grid functions): jit -> lower -> compile -> as_text,
+    then :func:`analyze` on the resulting post-optimization module.  ``fn``
+    may already be jitted (``jax.jit`` of a jitted fn is a no-op wrapper).
+    The jax import stays local — everything else in this module is pure
+    stdlib text analysis and must stay importable without jax.
+    """
+    import jax
+    compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+    return analyze(compiled.as_text())

@@ -231,6 +231,12 @@ def rule_rpl002(ctx: RepoContext) -> List[Diagnostic]:
 
 RPL003_SUBSYSTEMS = ("src/repro/sim/", "src/repro/core/", "src/repro/serve/")
 
+#: the ONE home for reduced-precision dtypes inside the f64 subsystems:
+#: the PrecisionPolicy module.  Everything else must route through a
+#: policy (``sim.dispatch.resolve_precision``), so the float32 checks are
+#: waived here — the explicit-dtype constructor check still applies.
+RPL003_PRECISION_MODULES = ("src/repro/sim/precision.py",)
+
 #: constructors whose dtype must be explicit in the f64 subsystems, with
 #: the positional index a dtype may legally occupy.
 _DTYPE_CTORS = {"zeros": 1, "ones": 1, "arange": 3, "asarray": 1}
@@ -247,6 +253,7 @@ def rule_rpl003(ctx: RepoContext) -> List[Diagnostic]:
     for info in ctx.modules:
         if not info.rel.startswith(RPL003_SUBSYSTEMS):
             continue
+        policy_module = info.rel in RPL003_PRECISION_MODULES
         for node in ast.walk(info.tree):
             if isinstance(node, ast.Call):
                 r = resolve(info, node.func)
@@ -262,6 +269,8 @@ def rule_rpl003(ctx: RepoContext) -> List[Diagnostic]:
                             f"jnp.{ctor}() without an explicit dtype in an "
                             "f64 subsystem — pass dtype=jnp.float64 (or the "
                             "intended integer/bool dtype)"))
+            if policy_module:
+                continue
             if (isinstance(node, ast.Attribute) and node.attr == "float32"
                     and resolve(info, node) is not None
                     and resolve(info, node).split(".")[0] in (
@@ -269,11 +278,14 @@ def rule_rpl003(ctx: RepoContext) -> List[Diagnostic]:
                 out.append(_diag(
                     info, node, "RPL003",
                     "float32 dtype in an f64 subsystem — the model/solver "
-                    "stack is f64-everywhere (docs/contracts.md)"))
+                    "stack is f64-everywhere (docs/contracts.md); reduced "
+                    "precision must route through a PrecisionPolicy "
+                    "(repro.sim.precision)"))
             if isinstance(node, ast.Constant) and node.value == "float32":
                 out.append(_diag(
                     info, node, "RPL003",
-                    "'float32' dtype string in an f64 subsystem"))
+                    "'float32' dtype string in an f64 subsystem — route "
+                    "through a PrecisionPolicy (repro.sim.precision)"))
     return out
 
 

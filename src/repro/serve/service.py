@@ -77,7 +77,11 @@ class AdvisorService:
     ``quantization`` sets the cache lattice and tolerance
     (:class:`~repro.serve.fingerprint.Quantization`); ``dispatch`` is the
     execution config threaded to the sweep layer (None = environment
-    defaults); ``cache_name`` registers the fingerprint cache with
+    defaults); ``precision`` is the sweep precision policy (None resolves
+    via the dispatch config / ``$REPRO_PRECISION`` / backend default, so
+    CPU services stay on the bit-exact f64 oracle) — a non-exact policy's
+    ``objective_tol`` is folded into every certified bound; ``cache_name``
+    registers the fingerprint cache with
     ``sim.cache_stats`` (one registry slot per name — the last service
     created under a name owns the slot).
 
@@ -88,12 +92,16 @@ class AdvisorService:
 
     def __init__(self, quantization: Optional[Quantization] = None,
                  cache_size: int = FINGERPRINT_CACHE_SIZE,
-                 dispatch=None,
+                 dispatch=None, precision=None,
                  cache_name: Optional[str] = "serve.fingerprints"):
         self.quant = quantization if quantization is not None \
             else Quantization()
         self.cache = _dispatch.LRUCache(cache_size, name=cache_name)
         self.dispatch = dispatch
+        # Resolved once at construction so every solve this service issues
+        # runs under ONE policy (entries cache objective values; mixing
+        # policies across windows would mix tolerances in the cache).
+        self.precision = _dispatch.resolve_precision(dispatch, precision)
         self._lock = threading.Lock()
         self._counters = {
             "requests": 0,          # requests answered
@@ -121,6 +129,7 @@ class AdvisorService:
                                         size=len(self.cache),
                                         maxsize=self.cache.maxsize)
         out["caches"] = _dispatch.cache_stats()
+        out["precision_policy"] = self.precision.name
         return out
 
     # -- pipeline ------------------------------------------------------------
@@ -193,20 +202,27 @@ class AdvisorService:
 
         if pg is not None:
             res = _sweep.evaluate_grid(pg, T_base=1.0,
-                                       dispatch=self.dispatch)
+                                       dispatch=self.dispatch,
+                                       precision=self.precision)
             self._counters["dispatched_solves"] += 1
             if exact:
                 cert = np.zeros(pg.size)
             else:
                 cert = certified_bound_single(
                     pg.fields(), res.T_time, res.T_energy, self.quant)
+                # A reduced-precision solve can misplace the optimum by
+                # up to objective_tol (relative); fold that into the
+                # certified bound so certification TIGHTENS under f32
+                # instead of silently eroding.
+                cert = cert + self.precision.objective_tol
             for fp, lane in plan.single_lanes.items():
                 out[fp] = self._entry_single(res, lane, float(cert[lane]),
                                              exact)
         if mg is not None:
             res = _sweep.evaluate_multilevel_grid(
                 mg, m_values=m_values, T_base=1.0,
-                dispatch=self.dispatch, m_max=m_max)
+                dispatch=self.dispatch, m_max=m_max,
+                precision=self.precision)
             self._counters["dispatched_solves"] += 1
             if exact:
                 cert = np.zeros(mg.size)
@@ -214,6 +230,7 @@ class AdvisorService:
                 cert = certified_bound_multilevel(
                     mg.fields(), res.T_time, res.m_time, res.T_energy,
                     res.m_energy, self.quant)
+                cert = cert + self.precision.objective_tol
             for fp, lane in plan.ml_lanes.items():
                 out[fp] = self._entry_ml(res, lane, float(cert[lane]),
                                          exact)

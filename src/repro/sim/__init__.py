@@ -12,6 +12,9 @@ Layers:
               mesh), streaming chunker bounded by a device-memory budget,
               and bounded compiled-runner caches.  All knobs are pure
               performance knobs — a fixed seed's results never change.
+  precision — per-backend :class:`PrecisionPolicy` (f64 oracle on CPU,
+              compensated f32 on accelerators) with documented parity
+              tolerances; resolved per call via ``resolve_precision``.
   cache     — persistent XLA compilation-cache wiring (cold-start compile
               paid once per machine, not once per process); auto-enabled
               when ``$REPRO_COMPILE_CACHE`` is set.
@@ -25,7 +28,9 @@ bit-for-bit.
 from .cache import (enable_compile_cache, maybe_enable_from_env,
                     active_cache_dir)
 from .dispatch import (DispatchConfig, default_config, sweep_mesh,
-                       cache_stats, reset_cache_stats)
+                       cache_stats, reset_cache_stats,
+                       BackendInfo, backend_info, resolve_precision)
+from .precision import PrecisionPolicy, F64, COMPENSATED_F32
 from .scenarios import (ParamGrid, Scenario, MultilevelParamGrid,
                         MultilevelScenario, get_scenario, list_scenarios,
                         register_scenario, mu_rho_grid, nodes_grid,

@@ -31,14 +31,34 @@ independent capacity (see ``engine``), so chunk size, shard count, and
 memory budget never change a fixed seed's results — chunked == unchunked
 and sharded == single-device bit-for-bit (``tests/test_dispatch.py``).
 
+The mesh spans REAL devices: :func:`backend_info` inspects
+``jax.devices()`` for the selected platform (``backend``/
+``$REPRO_SWEEP_BACKEND``; default = the process default backend) and the
+sweep axis shards over those physical devices — GPUs/TPUs when present.
+The host-virtual-device path (``XLA_FLAGS=--xla_force_host_platform_
+device_count=N``) is still just a CPU backend whose devices happen to be
+virtual, so the CI recipe keeps working unchanged; ``backend_info()``
+flags it as ``virtual``.
+
+Precision is also a per-backend decision: :func:`resolve_precision`
+resolves the :class:`~repro.sim.precision.PrecisionPolicy` a dispatch
+runs under (explicit argument > ``DispatchConfig.precision`` >
+``$REPRO_PRECISION`` > the backend default — f64 on CPU, compensated
+f32 on accelerators; see ``sim/precision.py``).
+
 Configuration resolves from :class:`DispatchConfig` (explicit argument)
 or environment variables::
 
     REPRO_SWEEP_DEVICES    max devices to shard over (1 disables sharding)
     REPRO_SWEEP_MEMORY_MB  device-memory budget per dispatch (default 2048)
     REPRO_SWEEP_CHUNK      explicit grid-axis chunk size (overrides budget)
+    REPRO_SWEEP_BACKEND    jax platform for the sweep mesh (cpu/gpu/tpu;
+                           default = process default backend)
+    REPRO_PRECISION        precision policy name (f64 / compensated_f32;
+                           default = the backend's policy)
 
-See docs/simulation.md "Scaling out" for the operational recipe.
+See docs/simulation.md "Scaling out" and "Accelerator backends and
+precision" for the operational recipes.
 """
 from __future__ import annotations
 
@@ -64,6 +84,11 @@ try:  # jax >= 0.5 promotes shard_map out of experimental
     from jax import shard_map  # type: ignore[attr-defined]
 except ImportError:
     from jax.experimental.shard_map import shard_map
+
+from . import precision as _precision
+# Re-exported so callers configure precision where they configure
+# dispatch (the policy is a per-backend execution knob like the mesh).
+from .precision import COMPENSATED_F32, F64, PrecisionPolicy  # noqa: F401
 
 #: default device-memory budget per dispatch (bytes).
 DEFAULT_MEMORY_BUDGET = 2 << 30
@@ -195,13 +220,26 @@ class DispatchConfig:
     ``memory_budget_bytes`` bounds the per-dispatch device working set
     (None = ``$REPRO_SWEEP_MEMORY_MB`` or 2 GiB); ``chunk`` forces an
     explicit grid-axis chunk size (rounded up to a device multiple);
-    ``shard=False`` disables the mesh entirely.
+    ``shard=False`` disables the mesh entirely; ``backend`` pins the jax
+    platform the sweep mesh spans (None = ``$REPRO_SWEEP_BACKEND`` or
+    the process default backend); ``precision`` pins the
+    :class:`~repro.sim.precision.PrecisionPolicy` (a policy, a policy
+    name, or None = ``$REPRO_PRECISION`` or the backend default —
+    see :func:`resolve_precision`).
+
+    On a CPU host every field is a pure performance knob (the CPU
+    default policy is the f64 oracle, so ``backend="cpu"`` /
+    ``precision="f64"`` are bit-exact no-ops — tested); a reduced-
+    precision policy on an accelerator changes results within the
+    policy's documented tolerance.
     """
 
     devices: Optional[int] = None
     memory_budget_bytes: Optional[int] = None
     chunk: Optional[int] = None
     shard: bool = True
+    backend: Optional[str] = None
+    precision: Optional[object] = None
 
     def budget(self) -> int:
         if self.memory_budget_bytes is not None:
@@ -229,12 +267,91 @@ def _env_int(name: str):
 
 def default_config() -> DispatchConfig:
     """The environment-driven config (see module docstring)."""
+    backend = os.environ.get("REPRO_SWEEP_BACKEND", "").strip().lower()
     return DispatchConfig(devices=_env_int("REPRO_SWEEP_DEVICES"),
-                          chunk=_env_int("REPRO_SWEEP_CHUNK"))
+                          chunk=_env_int("REPRO_SWEEP_CHUNK"),
+                          backend=backend or None)
 
 
 def resolve(config: Optional[DispatchConfig]) -> DispatchConfig:
     return config if config is not None else default_config()
+
+
+def _backend_devices(backend: Optional[str] = None) -> list:
+    """The jax devices of ``backend`` (a platform name); None = the
+    process default platform.  An unavailable platform degrades to a
+    warning + default devices — backend selection is an opt-in knob and
+    must not turn every sweep into a hard crash on a CPU-only box."""
+    if not backend:
+        return jax.devices()
+    try:
+        return jax.devices(backend)
+    except RuntimeError:
+        import warnings
+        warnings.warn(f"backend {backend!r} has no devices here; using "
+                      f"the default platform ({jax.default_backend()})",
+                      RuntimeWarning, stacklevel=3)
+        return jax.devices()
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendInfo:
+    """What the sweep mesh actually spans (:func:`backend_info`).
+
+    ``platform`` is the jax platform name (cpu/gpu/tpu), ``device_kind``
+    the hardware self-description of device 0 (e.g. "NVIDIA A100-SXM4",
+    "TPU v4", "cpu"), ``n_devices`` the devices available on that
+    platform, and ``virtual`` flags the host-virtual-device CI recipe
+    (multiple XLA "devices" carved out of one CPU host — real sharding
+    semantics, no real parallel silicon).
+    """
+
+    platform: str
+    device_kind: str
+    n_devices: int
+    virtual: bool
+
+
+def backend_info(backend: Optional[str] = None) -> BackendInfo:
+    """Detect the mesh backend: ``backend`` (a platform name), else
+    ``$REPRO_SWEEP_BACKEND``, else the process default platform."""
+    if backend is None:
+        backend = default_config().backend
+    devs = _backend_devices(backend)
+    platform = devs[0].platform
+    return BackendInfo(
+        platform=platform,
+        device_kind=str(getattr(devs[0], "device_kind", platform)),
+        n_devices=len(devs),
+        virtual=platform == "cpu" and len(devs) > 1)
+
+
+def resolve_precision(config: Optional[DispatchConfig] = None,
+                      precision=None) -> PrecisionPolicy:
+    """The :class:`PrecisionPolicy` a dispatch runs under.
+
+    Resolution order: explicit ``precision`` argument (a policy or a
+    policy name) > ``config.precision`` > ``$REPRO_PRECISION`` > the
+    default policy of the mesh backend (f64 on CPU, compensated f32 on
+    accelerators).  A malformed env value degrades to a warning + the
+    backend default, like every other env knob here.
+    """
+    if precision is not None:
+        return _precision.resolve(precision)
+    cfg = resolve(config)
+    if cfg.precision is not None:
+        return _precision.resolve(cfg.precision)
+    env = os.environ.get("REPRO_PRECISION", "").strip()
+    if env:
+        try:
+            return _precision.resolve(env)
+        except ValueError:
+            import warnings
+            warnings.warn(
+                f"REPRO_PRECISION={env!r} is not a known policy "
+                f"({sorted(_precision.POLICIES)}); using the backend "
+                f"default", RuntimeWarning, stacklevel=3)
+    return _precision.default_policy(backend_info(cfg.backend).platform)
 
 
 def effective_devices(config: Optional[DispatchConfig] = None) -> int:
@@ -242,16 +359,18 @@ def effective_devices(config: Optional[DispatchConfig] = None) -> int:
     cfg = resolve(config)
     if not cfg.shard:
         return 1
-    n = len(jax.devices())
+    n = len(_backend_devices(cfg.backend))
     if cfg.devices is not None:
         n = min(n, max(1, int(cfg.devices)))
     return max(1, n)
 
 
 @functools.lru_cache(maxsize=32)
-def sweep_mesh(n_devices: int) -> Mesh:
-    """The 1-D ``("sweep",)`` mesh over the first ``n_devices`` devices."""
-    return Mesh(np.array(jax.devices()[:n_devices]), (SWEEP_AXIS,))
+def sweep_mesh(n_devices: int, backend: Optional[str] = None) -> Mesh:
+    """The 1-D ``("sweep",)`` mesh over the first ``n_devices`` devices
+    of ``backend`` (None = the process default platform)."""
+    return Mesh(np.array(_backend_devices(backend)[:n_devices]),
+                (SWEEP_AXIS,))
 
 
 def _pow2ceil(n: int) -> int:
@@ -344,16 +463,16 @@ _RUNNERS = LRUCache(RUNNER_CACHE_SIZE, name="dispatch.runners")
 
 
 def _runner_for(key, build, ndev: int, in_axes: Sequence[Optional[int]],
-                out_axes):
+                out_axes, backend: Optional[str] = None):
     """The compiled runner for ``key`` on ``ndev`` devices: a plain jit of
     ``build`` (single device) or a shard_map over the sweep mesh.
 
     ``key`` is the caller's semantic identity of ``build`` — it must
     capture everything baked into the closure (kernel, scan length,
     process, capacities).  jit handles per-shape compilation internally,
-    so the cache is per (key, ndev), not per chunk shape.
+    so the cache is per (key, ndev, backend), not per chunk shape.
     """
-    ck = (key, ndev, tuple(in_axes), _freeze(out_axes))
+    ck = (key, ndev, backend, tuple(in_axes), _freeze(out_axes))
     fn = _RUNNERS.get(ck)
     if fn is not None:
         return fn
@@ -363,7 +482,7 @@ def _runner_for(key, build, ndev: int, in_axes: Sequence[Optional[int]],
         in_specs = tuple(
             P() if ax is None else P(*([None] * int(ax) + [SWEEP_AXIS]))
             for ax in in_axes)
-        fn = jax.jit(shard_map(build, mesh=sweep_mesh(ndev),
+        fn = jax.jit(shard_map(build, mesh=sweep_mesh(ndev, backend),
                                in_specs=in_specs,
                                out_specs=_out_spec_tree(out_axes),
                                check_rep=False))
@@ -389,7 +508,8 @@ def run(key, build, args, in_axes: Sequence[Optional[int]], out_axes,
     cfg = resolve(config)
     ndev = effective_devices(cfg)
     plan = chunk_plan(size, ndev, per_point_bytes, cfg, quantum=quantum)
-    runner = _runner_for(key, build, ndev, in_axes, out_axes)
+    runner = _runner_for(key, build, ndev, in_axes, out_axes,
+                         backend=cfg.backend)
 
     with enable_x64():
         # Broadcast args: convert once (device arrays stay put — a parked

@@ -94,6 +94,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Optional
 
 import numpy as np
@@ -109,6 +110,7 @@ except ImportError:
 
 from ..core.failures import as_process
 from . import dispatch as _dispatch
+from . import precision as _precision
 from .scenarios import MultilevelParamGrid, ParamGrid
 
 COMPUTE, CHECKPOINT = 0, 1
@@ -383,10 +385,62 @@ def _run_one_event(T, C, R, D, omega, T_base, gaps, n_steps):
 #: kernel registry: engine_kind -> per-trajectory scan.
 _KERNELS = {"step": _run_one, "event": _run_one_event}
 
+#: kinds that implement the EVENT-level trajectory semantics (one
+#: iteration per failure) and share the event kernel's budget algebra.
+#: ``"pallas"`` is the accelerator-native port of the event kernel
+#: (kernels/event_sweep.py): bit-identical to ``"event"`` under the f64
+#: policy, within the policy's documented tolerance otherwise.
+_EVENT_LIKE = ("event", "pallas")
 
-def _grid_fn(n_steps: int, kind: str):
-    """The unjitted (grid x trials) double-vmap of one kernel — shared by
-    the plain and the candidate-axis runners."""
+#: every selectable engine kind.
+_ENGINE_KINDS = ("event", "pallas", "step")
+
+
+def resolve_engine_kind(engine_kind: Optional[str] = None) -> str:
+    """Resolve an ``engine_kind`` argument: None defers to
+    ``$REPRO_ENGINE_KIND`` (the CI pallas-interpret leg forces the
+    Pallas engine this way) and then to the ``"event"`` default;
+    explicit kinds pass through.  Raises on unknown kinds."""
+    if engine_kind is None:
+        engine_kind = os.environ.get("REPRO_ENGINE_KIND", "").strip() \
+            or "event"
+    if engine_kind not in _ENGINE_KINDS:
+        raise ValueError(f"unknown engine_kind {engine_kind!r}; "
+                         f"one of {sorted(_ENGINE_KINDS)}")
+    return engine_kind
+
+
+def _engine_policy(engine_kind: str, cfg, precision):
+    """The PrecisionPolicy an engine dispatch runs under — only the
+    Pallas kernel is policy-aware (it is the accelerator path); the scan
+    kernels ARE the f64 oracle and ignore the policy by design."""
+    if engine_kind != "pallas":
+        return None
+    return _dispatch.resolve_precision(cfg, precision)
+
+
+def _kind_token(kind: str, policy) -> object:
+    """Runner-cache key component for (kind, policy): plain kinds keep
+    their historical string token (compile-cache continuity); the
+    policy-aware pallas kind never shares a compiled runner across
+    policies."""
+    return kind if policy is None else (kind, policy.name)
+
+
+def _grid_fn(n_steps: int, kind: str, policy=None):
+    """The unjitted (grid x trials) runner of one kernel — shared by the
+    plain and the candidate-axis runners.  Scan kinds double-vmap the
+    per-trajectory kernel; the pallas kind hands the whole chunk to the
+    blocked Pallas kernel (interpret mode off-TPU)."""
+    if kind == "pallas":
+        from ..kernels import event_sweep as _es
+        pol = policy if policy is not None else _precision.F64
+
+        def run_grid(T, C, R, D, omega, T_base, gaps):
+            return _es.event_sweep(T, C, R, D, omega, T_base, gaps,
+                                   n_steps=n_steps, dtype=pol.dtype,
+                                   compensated=pol.compensated)
+        return run_grid
     kernel = _KERNELS[kind]
 
     def run_grid(T, C, R, D, omega, T_base, gaps):
@@ -398,11 +452,20 @@ def _grid_fn(n_steps: int, kind: str):
     return run_grid
 
 
-def _cand_fn(n_steps: int, kind: str):
-    """Candidate-axis runner: vmap the grid runner over a leading axis of
-    periods with ``in_axes=None`` on everything else — the gap schedules
-    are SHARED across candidates, never tiled or re-transferred."""
-    run_grid = _grid_fn(n_steps, kind)
+def _cand_fn(n_steps: int, kind: str, policy=None):
+    """Candidate-axis runner: run the grid runner once per candidate
+    period with everything else held fixed — the gap schedules are
+    SHARED across candidates, never tiled or re-transferred.  Scan kinds
+    vmap the candidate axis; the pallas kind serializes it with
+    ``lax.map`` (one pallas_call per candidate — batching a pallas_call
+    under vmap has no kernel-level batching rule to win anything)."""
+    run_grid = _grid_fn(n_steps, kind, policy)
+
+    if kind == "pallas":
+        def run_cands(T2, C, R, D, omega, T_base, gaps):
+            return lax.map(
+                lambda t: run_grid(t, C, R, D, omega, T_base, gaps), T2)
+        return run_cands
 
     def run_cands(T2, C, R, D, omega, T_base, gaps):
         return jax.vmap(run_grid, in_axes=(0,) + (None,) * 6)(
@@ -629,7 +692,7 @@ def _trial_chunk(n_trials: int, capacity: int, ndev: int, cfg) -> int:
 
 
 def _dispatch_explicit(T_arr, flat: ParamGrid, Tb_arr, gaps, n_steps: int,
-                       kind: str, cfg) -> dict:
+                       kind: str, cfg, policy=None) -> dict:
     """Explicit-schedule engine dispatch over a flat grid: the grid axis
     is chunked/sharded by :mod:`.dispatch`, the trials axis streamed in
     memory-bounded blocks; returns numpy ``(B, n_trials)`` per key."""
@@ -642,8 +705,8 @@ def _dispatch_explicit(T_arr, flat: ParamGrid, Tb_arr, gaps, n_steps: int,
     for t0 in range(0, n_trials, tc):
         g = gaps[:, t0:t0 + tc, :]
         parts.append(_dispatch.run(
-            key=("explicit", int(n_steps), kind),
-            build=_grid_fn(int(n_steps), kind),
+            key=("explicit", int(n_steps), _kind_token(kind, policy)),
+            build=_grid_fn(int(n_steps), kind, policy),
             args=(T_arr, flat.C, flat.R, flat.D, flat.omega, Tb_arr, g),
             in_axes=(0,) * 7, out_axes=0, size=B,
             per_point_bytes=8 * min(tc, n_trials) * (cap + 32),
@@ -655,7 +718,7 @@ def _dispatch_explicit(T_arr, flat: ParamGrid, Tb_arr, gaps, n_steps: int,
 
 
 def _sampled_build(proc_fn, cap_sample: int, cap_used: int,
-                   n_steps: int, kind: str):
+                   n_steps: int, kind: str, policy=None):
     """Fused sample-then-simulate chunk kernel (the auto-sampling path).
 
     Point ``i``/trial ``t`` draws its schedule from the folded key
@@ -664,8 +727,24 @@ def _sampled_build(proc_fn, cap_sample: int, cap_used: int,
     bucket's ``cap_used`` — so bucketing, chunking, sharding, and trial
     blocking are all pure performance knobs for a fixed seed.  The
     ``(chunk, trials, cap)`` schedule tensor only ever exists inside this
-    jitted call.
+    jitted call.  The pallas kind samples through the SAME folded keys
+    and then hands the materialized chunk schedule to the blocked
+    kernel, so its draws are bit-identical to the scan kinds'.
     """
+    if kind == "pallas":
+        run_grid = _grid_fn(n_steps, kind, policy)
+
+        def build(T, C, R, D, omega, Tb, mean, idx, t_idx, key, *params):
+            def sample_point(m, i, *pp):
+                kp = jax.random.fold_in(key, i)
+
+                def sample_trial(ti):
+                    return proc_fn(jax.random.fold_in(kp, ti),
+                                   (cap_sample,), m, pp)
+                return jax.vmap(sample_trial)(t_idx)
+            gaps = jax.vmap(sample_point)(mean, idx, *params)
+            return run_grid(T, C, R, D, omega, Tb, gaps[:, :, :cap_used])
+        return build
     kernel = _KERNELS[kind]
 
     def build(T, C, R, D, omega, Tb, mean, idx, t_idx, key, *params):
@@ -738,8 +817,9 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
                           gaps: Optional[np.ndarray] = None,
                           n_steps: Optional[int] = None,
                           process=None,
-                          engine_kind: str = "event",
-                          dispatch=None) -> TrajectoryBatch:
+                          engine_kind: Optional[str] = None,
+                          dispatch=None,
+                          precision=None) -> TrajectoryBatch:
     """Simulate every (grid point x trial) trajectory in a few jitted calls.
 
     ``T`` broadcasts against ``grid.shape``.  ``gaps`` (grid.size, n_trials,
@@ -752,11 +832,17 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
     distribution-agnostic (they only consume gaps).
 
     ``engine_kind`` selects the kernel: ``"event"`` (default, one scan
-    iteration per failure — the fast path) or ``"step"`` (one iteration per
-    phase event — the scalar oracle's bit-level twin, kept as a
-    cross-check).  When the schedule is auto-sampled, grid points are
-    dispatched in power-of-two budget buckets so mixed-mu grids don't pay
-    the worst point's scan length everywhere.
+    iteration per failure — the fast path), ``"pallas"`` (the
+    accelerator-native Pallas port of the event kernel —
+    ``kernels/event_sweep.py``; interpret mode off-TPU, precision per
+    the resolved :class:`~repro.sim.precision.PrecisionPolicy`
+    ``precision``, bit-identical to ``"event"`` under the f64 policy),
+    or ``"step"`` (one iteration per phase event — the scalar oracle's
+    bit-level twin, kept as a cross-check).  None defers to
+    ``$REPRO_ENGINE_KIND`` and then ``"event"``.  When the schedule is
+    auto-sampled, grid points are dispatched in power-of-two budget
+    buckets so mixed-mu grids don't pay the worst point's scan length
+    everywhere.
 
     Every jitted call routes through :mod:`repro.sim.dispatch`
     (``dispatch`` is its :class:`~repro.sim.dispatch.DispatchConfig`; None
@@ -767,9 +853,7 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
     grid-wide capacity, so sharding/chunking/budget knobs — like the
     budget-bucketing knobs above — never change a fixed seed's results.
     """
-    if engine_kind not in _KERNELS:
-        raise ValueError(f"unknown engine_kind {engine_kind!r}; "
-                         f"one of {sorted(_KERNELS)}")
+    engine_kind = resolve_engine_kind(engine_kind)
     flat = grid.ravel()
     T_arr = np.broadcast_to(np.asarray(T, dtype=np.float64),
                             grid.shape).ravel()
@@ -778,6 +862,7 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
     if np.any(T_arr <= (1.0 - flat.omega) * flat.C):
         raise ValueError("period too short: no work progress per period")
     cfg = _dispatch.resolve(dispatch)
+    pol = _engine_policy(engine_kind, cfg, precision)
 
     if gaps is not None:
         # Shared-schedule path (parity / CRN): one budget, grid chunked.
@@ -787,13 +872,13 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
             # The event kernel executes (#failures + 1 completion) steps,
             # and a schedule of F gaps admits at most F failures.
             n_steps = (_scan_len(gaps.shape[-1]) + 1
-                       if engine_kind == "event" else
+                       if engine_kind in _EVENT_LIKE else
                        default_step_budget(T_arr, flat, Tb_arr,
                                            process=process))
         else:
             n_steps = _scan_len(n_steps)
         out = _dispatch_explicit(T_arr, flat, Tb_arr, gaps, int(n_steps),
-                                 engine_kind, cfg)
+                                 engine_kind, cfg, policy=pol)
         return _assemble_batch(out, grid, n_trials)
 
     # Auto-sampled path: per-point budgets, one dispatch per pow2 bucket.
@@ -807,7 +892,7 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
     caps = fail_capacity_points(T_arr, flat, Tb_arr, process=process)
     if n_steps is not None:
         budgets = np.full(flat.size, _scan_len(n_steps), dtype=np.int64)
-    elif engine_kind == "event":
+    elif engine_kind in _EVENT_LIKE:
         budgets = caps + 1
     else:
         budgets = step_budget_points(T_arr, flat, Tb_arr, process=process)
@@ -840,16 +925,16 @@ def simulate_trajectories(T, grid: ParamGrid, T_base: float = 1.0,
             with enable_x64():   # gathering a f64 device array needs x64
                 g = g_full[idx, :, :cap]
             out = _dispatch_explicit(T_arr[idx], sub, Tb_arr[idx], g,
-                                     int(b), engine_kind, cfg)
+                                     int(b), engine_kind, cfg, policy=pol)
             _scatter(acc, out, flat.size, n_trials, idx, slice(None))
             continue
         for t0 in range(0, n_trials, tc):
             t_idx = np.arange(t0, min(t0 + tc, n_trials), dtype=np.uint32)
             out = _dispatch.run(
                 key=("sampled", token, cap_sample, cap, int(b),
-                     engine_kind, len(params_b)),
+                     _kind_token(engine_kind, pol), len(params_b)),
                 build=_sampled_build(proc_fn, cap_sample, cap, int(b),
-                                     engine_kind),
+                                     engine_kind, policy=pol),
                 args=(T_arr[idx], sub.C, sub.R, sub.D, sub.omega,
                       Tb_arr[idx], mean_arr[idx], idx_all[idx], t_idx,
                       key) + tuple(p[idx] for p in params_b),
@@ -872,12 +957,15 @@ def _scatter(acc: dict, out: dict, size: int, n_trials: int, idx,
         acc[k][idx, t_slice] = v
 
 
-def _cand_sampled_build(proc_fn, cap_sample: int, n_steps: int, kind: str):
+def _cand_sampled_build(proc_fn, cap_sample: int, n_steps: int, kind: str,
+                        policy=None):
     """Fused sample-then-candidate-vmap chunk kernel: the schedule is
     drawn once per chunk from the pointwise folded keys and SHARED across
     the candidate axis (``in_axes=None``) — CRN by construction, never
-    tiled, and partition-independent like :func:`_sampled_build`."""
-    run_grid = _grid_fn(n_steps, kind)
+    tiled, and partition-independent like :func:`_sampled_build`.  The
+    pallas kind serializes the candidate axis with ``lax.map``
+    (see :func:`_cand_fn`); the schedule is still drawn once."""
+    run_grid = _grid_fn(n_steps, kind, policy)
 
     def build(T2, C, R, D, omega, Tb, mean, idx, t_idx, key, *params):
         def sample_point(m, i, *pp):
@@ -888,6 +976,9 @@ def _cand_sampled_build(proc_fn, cap_sample: int, n_steps: int, kind: str):
                                m, pp)
             return jax.vmap(sample_trial)(t_idx)
         gaps = jax.vmap(sample_point)(mean, idx, *params)
+        if kind == "pallas":
+            return lax.map(
+                lambda t: run_grid(t, C, R, D, omega, Tb, gaps), T2)
         return jax.vmap(run_grid, in_axes=(0,) + (None,) * 6)(
             T2, C, R, D, omega, Tb, gaps)
     return build
@@ -904,8 +995,9 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
                         n_trials: int = 200, seed: int = 0,
                         gaps: Optional[np.ndarray] = None,
                         n_steps: Optional[int] = None, process=None,
-                        engine_kind: str = "event",
-                        dispatch=None) -> TrajectoryBatch:
+                        engine_kind: Optional[str] = None,
+                        dispatch=None,
+                        precision=None) -> TrajectoryBatch:
     """Simulate M candidate periods against ONE shared set of failure
     schedules (the CRN solvers' hot path).
 
@@ -924,9 +1016,7 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
     where the schedules are replicated instead of split); the dispatch
     knobs never change a fixed seed's results.
     """
-    if engine_kind not in _KERNELS:
-        raise ValueError(f"unknown engine_kind {engine_kind!r}; "
-                         f"one of {sorted(_KERNELS)}")
+    engine_kind = resolve_engine_kind(engine_kind)
     flat = grid.ravel()
     T2 = np.asarray(T_cand, dtype=np.float64)
     M = T2.shape[0]
@@ -938,13 +1028,14 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
     if np.any(T2 <= (1.0 - flat.omega) * flat.C):
         raise ValueError("period too short: no work progress per period")
     cfg = _dispatch.resolve(dispatch)
+    pol = _engine_policy(engine_kind, cfg, precision)
     B = flat.size
     axis = _cand_axis(M, B)
 
     if gaps is None:
         cap = default_fail_capacity(T2, flat, Tb_arr, process=process)
         if n_steps is None:
-            ns = (_scan_len(cap) + 1 if engine_kind == "event" else
+            ns = (_scan_len(cap) + 1 if engine_kind in _EVENT_LIKE else
                   default_step_budget(T2, flat, Tb_arr, process=process))
         else:
             ns = _scan_len(n_steps)
@@ -958,9 +1049,10 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
             gaps = _bulk_schedule(flat, n_trials, cap, seed, process)
         else:
             out = _dispatch_cands(
-                ("cand_sampled", token, cap, int(ns), engine_kind,
-                 len(params_b)),
-                _cand_sampled_build(proc_fn, cap, int(ns), engine_kind),
+                ("cand_sampled", token, cap, int(ns),
+                 _kind_token(engine_kind, pol), len(params_b)),
+                _cand_sampled_build(proc_fn, cap, int(ns), engine_kind,
+                                    policy=pol),
                 T2, flat, Tb_arr, axis, cfg, n_trials, cap,
                 sampler_args=(mean_arr, idx_all, key, params_b))
             return _assemble_batch(out, grid, n_trials, lead=(M,))
@@ -969,13 +1061,13 @@ def simulate_candidates(T_cand, grid: ParamGrid, T_base: float = 1.0,
     n_trials = int(gaps.shape[-2])
     if n_steps is None:
         n_steps = (_scan_len(gaps.shape[-1]) + 1
-                   if engine_kind == "event" else
+                   if engine_kind in _EVENT_LIKE else
                    default_step_budget(T2, flat, Tb_arr, process=process))
     else:
         n_steps = _scan_len(n_steps)
     out = _dispatch_cands(
-        ("cand_explicit", int(n_steps), engine_kind),
-        _cand_fn(int(n_steps), engine_kind),
+        ("cand_explicit", int(n_steps), _kind_token(engine_kind, pol)),
+        _cand_fn(int(n_steps), engine_kind, policy=pol),
         T2, flat, Tb_arr, axis, cfg, n_trials, int(gaps.shape[-1]),
         gaps=gaps)
     return _assemble_batch(out, grid, n_trials, lead=(M,))

@@ -1,0 +1,207 @@
+"""Per-backend precision policy for the sweep/engine stack.
+
+The repo's model/solver subsystems are f64-everywhere by contract
+(reprolint RPL003, docs/contracts.md) — the right default on CPU, where
+x64 is native.  Accelerators are a different trade: GPUs pay 2-64x for
+f64 and TPUs have no native f64 at all, so the accelerator-native paths
+(the Pallas event kernel, the policy-routed model sweeps) compute in f32
+with COMPENSATED accumulation and are gated against the f64 oracle.
+
+:class:`PrecisionPolicy` names one point in that trade:
+
+``f64``
+    Compute dtype float64, plain accumulation.  The oracle, and the
+    default wherever the backend is CPU.  Selecting it explicitly is a
+    bit-exact no-op (tests/test_pallas_engine.py).
+
+``compensated_f32``
+    Compute dtype float32 with Neumaier (two-sum) compensated
+    accumulation for every running sum (the engine's wall/work/io/down/
+    committed accumulators, the model sweep's energy-term sum).  The
+    default on GPU/TPU backends.  Documented tolerances versus the f64
+    oracle (asserted per scenario family by the parity gates):
+
+    * objectives at the served optimum: ``objective_tol`` (1e-6
+      relative) — near an argmin the objective is locally quadratic, so
+      a relative period error ``dT/T`` costs only ``O((dT/T)^2)`` in
+      objective; f32 solvers land the period within ~1e-4, leaving
+      orders of magnitude of headroom.
+    * the argmin itself: ``argmin_rtol`` (1e-2 relative) — a flat-valley
+      bound, NOT f32 resolution: the argmin wanders long before the
+      objective moves (a ``dT/T`` of 1e-2 costs only ``O(1e-4)``
+      relative in objective, and the measured objective error at the
+      f32 argmin is ~1e-8 across the scenario families, so the parity
+      gates re-evaluate the f32 argmin in f64 and hold THAT to
+      ``objective_tol`` — the argmin gate is the loose outer fence).
+
+This module is the ONE place in ``sim/`` where float32 references are
+legal (reprolint RPL003 exempts it); everything else must route through
+a :class:`PrecisionPolicy`.  Policies resolve per call site via
+``sim.dispatch.resolve_precision`` (explicit argument > DispatchConfig
+field > ``$REPRO_PRECISION`` > backend default).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """One named precision trade (see module docstring).
+
+    ``dtype`` is a dtype NAME (hashable — policies ride in jit/dispatch
+    cache keys); ``compensated`` turns every policy-routed running sum
+    into a Neumaier compensated sum; ``objective_tol``/``argmin_rtol``
+    are the documented parity tolerances versus the f64 oracle (0.0 for
+    the oracle itself).  The advisor folds ``objective_tol`` into its
+    certified degradation bound, so serving under a reduced-precision
+    policy tightens certification instead of silently eroding it.
+    """
+
+    name: str
+    dtype: str
+    compensated: bool
+    objective_tol: float
+    argmin_rtol: float
+
+    @property
+    def exact(self) -> bool:
+        """True for the f64 oracle policy (plain accumulation)."""
+        return self.dtype == "float64" and not self.compensated
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def cast(self, x):
+        """``x`` as a jax array of the policy's compute dtype."""
+        return jnp.asarray(x, dtype=self.jnp_dtype())
+
+
+F64 = PrecisionPolicy(name="f64", dtype="float64", compensated=False,
+                      objective_tol=0.0, argmin_rtol=0.0)
+COMPENSATED_F32 = PrecisionPolicy(name="compensated_f32", dtype="float32",
+                                  compensated=True, objective_tol=1e-6,
+                                  argmin_rtol=1e-2)
+
+#: registry of named policies (``resolve`` accepts these names).
+POLICIES = {p.name: p for p in (F64, COMPENSATED_F32)}
+
+
+def default_policy(platform: str | None = None) -> PrecisionPolicy:
+    """The backend's default policy: f64 on CPU, compensated f32 on
+    accelerators (``platform`` = a jax platform name; None = the
+    process default backend)."""
+    plat = platform if platform is not None else jax.default_backend()
+    return F64 if plat == "cpu" else COMPENSATED_F32
+
+
+def resolve(policy) -> PrecisionPolicy:
+    """Coerce ``policy`` (None / name / :class:`PrecisionPolicy`) to a
+    policy; None means the current default backend's policy."""
+    if policy is None:
+        return default_policy()
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown precision policy {policy!r}; "
+                f"one of {sorted(POLICIES)}") from None
+    if isinstance(policy, PrecisionPolicy):
+        return policy
+    raise TypeError(f"expected a PrecisionPolicy, name, or None; "
+                    f"got {type(policy).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Compensated accumulation (Neumaier / two-sum)
+# ---------------------------------------------------------------------------
+
+def two_sum(a, b):
+    """Knuth's exact two-sum: ``(s, err)`` with ``a + b == s + err``
+    exactly in the working precision (no magnitude ordering assumed).
+    XLA preserves IEEE semantics (no reassociation), so the error term
+    survives compilation."""
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def comp_add(s, c, x):
+    """One Neumaier step: add ``x`` to the compensated pair ``(s, c)``.
+
+    The invariant is ``true_sum ~= s + c`` — read the corrected value
+    with ``s + c`` (or keep the pair and keep adding).  Unlike classic
+    Kahan the compensation is a plain accumulator, so applying a
+    ``where``-select to both members of the pair preserves the invariant
+    lane-by-lane (what the engine's done-lane masking needs).
+    """
+    s2, err = two_sum(s, x)
+    return s2, c + err
+
+
+def compensated_sum(terms):
+    """Neumaier sum of a sequence of (broadcast-compatible) arrays."""
+    terms = list(terms)
+    s = terms[0]
+    c = jnp.zeros_like(s)
+    for t in terms[1:]:
+        s, c = comp_add(s, c, t)
+    return s + c
+
+
+# ---------------------------------------------------------------------------
+# Trace-time policy context
+# ---------------------------------------------------------------------------
+#
+# The batched model sweeps share one algebra (sim/sweep.py) between the
+# f64 oracle and the reduced-precision policies; the policy build wraps
+# the traced core in ``trace_policy`` so policy-aware reductions
+# (``psum``) pick the compensated form WITHOUT threading a policy
+# argument through every closed-form helper.  The context only matters
+# at trace time (jit tracing runs the Python body synchronously);
+# compiled programs bake the choice in, and the dispatch runner cache
+# keys include the policy name so programs never cross policies.
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_precision_policy", default=F64)
+
+
+def active_policy() -> PrecisionPolicy:
+    """The policy in effect for the current (trace) context."""
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def trace_policy(policy: PrecisionPolicy):
+    """Set the active policy for the duration of a trace."""
+    token = _ACTIVE.set(policy)
+    try:
+        yield policy
+    finally:
+        _ACTIVE.reset(token)
+
+
+def psum(terms):
+    """Policy-aware sum of a term sequence.
+
+    Under the f64 oracle (the default context) this is the plain
+    left-associated chain ``t0 + t1 + ...`` — bit-identical to writing
+    the ``+`` chain inline, so wrapping an existing sum is a no-op.
+    Under a compensated policy it is a Neumaier sum.  Works on numpy
+    operands too (the serve certificate sweeps evaluate the same
+    closed forms eagerly on host arrays).
+    """
+    terms = list(terms)
+    if _ACTIVE.get().compensated:
+        return compensated_sum(terms)
+    s = terms[0]
+    for t in terms[1:]:
+        s = s + t
+    return s

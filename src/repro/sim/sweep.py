@@ -20,6 +20,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -30,6 +31,7 @@ except ImportError:
 
 from ..core.params import PowerParams
 from . import dispatch as _dispatch
+from . import precision as _precision
 from . import scenarios
 from .scenarios import MultilevelParamGrid, ParamGrid
 
@@ -85,8 +87,11 @@ def energy_final_batched(T, p, T_base=1.0):
     T_cal = T_base + nf * _re_exec(T, p)
     T_io = T_base * C / (T - (1.0 - omega) * C) + nf * _io_per_failure(T, p)
     T_down = nf * p["D"]
-    return (T_cal * p["P_cal"] + T_io * p["P_io"]
-            + T_down * p["P_down"] + Tf * p["P_static"])
+    # Policy-aware sum: the plain left-associated chain under the f64
+    # oracle (bit-identical to inlining the +s), Neumaier-compensated
+    # under a reduced-precision policy (sim/precision.py).
+    return _precision.psum((T_cal * p["P_cal"], T_io * p["P_io"],
+                            T_down * p["P_down"], Tf * p["P_static"]))
 
 
 def _bracket(p):
@@ -234,8 +239,8 @@ def _msk_energy(T, p0, T_base=1.0):
     T_cal = T_base + nf * (T - 2.0 * C) / 2.0
     T_io = T_base * C / (T - C) + nf * (R + C)
     T_down = nf * p0["D"]
-    return (T_cal * p0["P_cal"] + T_io * p0["P_io"]
-            + T_down * p0["P_down"] + Tf * p0["P_static"])
+    return _precision.psum((T_cal * p0["P_cal"], T_io * p0["P_io"],
+                            T_down * p0["P_down"], Tf * p0["P_static"]))
 
 
 def _msk_setup(p):
@@ -344,8 +349,28 @@ def _evaluate_core(P, T_base):
                       valid.astype(C.dtype)])
 
 
+def _policy_build(core, policy):
+    """Policy-routed variant of a stacked model core: inputs cast to the
+    policy's compute dtype, the trace runs under the policy context (so
+    the energy-term sums go through ``precision.psum`` compensated), and
+    outputs are cast back to f64 for the host-side layers.  Only built
+    for non-exact policies — the f64 oracle keeps the original build and
+    its bit-identical compiled program."""
+    def build(*args):
+        with _precision.trace_policy(policy):
+            out = core(*(policy.cast(a) for a in args))
+        return jax.tree.map(lambda a: jnp.asarray(a, jnp.float64), out)
+    return build
+
+
+def _policy_key(key: tuple, policy) -> tuple:
+    """Runner-cache key for a policy-routed build: the f64 oracle keeps
+    its historical key; other policies never share a compiled program."""
+    return key if policy is None or policy.exact else key + (policy.name,)
+
+
 def evaluate_grid(grid: ParamGrid, T_base: float = 1.0,
-                  dispatch=None) -> GridResult:
+                  dispatch=None, precision=None) -> GridResult:
     """Periods + time/energy ratios for every grid point.
 
     Routed through :mod:`repro.sim.dispatch`: the grid axis is sharded
@@ -354,11 +379,21 @@ def evaluate_grid(grid: ParamGrid, T_base: float = 1.0,
     None = environment defaults), so a 10^6-point dense grid streams in
     bounded memory.  The computation is elementwise per grid point —
     chunk size and shard count are bit-exact no-ops on the results.
+
+    ``precision`` selects the :class:`~repro.sim.precision
+    .PrecisionPolicy` (a policy, a name, or None = config/env/backend
+    default — f64 on CPU): the f64 oracle path is untouched; a reduced-
+    precision policy computes in its dtype with compensated energy sums
+    and lands within the policy's documented tolerance of the oracle
+    (tests/test_pallas_engine.py parity gates).
     """
+    pol = _dispatch.resolve_precision(dispatch, precision)
     flat = grid.ravel()
     P = np.stack([getattr(flat, f) for f in _FIELD_ORDER])
     raw = _dispatch.run(
-        key=("evaluate_core",), build=_evaluate_core,
+        key=_policy_key(("evaluate_core",), pol),
+        build=(_evaluate_core if pol.exact
+               else _policy_build(_evaluate_core, pol)),
         args=(P, np.float64(T_base)), in_axes=(1, None), out_axes=1,
         size=flat.size, per_point_bytes=_MODEL_BYTES_PER_POINT,
         config=dispatch, quantum=_MODEL_PAD_QUANTUM)
@@ -453,10 +488,10 @@ def ml_energy_final_batched(T, m, p, T_base=1.0):
         + q * (m - 1.0) * C1 / 2.0
     io2_pf = C2**2 / (2.0 * m * T) + q * R2
     T_down = nf * (D1 + q * (D2 - D1))
-    return (T_cal * p["P_cal"]
-            + (ck_io1 + nf * io1_pf) * p["P_io1"]
-            + (ck_io2 + nf * io2_pf) * p["P_io2"]
-            + T_down * p["P_down"] + Tf * p["P_static"])
+    return _precision.psum((T_cal * p["P_cal"],
+                            (ck_io1 + nf * io1_pf) * p["P_io1"],
+                            (ck_io2 + nf * io2_pf) * p["P_io2"],
+                            T_down * p["P_down"], Tf * p["P_static"]))
 
 
 def _ml_bracket(p, m):
@@ -719,7 +754,8 @@ def _evaluate_ml_core(P, T_base, m_values, m_max=None):
 def evaluate_multilevel_grid(grid: MultilevelParamGrid,
                              m_values: Sequence[int] = tuple(range(1, 13)),
                              T_base: float = 1.0,
-                             dispatch=None, m_max=None) -> MultilevelGridResult:
+                             dispatch=None, m_max=None,
+                             precision=None) -> MultilevelGridResult:
     """Jointly optimal (T, m) + ratios for every grid point.
 
     ``m_values`` is the candidate set of deep-checkpoint cadences (static:
@@ -734,16 +770,23 @@ def evaluate_multilevel_grid(grid: MultilevelParamGrid,
     call over the union candidate set instead of one compiled program per
     distinct budget.  ``m_max=None`` keeps the unmasked program and its
     results bit-for-bit.
+
+    ``precision`` routes the sweep through a
+    :class:`~repro.sim.precision.PrecisionPolicy` exactly like
+    :func:`evaluate_grid` (f64 oracle untouched; reduced-precision
+    within documented tolerance).
     """
+    pol = _dispatch.resolve_precision(dispatch, precision)
     m_values = tuple(int(m) for m in m_values)
     if not m_values or min(m_values) < 1:
         raise ValueError(f"m_values must be positive ints, got {m_values}")
     flat = grid.ravel()
     P = np.stack([getattr(flat, f) for f in _ML_FIELD_ORDER])
     if m_max is None:
+        core = lambda P_, tb: _evaluate_ml_core(P_, tb, m_values)
         scalars, by_m = _dispatch.run(
-            key=("evaluate_ml_core", m_values),
-            build=lambda P_, tb: _evaluate_ml_core(P_, tb, m_values),
+            key=_policy_key(("evaluate_ml_core", m_values), pol),
+            build=core if pol.exact else _policy_build(core, pol),
             args=(P, np.float64(T_base)), in_axes=(1, None), out_axes=(1, 2),
             size=flat.size,
             per_point_bytes=_ML_BYTES_PER_POINT_M * len(m_values),
@@ -751,10 +794,10 @@ def evaluate_multilevel_grid(grid: MultilevelParamGrid,
     else:
         mm = np.broadcast_to(np.asarray(m_max, dtype=np.float64),
                              grid.shape).ravel()
+        core = lambda P_, tb, mm_: _evaluate_ml_core(P_, tb, m_values, mm_)
         scalars, by_m = _dispatch.run(
-            key=("evaluate_ml_core_masked", m_values),
-            build=lambda P_, tb, mm_: _evaluate_ml_core(P_, tb, m_values,
-                                                        mm_),
+            key=_policy_key(("evaluate_ml_core_masked", m_values), pol),
+            build=core if pol.exact else _policy_build(core, pol),
             args=(P, np.float64(T_base), mm), in_axes=(1, None, 0),
             out_axes=(1, 2), size=flat.size,
             per_point_bytes=_ML_BYTES_PER_POINT_M * len(m_values),
@@ -836,7 +879,7 @@ def _flat_tbase(T_base, grid: ParamGrid) -> np.ndarray:
 
 
 def _mc_eval(T_cand, flat: ParamGrid, T_base, gaps, n_steps=None,
-             engine_kind: str = "event", dispatch=None):
+             engine_kind: Optional[str] = None, dispatch=None):
     """Engine means over trials for candidate periods ``T_cand`` of shape
     ``(M, B)`` against the flat grid (B,), in ONE candidate-vmapped engine
     call (the gap schedules — the big arrays — are shared across the
@@ -865,7 +908,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
                              T_base: Optional[float] = None,
                              n_trials: int = 160, seed: int = 0,
                              n_candidates: int = 13, rounds: int = 3,
-                             engine_kind: str = "event",
+                             engine_kind: Optional[str] = None,
                              dispatch=None) -> RobustnessResult:
     """MC robustness evaluation of a whole grid under ``process``.
 
@@ -881,6 +924,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
     from ..core.failures import as_process
     from . import engine as _engine
     process = as_process(process)
+    engine_kind = _engine.resolve_engine_kind(engine_kind)
     res = evaluate_grid(grid, T_base=1.0, dispatch=dispatch)
     if not res.valid.all():
         raise ValueError("robustness sweep: grid contains degenerate points "
@@ -907,7 +951,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
         0.0, 1.0, 9)[:, None]
     cap = _engine.default_fail_capacity(probes, flat, T_base,
                                        process=process)
-    n_steps = (None if engine_kind == "event" else
+    n_steps = (None if engine_kind in _engine._EVENT_LIKE else
                _engine.default_step_budget(probes, flat, T_base,
                                            process=process))
     gaps = _engine.presample_gaps(flat, n_trials, cap, seed=seed,
@@ -973,7 +1017,7 @@ def evaluate_robustness_grid(grid: ParamGrid, process,
 
 def evaluate_periods_grid(grid: ParamGrid, process, periods,
                           T_base, n_trials: int = 160, seed: int = 0,
-                          engine_kind: str = "event", dispatch=None):
+                          engine_kind: Optional[str] = None, dispatch=None):
     """MC means at given candidate periods under ``process`` (CRN-shared
     across candidates, independent across seeds).
 
@@ -985,12 +1029,13 @@ def evaluate_periods_grid(grid: ParamGrid, process, periods,
     from ..core.failures import as_process
     from . import engine as _engine
     process = as_process(process)
+    engine_kind = _engine.resolve_engine_kind(engine_kind)
     flat = grid.ravel()
     B = flat.size
     P = np.asarray(periods, dtype=np.float64).reshape((-1, B))
     T_base = _flat_tbase(T_base, grid)
     cap = _engine.default_fail_capacity(P, flat, T_base, process=process)
-    n_steps = (None if engine_kind == "event" else
+    n_steps = (None if engine_kind in _engine._EVENT_LIKE else
                _engine.default_step_budget(P, flat, T_base,
                                            process=process))
     gaps = _engine.presample_gaps(flat, n_trials, cap, seed=seed,

@@ -1,0 +1,17 @@
+"""RPL003 precision-allowance negative fixture: the same float32
+references linted under the PrecisionPolicy module path
+(src/repro/sim/precision.py) are clean — that module is the one legal
+home for reduced-precision dtypes.  The explicit-dtype constructor check
+still applies there, so the constructors below spell their dtypes."""
+import jax.numpy as jnp
+
+
+POLICY_DTYPE = "float32"
+
+
+def cast(x):
+    return jnp.asarray(x, jnp.float32)
+
+
+def zero_like_policy(n):
+    return jnp.zeros(n, dtype=jnp.float32)

@@ -1,0 +1,11 @@
+"""RPL003 precision-allowance positive fixture: float32 references that
+are legal ONLY in the PrecisionPolicy module — linted under a synthetic
+sim/ path that is NOT the policy module, every one must flag."""
+import jax.numpy as jnp
+
+
+POLICY_DTYPE = "float32"
+
+
+def accumulate(x):
+    return jnp.asarray(x, jnp.float32)

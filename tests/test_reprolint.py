@@ -114,6 +114,35 @@ class TestRPL003:
         info = _info("rpl003_neg.py", rel="src/repro/core/fixture.py")
         assert rule_rpl003(_Ctx([info])) == []
 
+    def test_precision_module_allowance(self):
+        """float32 is legal in sim/ ONLY under the PrecisionPolicy module."""
+        # Same content, non-policy sim/ path: both references flag.
+        info = _info("rpl003_precision_pos.py",
+                     rel="src/repro/sim/fixture.py")
+        diags = rule_rpl003(_Ctx([info]))
+        assert _codes(diags) == ["RPL003"] * 2
+        assert any("PrecisionPolicy" in d.message for d in diags)
+
+    def test_precision_module_is_clean(self):
+        info = _info("rpl003_precision_neg.py",
+                     rel="src/repro/sim/precision.py")
+        assert rule_rpl003(_Ctx([info])) == []
+
+    def test_precision_module_still_needs_explicit_dtypes(self):
+        """The allowance waives the float32 checks, not the
+        explicit-dtype constructor check."""
+        info = _info("rpl003_pos.py", rel="src/repro/sim/precision.py")
+        diags = rule_rpl003(_Ctx([info]))
+        # zeros/arange/asarray without dtype still flag; the jnp.float32
+        # attribute and the "float32" string are now legal.
+        assert _codes(diags) == ["RPL003"] * 3
+
+    def test_real_precision_module_is_clean(self):
+        src = ROOT / "src/repro/sim/precision.py"
+        info = ModuleInfo(src, "src/repro/sim/precision.py",
+                          src.read_text())
+        assert rule_rpl003(_Ctx([info])) == []
+
 
 # ---------------------------------------------------------------------------
 # RPL004 — host sync on jit-reachable paths
